@@ -1,0 +1,37 @@
+"""Roofline summary bench: renders §Roofline aggregates from dry-run JSONs.
+
+Reads ``results/dryrun_final2`` (or ``--dir``); skips gracefully when the
+dry-run hasn't been executed in this checkout.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DEFAULT_DIR = "results/dryrun_final2"
+
+
+def bench_roofline_summary(quick: bool = True,
+                           dirname: str = DEFAULT_DIR) -> List[Dict]:
+    if not os.path.isdir(dirname):
+        return [{"note": f"{dirname} missing - run repro.launch.dryrun first"}]
+    rows = []
+    for p in sorted(glob.glob(f"{dirname}/*__sp.json")):
+        r = json.load(open(p))
+        if r.get("status") != "OK":
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": f"{rf['compute_s']:.2e}",
+            "memory_s": f"{rf['memory_s']:.2e}",
+            "collective_s": f"{rf['collective_s']:.2e}",
+            "dominant": rf["dominant"],
+            "useful_flops": (round(r["useful_flops_frac"], 2)
+                             if r.get("useful_flops_frac") else None),
+            "mem_adj_GB": round(r["memory"]["total_adjusted_tpu"] / 1e9, 2),
+            "fits": r["memory"]["fits_16gb"],
+        })
+    return rows

@@ -1,0 +1,112 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) followed by
+the full result tables; writes results/benchmarks.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+from . import paged_kernel, roofline_summary, tlb_suite
+
+
+def _fmt_table(rows: List[Dict[str, Any]]) -> str:
+    if not rows:
+        return "(empty)"
+    cols = list(rows[0].keys())
+    w = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+         for c in cols}
+    out = ["  ".join(str(c).ljust(w[c]) for c in cols)]
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(w[c]) for c in cols))
+    return "\n".join(out)
+
+
+BENCHES: List = [
+    # (name, paper artifact, fn)
+    ("tlb_synthetic", "Table 4 (synth) / Fig 1", tlb_suite.bench_synthetic),
+    ("tlb_demand", "Figure 8 / Table 4 (real)", tlb_suite.bench_demand),
+    ("tlb_coverage", "Table 5", tlb_suite.bench_coverage),
+    ("tlb_predictor", "Table 6", tlb_suite.bench_predictor),
+    ("tlb_k_sweep", "Figure 9", tlb_suite.bench_k_sweep),
+    ("tlb_cpi", "Figures 10/11", tlb_suite.bench_cpi),
+    ("dma_fragmentation", "TPU adaptation: descriptor model",
+     paged_kernel.bench_dma_vs_fragmentation),
+    ("dma_k_ablation", "TPU adaptation: |K| ablation",
+     paged_kernel.bench_kernel_classes_ablation),
+    ("engine_end_to_end", "TPU adaptation: serving engine",
+     paged_kernel.bench_engine_end_to_end),
+    ("roofline_summary", "EXPERIMENTS §Roofline (from dry-run artifacts)",
+     roofline_summary.bench_roofline_summary),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 16 benchmarks, long traces")
+    ap.add_argument("--only", help="comma list of bench names")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    results: Dict[str, Any] = {}
+    csv_lines = ["name,us_per_call,derived"]
+    for name, artifact, fn in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        kwargs = {}
+        if "quick" in fn.__code__.co_varnames:
+            kwargs["quick"] = not args.full
+        rows = fn(**kwargs)
+        dt = time.time() - t0
+        results[name] = {"artifact": artifact, "rows": rows,
+                         "wall_s": round(dt, 1)}
+        derived = ""
+        try:
+            if name == "tlb_synthetic":
+                mixed = next(r for r in rows if r["mapping"] == "mixed")
+                derived = (f"mixed:|K|=3 rel={mixed['|K|=3']};"
+                           f"anchor rel={mixed['Anchor-Static']}")
+            elif name == "tlb_demand":
+                import numpy as np
+                ks = [r["|K|=2"] for r in rows]
+                an = [r["Anchor-Static"] for r in rows]
+                derived = (f"mean |K|=2 rel={np.mean(ks):.3f};"
+                           f"mean anchor rel={np.mean(an):.3f};"
+                           f"reduction vs anchor="
+                           f"{1 - np.mean(ks)/max(np.mean(an),1e-9):.3f}")
+            elif name == "tlb_predictor":
+                import numpy as np
+                derived = "mean acc |K|=2 = {:.3f}".format(
+                    np.mean([r["|K|=2"] for r in rows]))
+            elif name == "dma_fragmentation":
+                mid = rows[len(rows) // 2]
+                derived = (f"frag=0.5: desc_red={mid['desc_reduction']},"
+                           f"speedup={mid['speedup']}")
+            elif name == "engine_end_to_end":
+                derived = f"buddy desc_red={rows[0]['desc_reduction']}"
+        except Exception as e:    # derived metrics must never kill the run
+            derived = f"derive-error:{e}"
+        n_calls = max(len(rows), 1)
+        csv_lines.append(f"{name},{dt * 1e6 / n_calls:.0f},{derived}")
+        print(f"\n=== {name}  [{artifact}]  ({dt:.1f}s) ===")
+        print(_fmt_table(rows))
+
+    print("\n--- CSV (name,us_per_call,derived) ---")
+    for line in csv_lines:
+        print(line)
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("\nwrote results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

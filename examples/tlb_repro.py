@@ -1,0 +1,53 @@
+"""Reproduce the paper's main comparison (Figure 8 / Table 4) end to end.
+
+Runs the full method suite (Base, THP, RMM, COLT, Cluster, Anchor-Static,
+|K|=2/3/4 Aligned) over demand-paged and synthetic mappings and prints the
+relative-miss tables next to the paper's published numbers.
+
+Run:  PYTHONPATH=src python examples/tlb_repro.py [--quick]
+"""
+import argparse
+
+from benchmarks.tlb_suite import bench_demand, bench_synthetic
+
+PAPER_TABLE4 = {
+    # mapping: {method: relative misses}  (paper Table 4)
+    "small":  {"THP": 1.00, "RMM": 0.992, "COLT": 0.605, "Cluster": 0.55,
+               "Anchor-Static": 0.453, "|K|=2": 0.359, "|K|=3": 0.334,
+               "|K|=4": 0.312},
+    "medium": {"THP": 1.00, "RMM": 0.993, "COLT": 0.561, "Cluster": 0.523,
+               "Anchor-Static": 0.334, "|K|=2": 0.25, "|K|=3": 0.204,
+               "|K|=4": 0.174},
+    "large":  {"THP": 0.456, "RMM": 0.451, "COLT": 0.34, "Cluster": 0.382,
+               "Anchor-Static": 0.103, "|K|=2": 0.064, "|K|=3": 0.043,
+               "|K|=4": 0.039},
+    "mixed":  {"THP": 0.812, "RMM": 0.724, "COLT": 0.563, "Cluster": 0.532,
+               "Anchor-Static": 0.605, "|K|=2": 0.25, "|K|=3": 0.132,
+               "|K|=4": 0.056},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    n = 1 << 18 if args.quick else 1 << 19
+    tl = 100_000 if args.quick else 200_000
+
+    print("=== Table 4, synthetic mappings (ours vs paper) ===")
+    rows = bench_synthetic(trace_len=tl, n_pages=n)
+    for r in rows:
+        kind = r["mapping"]
+        print(f"\n[{kind}]")
+        for meth, paper in PAPER_TABLE4[kind].items():
+            ours = r.get(meth)
+            print(f"  {meth:14s} ours={ours:6.3f}   paper={paper:6.3f}")
+
+    print("\n=== Figure 8, demand mapping (benchmark analogues) ===")
+    for r in bench_demand(trace_len=tl):
+        print(f"  {r['benchmark']:12s} " + "  ".join(
+            f"{k}={v}" for k, v in r.items() if k != "benchmark"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python scripts/make_experiments_tables.py \
+        results/dryrun_final2 [results/dryrun_baseline]
+"""
+import glob
+import json
+import sys
+
+
+def load(d):
+    out = {}
+    for p in sorted(glob.glob(f"{d}/*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(v):
+    if v == 0:
+        return "0"
+    if v < 1e-3:
+        return f"{v*1e6:.0f}µs"
+    if v < 1:
+        return f"{v*1e3:.1f}ms"
+    return f"{v:.2f}s"
+
+
+def main():
+    final = load(sys.argv[1])
+    base = load(sys.argv[2]) if len(sys.argv) > 2 else {}
+
+    print("### §Dry-run — per-cell compile + memory (all 40 cells × 2 meshes)\n")
+    print("| arch | shape | mesh | status | mem/dev raw | mem/dev TPU-adj | fits 16GB | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(final):
+        r = final[key]
+        a, s, m = key
+        if r["status"] == "SKIP":
+            print(f"| {a} | {s} | {m} | SKIP — {r['reason']} | | | | |")
+            continue
+        mem = r["memory"]
+        print(f"| {a} | {s} | {m} | OK | {mem['total_per_device']/1e9:.2f}GB "
+              f"| {mem['total_adjusted_tpu']/1e9:.2f}GB "
+              f"| {'✓' if mem['fits_16gb'] else '✗'} "
+              f"| {r['time']['compile_s']}s |")
+
+    print("\n### §Roofline — single-pod (16×16) terms per step\n")
+    print("| arch | shape | compute | memory (analytic) | collective | dominant | "
+          "MODEL_FLOPS/HLO | vs baseline coll |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(final):
+        a, s, m = key
+        if m != "16x16":
+            continue
+        r = final[key]
+        if r["status"] != "OK":
+            continue
+        rf = r["roofline"]
+        uf = r.get("useful_flops_frac")
+        delta = ""
+        b = base.get(key)
+        if b and b.get("status") == "OK":
+            c0 = b["roofline"]["collective_s"]
+            c1 = rf["collective_s"]
+            if c0 > 0:
+                delta = f"{(c1/c0 - 1)*100:+.0f}%"
+        print(f"| {a} | {s} | {fmt_s(rf['compute_s'])} "
+              f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+              f"| {rf['dominant']} | {uf:.2f} | {delta} |"
+              if uf is not None else "")
+
+    print("\n### Multi-pod (2×16×16) — collective scaling\n")
+    print("| arch | shape | coll sp | coll mp | mp/sp |")
+    print("|---|---|---|---|---|")
+    for key in sorted(final):
+        a, s, m = key
+        if m != "16x16":
+            continue
+        r_sp = final[key]
+        r_mp = final.get((a, s, "2x16x16"))
+        if (r_sp.get("status") != "OK" or not r_mp
+                or r_mp.get("status") != "OK"):
+            continue
+        c_sp = r_sp["roofline"]["collective_s"]
+        c_mp = r_mp["roofline"]["collective_s"]
+        print(f"| {a} | {s} | {fmt_s(c_sp)} | {fmt_s(c_mp)} "
+              f"| {c_mp/max(c_sp,1e-12):.2f}× |")
+
+
+if __name__ == "__main__":
+    main()

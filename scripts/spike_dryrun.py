@@ -1,0 +1,127 @@
+"""Spike: verify 512 fake CPU devices, mesh creation, AOT lower/compile,
+cost_analysis / memory_analysis availability, compile wall-time."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import time
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+print("n_devices:", jax.device_count())
+
+t0 = time.time()
+mesh_mp = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("multi-pod mesh ok", time.time() - t0)
+
+# Single-pod mesh must use a subset of devices.
+devs = jax.devices()[:256]
+import numpy as np
+mesh_sp = jax.sharding.Mesh(np.array(devs).reshape(16, 16), ("data", "model"))
+print("single-pod mesh ok")
+
+D, F, V, L = 1024, 4096, 32000, 4
+B, S = 64, 1024
+
+
+def init_params():
+    return {
+        "emb": jnp.zeros((V, D), jnp.bfloat16),
+        "layers": {
+            "wqkv": jnp.zeros((L, D, 3 * D), jnp.bfloat16),
+            "wo": jnp.zeros((L, D, D), jnp.bfloat16),
+            "w1": jnp.zeros((L, D, F), jnp.bfloat16),
+            "w2": jnp.zeros((L, F, D), jnp.bfloat16),
+        },
+        "out": jnp.zeros((D, V), jnp.bfloat16),
+    }
+
+
+def fwd(params, tokens):
+    x = params["emb"][tokens]
+
+    def layer(x, w):
+        qkv = jnp.einsum("bsd,de->bse", x, w["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        nh = 8
+        q = q.reshape(B, S, nh, D // nh)
+        k = k.reshape(B, S, nh, D // nh)
+        v = v.reshape(B, S, nh, D // nh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(D // nh)
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        att = jnp.where(mask, att, -1e9)
+        att = jax.nn.softmax(att.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, D)
+        x = x + jnp.einsum("bsd,de->bse", o, w["wo"])
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w["w1"]))
+        x = x + jnp.einsum("bsf,fd->bsd", h, w["w2"])
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["layers"])
+    return jnp.einsum("bsd,dv->bsv", x, params["out"])
+
+
+def loss_fn(params, tokens, labels):
+    logits = fwd(params, tokens).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def train_step(params, tokens, labels):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+    params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    return params, loss
+
+
+def run(mesh, tag):
+    axes = mesh.axis_names
+    data_ax = tuple(a for a in axes if a in ("pod", "data"))
+    data_ax = data_ax if len(data_ax) > 1 else data_ax[0]
+    pspec_params = {
+        "emb": P("model", None),
+        "layers": {
+            "wqkv": P(None, data_ax, "model"),
+            "wo": P(None, "model", data_ax),
+            "w1": P(None, data_ax, "model"),
+            "w2": P(None, "model", data_ax),
+        },
+        "out": P(None, "model"),
+    }
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_params,
+                             is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(mesh, P(data_ax, None))
+    params_s = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        init_params(), shardings)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_sh)
+    lab = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=tok_sh)
+
+    t0 = time.time()
+    lowered = jax.jit(train_step).lower(params_s, tok, lab)
+    t1 = time.time()
+    print(f"[{tag}] lower: {t1-t0:.1f}s")
+    compiled = lowered.compile()
+    t2 = time.time()
+    print(f"[{tag}] compile: {t2-t1:.1f}s")
+    ca = compiled.cost_analysis()
+    print(f"[{tag}] cost_analysis type={type(ca)}")
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    if hasattr(ca, "items"):
+        items = {k: v for k, v in ca.items() if "flops" in k or "bytes" in k}
+        print(f"[{tag}] cost keys sample:", dict(list(items.items())[:8]))
+    ma = compiled.memory_analysis()
+    print(f"[{tag}] memory_analysis:", ma)
+    txt = compiled.as_text()
+    import re
+    colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt)
+    from collections import Counter
+    print(f"[{tag}] collectives:", Counter(colls))
+    print(f"[{tag}] hlo len: {len(txt)}")
+
+
+with mesh_sp:
+    run(mesh_sp, "single-pod-256")
+with mesh_mp:
+    run(mesh_mp, "multi-pod-512")
+print("SPIKE OK")

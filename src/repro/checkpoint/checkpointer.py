@@ -1,0 +1,154 @@
+"""Async, atomic, reshard-on-restore checkpointing.
+
+Layout (one directory per step):
+
+    <root>/step_000040.tmp-<nonce>/   # written here first
+        manifest.json                  # tree-def, shapes, dtypes, extras
+        leaf_00000.npy ...             # one file per pytree leaf
+    <root>/step_000040/                # atomic rename when complete
+
+* **atomic** — readers never see a partial checkpoint (tmp dir + rename);
+  a crash mid-save leaves only a .tmp dir that is garbage-collected.
+* **async**  — ``save`` returns immediately; the serialization thread
+  device_gets and writes in the background (``wait()`` joins).
+* **elastic restore** — leaves are restored with ``jax.device_put`` against
+  the *target* mesh's shardings, so a checkpoint written on a 16x16 mesh
+  restores onto 2x16x16 (or 4x8, or 1 device) unchanged: this is the
+  node-failure / elastic-rescale path.
+* keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._gc_tmp()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree,
+             extras: Optional[Dict[str, Any]] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        # device_get on the caller thread (cheap views for CPU arrays); the
+        # file I/O happens on the background thread.
+        leaves, treedef = _leaf_paths(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        import pickle
+        manifest = {
+            "step": step,
+            "treedef": pickle.dumps(treedef).hex(),
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in host_leaves],
+            "extras": extras or {},
+        }
+
+        def work():
+            tmp = os.path.join(self.root,
+                               f"step_{step:08d}.tmp-{uuid.uuid4().hex[:8]}")
+            os.makedirs(tmp, exist_ok=True)
+            for i, arr in enumerate(host_leaves):
+                if arr.dtype.kind not in "biufc":  # ml_dtypes (bf16, fp8, …)
+                    arr = arr.view(np.uint8)
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr,
+                        allow_pickle=False)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = os.path.join(self.root, f"step_{step:08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and ".tmp" not in name:
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                target: Optional[PyTree] = None,
+                shardings: Optional[PyTree] = None
+                ) -> Tuple[PyTree, Dict[str, Any]]:
+        """Load a checkpoint.
+
+        ``target``: a pytree with the same structure (e.g. abstract params)
+        used for tree reconstruction; if omitted, the saved treedef is used.
+        ``shardings``: optional sharding pytree — leaves are device_put to it
+        (reshard-on-restore, works across different meshes/device counts).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            try:
+                want = np.dtype(meta["dtype"])
+            except TypeError:
+                want = np.dtype(getattr(ml_dtypes, meta["dtype"]))
+            if arr.dtype != want:
+                arr = arr.view(want).reshape(meta["shape"])
+            leaves.append(arr)
+        if target is not None:
+            treedef = jax.tree.structure(target)
+        else:
+            import pickle
+            treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+        return tree, manifest["extras"]
+
+    # ------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = sorted(s for s in (
+            int(n.split("_")[1]) for n in os.listdir(self.root)
+            if n.startswith("step_") and ".tmp" not in n))
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for name in os.listdir(self.root):
+            if ".tmp-" in name:
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)

@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution — K-bit Aligned TLB coalescing.
+
+Faithful reproduction layer:
+  * :mod:`repro.core.page_table`   — contiguity-annotated page tables (Def. 1)
+  * :mod:`repro.core.aligned`      — K-bit aligned entries, Algorithms 1-2
+  * :mod:`repro.core.determine_k`  — Algorithm 3 (Table 1 size ranges)
+  * :mod:`repro.core.simulator`    — unified trace-driven TLB engine
+  * :mod:`repro.core.baselines`    — Base/THP/COLT/Cluster/RMM/Anchor specs
+  * :mod:`repro.core.mappings`     — Table-3 synthetic + demand mappings
+  * :mod:`repro.core.traces`       — benchmark access-pattern analogues
+"""
+from .aligned import (Entry, ReferenceTLB, aligned_lookup, aligned_vpn,
+                      alignment_class, covers, fill_select,
+                      simulate_reference, stored_contiguity)
+from .baselines import (anchor_spec, anchor_static, base_spec, cluster_spec,
+                        colt_spec, kaligned_for_mapping, kaligned_spec,
+                        rmm_spec, standard_suite, thp_spec)
+from .determine_k import SIZE_RANGE_TABLE, determine_k, f_alignment
+from .mappings import BuddyAllocator, demand_mapping, synthetic_mapping
+from .page_table import (Mapping, compute_runs, contiguity_chunks,
+                         contiguity_histogram, huge_page_backed, make_mapping)
+from .simulator import MethodSpec, SimResult, run_method
+from .traces import BENCHMARKS, benchmark_trace, generate_trace

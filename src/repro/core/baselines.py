@@ -1,0 +1,105 @@
+"""Method configurations for all compared schemes (paper §4.1, Table 2).
+
+Each returns a :class:`repro.core.simulator.MethodSpec` driving the unified
+engine.  TLB geometries follow Table 2:
+
+* common L1: 64-entry 4-way 4KB (+32-entry 4-way 2MB for THP)
+* Base/THP/COLT/Anchor/K-Aligned L2: 1024 entries, 8-way (128 sets)
+* Cluster: 768-entry 6-way regular + 320-entry 5-way clustered
+* RMM: baseline L2 + 32-entry fully-associative range TLB
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from .determine_k import determine_k
+from .page_table import Mapping, contiguity_histogram
+from .simulator import MethodSpec, SimResult, run_method
+
+L2_SETS_8WAY = 128  # 1024 entries / 8 ways
+
+
+def base_spec() -> MethodSpec:
+    return MethodSpec(name="Base", kind="base")
+
+
+def thp_spec() -> MethodSpec:
+    return MethodSpec(name="THP", kind="thp")
+
+
+def colt_spec() -> MethodSpec:
+    # coalesced entries indexed by the 8-PTE window (index_shift=3)
+    return MethodSpec(name="COLT", kind="colt", index_shift=3)
+
+
+def cluster_spec() -> MethodSpec:
+    # 768-entry 6-way regular TLB + clustered side TLB
+    return MethodSpec(name="Cluster", kind="cluster", l2_sets=128, l2_ways=6,
+                      side="cluster")
+
+
+def rmm_spec() -> MethodSpec:
+    return MethodSpec(name="RMM", kind="rmm", side="rmm")
+
+
+def anchor_spec(distance_bits: int) -> MethodSpec:
+    """Anchor with anchor distance 2**distance_bits [Park et al., ISCA'17]."""
+    return MethodSpec(name=f"Anchor(d=2^{distance_bits})", kind="anchor",
+                      K=(distance_bits,), index_shift=distance_bits)
+
+
+def kaligned_spec(K: Sequence[int], use_predictor: bool = True,
+                  name: str | None = None) -> MethodSpec:
+    Kd = tuple(sorted(set(int(k) for k in K), reverse=True))
+    return MethodSpec(
+        name=name or f"|K|={len(Kd)} Aligned",
+        kind="kaligned", K=Kd, index_shift=max(Kd) if Kd else 0,
+        use_predictor=use_predictor)
+
+
+def kaligned_for_mapping(m: Mapping, psi: int, theta: float = 0.9,
+                         use_predictor: bool = True) -> MethodSpec:
+    """K Aligned with K chosen by Algorithm 3 from the mapping's histogram."""
+    hist = contiguity_histogram(m)
+    K = determine_k(hist, theta=theta, psi=psi)
+    if not K:       # fully fragmented mapping: degenerate to smallest reach
+        K = [4]
+    return kaligned_spec(K[:psi], use_predictor=use_predictor,
+                         name=f"|K|={min(len(K), psi)} Aligned")
+
+
+ANCHOR_GRID: Tuple[int, ...] = (2, 3, 4, 5, 6, 7, 8, 9, 10, 11)
+
+
+def anchor_static(m: Mapping, trace: np.ndarray,
+                  grid: Iterable[int] = ANCHOR_GRID) -> SimResult:
+    """Anchor-Static: exhaustively try all anchor distances, keep the best
+    (paper §4.1: 'ends up with the optimal performance')."""
+    best: SimResult | None = None
+    for d in grid:
+        r = run_method(anchor_spec(d), m, trace)
+        if best is None or r.walks < best.walks:
+            best = r
+            best.name = f"Anchor-Static(best d=2^{d})"
+    assert best is not None
+    return best
+
+
+def standard_suite(m: Mapping, trace: np.ndarray,
+                   psis: Sequence[int] = (2, 3, 4),
+                   anchor_grid: Iterable[int] = ANCHOR_GRID
+                   ) -> List[SimResult]:
+    """The paper's full comparison (Figs 1/8, Table 4): Base, THP, RMM, COLT,
+    Cluster, Anchor-Static, |K|=2/3/4 Aligned."""
+    out = [run_method(base_spec(), m, trace),
+           run_method(thp_spec(), m, trace),
+           run_method(rmm_spec(), m, trace),
+           run_method(colt_spec(), m, trace),
+           run_method(cluster_spec(), m, trace),
+           anchor_static(m, trace, grid=anchor_grid)]
+    for psi in psis:
+        spec = kaligned_for_mapping(m, psi=psi)
+        out.append(run_method(spec, m, trace))
+    return out

@@ -1,0 +1,3 @@
+from .sharding import (ACT_RULES, PARAM_RULES, act_pspec, dp_axis_names,
+                       dp_size, logical_to_pspec, param_sharding,
+                       with_logical_constraint)

@@ -1,0 +1,83 @@
+"""Int8 error-feedback gradient reduction (distributed-optimization trick).
+
+Replaces the fp32 grad all-reduce with: quantize local grads to int8 (per-
+block scales) + error-feedback residual, ``all_gather`` the int8 payload over
+the data axis, dequantize and mean locally.  Wire bytes drop ~3.5x vs an fp32
+ring all-reduce; error feedback keeps the long-run update sequence unbiased
+(EF-SGD / 1-bit Adam lineage).
+
+Two entry points:
+
+* :func:`ef_allreduce_inside` — for use *inside* an existing ``shard_map``
+  over the data axis (the production path: grads are local per dp shard).
+* :func:`ef_allreduce` — standalone wrapper over stacked per-shard grads
+  ``[ndp, ...]`` (used by tests and the demo bench; it shard_maps the leading
+  axis over dp).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+PyTree = Any
+QBLOCK = 512
+
+
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    blk = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blk), 1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: int(np.prod(shape))].reshape(shape)
+
+
+def ef_allreduce_inside(g_local: jax.Array, residual: jax.Array,
+                        axis_name) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: returns (mean-of-shards grad, new residual)."""
+    x = g_local.astype(jnp.float32) + residual
+    q, s = _quant(x)
+    new_resid = x - _dequant(q, s, x.shape)
+    qg = jax.lax.all_gather(q, axis_name)        # [ndp, blocks, QBLOCK] int8
+    sg = jax.lax.all_gather(s, axis_name)        # [ndp, blocks, 1]
+    deq = qg.astype(jnp.float32) * sg
+    mean = deq.mean(axis=0)
+    out = mean.reshape(-1)[: int(np.prod(x.shape))].reshape(x.shape)
+    return out, new_resid
+
+
+def ef_allreduce(stacked: PyTree, residual: PyTree, mesh: Mesh,
+                 dp_axis: str = "data") -> Tuple[PyTree, PyTree]:
+    """stacked: pytree of ``[ndp, ...]`` arrays (per-shard local grads,
+    leading axis sharded over ``dp_axis``).  Returns (mean grads broadcast to
+    all shards ``[ndp, ...]``, new residuals ``[ndp, ...]``)."""
+
+    def one(g, r):
+        def inner(g_loc, r_loc):
+            out, new_r = ef_allreduce_inside(g_loc[0], r_loc[0], dp_axis)
+            return out[None], new_r[None]
+
+        return shard_map(inner, mesh=mesh,
+                         in_specs=(P(dp_axis), P(dp_axis)),
+                         out_specs=(P(dp_axis), P(dp_axis)),
+                         check_rep=False)(g, r)
+
+    flat_g, td = jax.tree.flatten(stacked)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(td, [o[0] for o in outs]),
+            jax.tree.unflatten(td, [o[1] for o in outs]))
+
+
+def init_residual_stacked(stacked: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), stacked)

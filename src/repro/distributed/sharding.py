@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Params and activations use *logical* axis names; rule tables map them to mesh
+axes.  Swapping a rule set re-shards the entire model — this is the main
+lever the §Perf hillclimb turns.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` joins the FSDP/data-parallel group by default (pipeline
+parallelism over ``pod`` is available through ``repro.distributed.pipeline``).
+
+Rule sets:
+* ``default``      — FSDP over (pod×)data on the embed dim + Megatron TP over
+                     model on heads/mlp/vocab; kv-heads replicated (GQA kv=8
+                     does not divide a 16-way model axis).
+* ``decode``       — decode caches: batch over (pod×)data, head_dim over
+                     model (kv-head counts don't divide the model axis).
+* ``decode_long``  — long-context decode: KV sequence sharded over data
+                     (partial-softmax decode), batch replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# data-parallel super-axis: ("pod","data") on multi-pod meshes collapses to
+# whatever subset exists on the current mesh (see _resolve).
+DP = ("pod", "data")
+
+PARAM_RULES: Dict[str, Dict[str, AxisVal]] = {
+    "default": {
+        "embed": DP,          # FSDP / ZeRO-3 shard dim
+        "mlp": "model",
+        "q_heads": "model",
+        "kv_heads": None,     # kv=8 < model axis; replicate (small)
+        "vocab": "model",
+        "expert": DP,         # FSDP over experts (never the contraction dim)
+        "layers": None,
+    },
+    # beyond-paper variant: shard experts over data too (less all-to-all,
+    # more gather) — used in hillclimbing.
+    "expert_dp": {
+        "embed": DP, "mlp": "model", "q_heads": "model", "kv_heads": None,
+        "vocab": "model", "expert": DP, "layers": None,
+    },
+    # 2D sharding for collective-bound cells: split embed over model too.
+    "embed_2d": {
+        "embed": "model", "mlp": DP, "q_heads": DP, "kv_heads": None,
+        "vocab": "model", "expert": None, "layers": None,
+    },
+}
+
+ACT_RULES: Dict[str, Dict[str, AxisVal]] = {
+    "default": {
+        "batch": DP,
+        "seq": None,
+        "embed": None,
+        "q_heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "vocab": "model",
+        "mlp": "model",
+        "kv_seq": None,
+        "kv_head_dim": "model",
+        "pages": None,
+    },
+    # decode: shard the KV cache along the sequence (flash-decoding split-K);
+    # avoids the kv_heads/head_dim axis fights (GQA kv=8 vs 16-way model)
+    # that made the partitioner replicate cache slices per layer.
+    "decode": {
+        "batch": DP,
+        "seq": None,
+        "embed": None,
+        "q_heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "vocab": "model",
+        "mlp": "model",
+        "kv_seq": "model",
+        "kv_head_dim": None,
+        "pages": None,
+    },
+    "decode_long": {
+        "batch": None,          # batch 1
+        "seq": None,
+        "embed": None,
+        "q_heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "vocab": "model",
+        "mlp": "model",
+        "kv_seq": DP,           # sequence-parallel KV cache
+        "kv_head_dim": "model",
+        "pages": DP,
+    },
+    # sequence-parallel training activations (hillclimb option)
+    "seq_parallel": {
+        "batch": DP, "seq": "model", "embed": None, "q_heads": "model",
+        "kv_heads": None, "head_dim": None, "vocab": "model",
+        "mlp": "model",
+        "kv_seq": None, "kv_head_dim": "model", "pages": None,
+    },
+}
+
+
+def _resolve(axis: AxisVal, mesh: Mesh, dim_size: Optional[int] = None
+             ) -> AxisVal:
+    """Drop mesh axes that don't exist; drop sharding if not divisible."""
+    if axis is None:
+        return None
+    names = axis if isinstance(axis, tuple) else (axis,)
+    names = tuple(a for a in names if a in mesh.axis_names)
+    if not names:
+        return None
+    if dim_size is not None:
+        total = int(np.prod([mesh.shape[a] for a in names]))
+        while names and dim_size % int(np.prod([mesh.shape[a] for a in names])) != 0:
+            names = names[1:]   # drop outermost axis until divisible
+        if not names:
+            return None
+    return names if len(names) > 1 else names[0]
+
+
+def logical_to_pspec(logical: Sequence[Optional[str]], mesh: Mesh,
+                     rules: Dict[str, AxisVal],
+                     shape: Optional[Sequence[int]] = None) -> P:
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name else None
+        ax = _resolve(ax, mesh, None if shape is None else shape[i])
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ax is not None:
+            names = ax if isinstance(ax, tuple) else (ax,)
+            names = tuple(a for a in names if a not in used)
+            used.update(names)
+            ax = (names if len(names) > 1 else (names[0] if names else None))
+        out.append(ax)
+    return P(*out)
+
+
+def param_sharding(logical_tree_: Any, shape_tree: Any, mesh: Mesh,
+                   rule_set: str = "default") -> Any:
+    rules = PARAM_RULES[rule_set]
+
+    def make(logical, sds):
+        return NamedSharding(mesh, logical_to_pspec(logical, mesh, rules,
+                                                    sds.shape))
+    return jax.tree.map(make, logical_tree_, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def act_pspec(logical: Sequence[Optional[str]], mesh: Mesh,
+              rule_set: str = "default",
+              shape: Optional[Sequence[int]] = None) -> P:
+    return logical_to_pspec(logical, mesh, ACT_RULES[rule_set], shape)
+
+
+def with_logical_constraint(x: jax.Array, logical: Sequence[Optional[str]],
+                            mesh: Optional[Mesh], rule_set: str = "default"
+                            ) -> jax.Array:
+    if mesh is None:
+        return x
+    spec = act_pspec(logical, mesh, rule_set, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def dp_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axis_names(mesh)]))

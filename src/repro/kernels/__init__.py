@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU vs ref.py oracles).
+
+* ``paged_attention`` — the paper's technique as a kernel: per-class
+  coalesced superblock DMA over the paged KV pool (ops.paged_attention).
+* ``flash_attention`` — tiled causal online-softmax forward for
+  prefill/serving (ops.flash_attention_gqa).
+"""

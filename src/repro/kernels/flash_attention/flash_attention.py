@@ -1,0 +1,118 @@
+"""Tiled causal flash attention (forward) — Pallas TPU kernel.
+
+Used by prefill/serving on TPU; training uses the jnp chunked-attention path
+(same blocking, autodiff-able) with this kernel as the drop-in fast forward.
+Grid (B·H, n_q_blocks, n_kv_blocks); online softmax in fp32 scratch;
+causal tiles skip fully-masked kv blocks via the index structure.
+
+BlockSpec tiling: q tile (Bq, D), kv tiles (Bk, D) — MXU-aligned when
+Bq, Bk are multiples of 128 and D ∈ {64, 128}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    run = (not causal) or True
+
+    @pl.when((not causal) or (ki * block_k <= qi * block_q + block_q - 1))
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)          # [Bq, D]
+        k = k_ref[0].astype(jnp.float32)          # [Bk, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [Bq, Bk]
+        mask = (k_pos < seq_len) & (q_pos < seq_len)
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...]
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, S, H, D] (H == KVH after GQA repeat) → [B, S, H, D]."""
+    B, S, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    block_q = min(block_q, max(S, 8))
+    block_k = min(block_k, max(S, 8))
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = qp.shape[1], kp.shape[1]
+    # [B, S, H, D] -> [B*H, S, D]
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, x.shape[1], D)
+    qb, kb, vb = bh(qp), bh(kp), bh(vp)
+    grid = (B * H, Sq // block_q, Sk // block_k)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, qi, ki: (h, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, qi, ki: (h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    out = out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)[:, :S]
+    return out

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the flash attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_gqa(q, k, v, *, causal=True, block_q=128, block_k=128,
+                        interpret=True):
+    """q: [B, S, Hq, D]; k,v: [B, S, KVH, D] with Hq % KVH == 0."""
+    Hq, KVH = q.shape[2], k.shape[2]
+    if Hq != KVH:
+        rep = Hq // KVH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention: naive masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q,k,v: [B, S, H, D] → [B, S, H, D] (fp32 math)."""
+    B, S, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,153 @@
+"""Coalesced paged decode attention — Pallas TPU kernel (the paper on TPU).
+
+One kernel, parameterized by ``pages_per_block = 2^k`` (the class).  The
+baseline paged attention is the class-0 instance (one DMA per page, vLLM
+style); the coalesced scheme runs one instance per k ∈ K over the windows
+*assigned* to that class (Algorithm 1's rightward-compatible fill, computed
+host-side in ``repro.kvcache.block_table``), then merges the per-class
+partial softmax states exactly.
+
+Why this is the paper's mechanism and not just inspiration:
+
+* class-k window ↔ k-bit aligned PTE whose contiguity spans its window;
+* the BlockSpec ``index_map`` consulting the scalar-prefetched window table
+  ↔ the aligned TLB lookup (translation happens per 2^k pages, not per page);
+* one grid step loads 2^k·page_size tokens in ONE contiguous DMA ↔ one TLB
+  entry covering 2^k pages (translation-overhead reduction = DMA-descriptor
+  reduction);
+* uncovered windows fall to the class-0 pass ↔ regular entries.
+
+VMEM budget: a class-k tile is (2^k·T, KVH, D) for K and V → e.g. k=4,
+T=64, KVH=8, D=128 ⇒ 2·16·64·8·128·2B = 4MB, well under the ~128MB VMEM of
+a v5e core; ``choose_kernel_classes`` caps k accordingly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _class_kernel(win_idx_ref, cov_ref, len_ref,   # scalar prefetch
+                  q_ref, k_ref, v_ref,             # VMEM blocks
+                  o_ref, m_ref, l_ref,             # outputs (revisited)
+                  *, tokens_per_win: int, scale: float, kvh: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(cov_ref[b, j] == 1)
+    def _attend():
+        W = tokens_per_win
+        q = q_ref[0].astype(jnp.float32)             # [H, D]
+        k = k_ref[0].astype(jnp.float32)             # [W, KVH, D]
+        v = v_ref[0].astype(jnp.float32)
+        H, D = q.shape
+        G = H // kvh
+        qg = q.reshape(kvh, G, D)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),                # [KVH, D, W]
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale   # [KVH, G, W]
+        pos = j * W + jax.lax.broadcasted_iota(jnp.int32, (1, 1, W), 2)
+        mask = pos < len_ref[b]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0].astype(jnp.float32).reshape(kvh, G)
+        l_prev = l_ref[0].astype(jnp.float32).reshape(kvh, G)
+        o_prev = o_ref[0].astype(jnp.float32).reshape(kvh, G, D)
+
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2),                 # [KVH, W, D]
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)      # [KVH, G, D]
+        o_new = o_prev * alpha[..., None] + pv
+
+        o_ref[0] = o_new.reshape(H, D).astype(o_ref.dtype)
+        m_ref[0] = m_new.reshape(H).astype(m_ref.dtype)
+        l_ref[0] = l_new.reshape(H).astype(l_ref.dtype)
+
+
+def paged_attention_class_pass(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        win_idx: jax.Array, covered: jax.Array, kv_lens: jax.Array,
+        *, pages_per_block: int, page_size: int,
+        scale: Optional[float] = None, interpret: bool = True
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One class-k pass.
+
+    q: [B, H, D]; pools: [n_pages, T, KVH, D]; win_idx/covered: [B, n_win]
+    (physical window index / class-assignment mask); kv_lens: [B].
+    Returns unnormalized (o [B,H,D] f32, m [B,H] f32, l [B,H] f32).
+    """
+    B, H, D = q.shape
+    n_pages, T, KVH, _ = k_pool.shape
+    P2 = pages_per_block
+    assert T == page_size
+    assert n_pages % P2 == 0, (n_pages, P2)
+    W = P2 * T
+    n_win = win_idx.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    kp = k_pool.reshape(n_pages // P2, W, KVH, D)
+    vp = v_pool.reshape(n_pages // P2, W, KVH, D)
+
+    grid = (B, n_win)
+    kernel = functools.partial(_class_kernel, tokens_per_win=W, scale=scale,
+                               kvh=KVH)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, H), jnp.float32),
+        jax.ShapeDtypeStruct((B, H), jnp.float32),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, *s: (b, 0, 0)),
+            pl.BlockSpec((1, W, KVH, D),
+                         lambda b, j, win, cov, ln: (win[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, W, KVH, D),
+                         lambda b, j, win, cov, ln: (win[b, j], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, *s: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, *s: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j, *s: (b, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shapes,
+        interpret=interpret,
+    )(win_idx.astype(jnp.int32), covered.astype(jnp.int32),
+      kv_lens.astype(jnp.int32), q, kp, vp)
+
+
+def merge_partials(parts) -> jax.Array:
+    """Exact merge of per-class (o_unnorm, m, l) partial-softmax states."""
+    ms = jnp.stack([p[1] for p in parts])            # [C, B, H]
+    m_star = jnp.max(ms, axis=0)
+    o = 0.0
+    l = 0.0
+    for o_k, m_k, l_k in parts:
+        w = jnp.exp(m_k - m_star)
+        o = o + o_k * w[..., None]
+        l = l + l_k * w
+    return o / jnp.maximum(l, 1e-30)[..., None]

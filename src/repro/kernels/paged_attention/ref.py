@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Dense math, no paging tricks: gather pages through the block table into a
+contiguous [B, S, KVH, D] view, run masked decode attention in fp32.  The
+Pallas kernels in ``paged_attention.py`` must match this to float tolerance
+for every (shape, dtype, contiguity pattern) — see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_kv(pool: jax.Array, block_table: jax.Array, page_size: int
+              ) -> jax.Array:
+    """pool: [n_pages, T, KVH, D]; block_table: [B, max_pages] (-1 pad)
+    → [B, max_pages*T, KVH, D]."""
+    safe = jnp.maximum(block_table, 0)
+    gathered = pool[safe]                    # [B, P, T, KVH, D]
+    B, P, T, KVH, D = gathered.shape
+    valid = (block_table >= 0)[..., None, None, None]
+    gathered = jnp.where(valid, gathered, 0)
+    return gathered.reshape(B, P * T, KVH, D)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, kv_lens: jax.Array,
+                        page_size: int, scale: float | None = None
+                        ) -> jax.Array:
+    """q: [B, H, D]; pools: [n_pages, T, KVH, D]; block_tables: [B, P];
+    kv_lens: [B] → o: [B, H, D]."""
+    B, H, D = q.shape
+    KVH = k_pool.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    k = gather_kv(k_pool, block_tables, page_size)   # [B, S, KVH, D]
+    v = gather_kv(v_pool, block_tables, page_size)
+    S = k.shape[1]
+    qg = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    mask = (jnp.arange(S)[None, :] < kv_lens[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .allocator import PagedKVAllocator, SeqAlloc
+from .block_table import (assign_classes, choose_kernel_classes,
+                          descriptor_tables, dma_descriptor_count,
+                          window_coverage)

@@ -1,0 +1,567 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+
+* ``.lower().compile()`` must succeed for the 16x16 single-pod mesh AND the
+  2x16x16 multi-pod mesh for every runnable cell;
+* ``compiled.memory_analysis()`` per-device bytes prove the cell fits a
+  16GB v5e chip;
+* ``compiled.cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun
+Every cell writes a JSON next to ``--out`` so the sweep is restartable.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from collections import Counter
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ShapeSpec, all_cells, cell_status, get_config
+from ..distributed.sharding import (ACT_RULES, act_pspec, dp_size,
+                                    logical_to_pspec, param_sharding)
+from ..models import Model, RunConfig
+from ..models.config import ModelConfig
+from ..models.model import (decode_state_logical, decode_state_shapes,
+                            model_specs, padded_vocab)
+from ..models.common import count_params, logical_tree, spec_shapes
+from ..optim import OptConfig, abstract_opt, opt_logical
+from ..train.train_step import (batch_logical_axes, make_batch_shapes,
+                                make_serve_step, make_train_step)
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+
+# TPU v5e hardware constants (§Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~3 links usable per chip)
+HBM_PER_CHIP = 16e9
+
+
+# ---------------------------------------------------------------------------
+# per-cell execution policy (microbatching, optimizer, dtypes, rules)
+# ---------------------------------------------------------------------------
+
+def cell_runconfig(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                   rules: str = "default",
+                   microbatches: Optional[int] = None,
+                   overrides: Optional[Dict[str, Any]] = None) -> RunConfig:
+    dp = dp_size(mesh)
+    rc = RunConfig()
+    kw: Dict[str, Any] = dict(rules=rules)
+    if shape.kind == "train":
+        # auto-microbatching: keep per-layer saved activations ~<=2GB/device
+        b_loc = max(shape.global_batch // dp, 1)
+        from ..models.model import n_superblocks, block_period
+        bytes_per_layer_carry = (b_loc * shape.seq_len * cfg.d_model * 2)
+        saved = bytes_per_layer_carry * cfg.n_layers
+        micro = 1
+        while saved / micro > 2e9 and micro < b_loc:
+            micro *= 2
+        kw.update(microbatches=(microbatches or micro),
+                  param_dtype="float32", compute_dtype="bfloat16")
+        if cfg.param_count() > 1e11:      # jamba-398B: factored opt + bf16
+            kw.update(optimizer="adafactor", param_dtype="bfloat16",
+                      grad_dtype="bfloat16", scan_chunk=128)
+        kw.update(attn_q_chunk=512, attn_kv_chunk=1024, scan_chunk=256)
+    elif shape.kind == "prefill":
+        kw.update(param_dtype="bfloat16", compute_dtype="bfloat16",
+                  attn_q_chunk=1024, attn_kv_chunk=2048, scan_chunk=512,
+                  remat="none")
+        # chunked prefill when per-device activation transients get large
+        b_loc = max(shape.global_batch // dp, 1)
+        est = b_loc * shape.seq_len * cfg.d_model * 24
+        chunks = 1
+        while est / chunks > 4e9 and chunks < 8:
+            chunks *= 2
+        kw.update(prefill_seq_chunks=chunks)
+    else:  # decode
+        kw.update(param_dtype="bfloat16", compute_dtype="bfloat16",
+                  remat="none")
+        if shape.seq_len >= 100_000:
+            kw.update(rules=rules if rules != "default" else "default")
+    if overrides:
+        kw.update(overrides)
+    return rc.replace(**kw)
+
+
+def act_rules_for(shape: ShapeSpec) -> str:
+    if shape.kind == "decode":
+        return "decode_long" if shape.seq_len >= 100_000 else "decode"
+    return "default"
+
+
+# ---------------------------------------------------------------------------
+# analytic memory-traffic model (per chip per step, bytes)
+#
+# The CPU-compiled HLO's fusion granularity over-counts HBM traffic relative
+# to TPU codegen (attention tiles that Pallas keeps VMEM-resident appear as
+# HBM-touching fusions).  We therefore report three memory estimates:
+#   * hlo_upper  — every compiled fusion/dot/copy touching memory (parsed)
+#   * hlo_dot    — matmul operands/results only (unavoidable floor, parsed)
+#   * analytic   — the model below (weights + activations + KV + optimizer)
+# and use `analytic` for bottleneck identification.
+# ---------------------------------------------------------------------------
+
+ACT_TENSORS_PER_LAYER = 14      # d-sized tensor reads+writes per token, fwd
+REMAT_FACTOR = 1.5              # full remat: fwd recompute in bwd
+
+
+def _param_bytes_per_chip(cfg: ModelConfig, rc: RunConfig, n_chips: int) -> float:
+    bs = {"float32": 4, "bfloat16": 2}[rc.param_dtype]
+    return cfg.param_count() * bs / n_chips
+
+
+def _opt_bytes_per_chip(cfg: ModelConfig, rc: RunConfig, n_chips: int) -> float:
+    n = cfg.param_count() / n_chips
+    return {"adamw": 8 * n, "adamw8bit": 3.02 * n,
+            "adafactor": 0.02 * n}[rc.optimizer]
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeSpec, rc: RunConfig,
+                          n_chips: int, dp: int) -> Dict[str, float]:
+    W = _param_bytes_per_chip(cfg, rc, n_chips)
+    ab = 2  # bf16 activations
+    d = cfg.d_model
+    L = cfg.n_layers
+    L_attn = cfg.n_attn_layers
+    if shape.kind == "train":
+        micro = rc.microbatches
+        tok_chip = shape.global_batch * shape.seq_len / dp   # per chip, step
+        # weights: fwd + bwd + remat-recompute reads, per microbatch
+        weights = (2 + REMAT_FACTOR) * W * micro
+        acts = (tok_chip * L * d * ab * ACT_TENSORS_PER_LAYER
+                * (1 + 1 + (REMAT_FACTOR - 1)))
+        # flash attention: each q-block re-reads K,V (causal: half on avg)
+        nq = max(shape.seq_len // rc.attn_q_chunk, 1)
+        attn = (tok_chip / max(shape.seq_len, 1)) * nq * (shape.seq_len / 2) \
+            * cfg.kv_dim * 2 * ab * L_attn * 2
+        grads = 2.0 * 4 * cfg.param_count() / n_chips * micro  # fp32 accum r/w
+        opt = 2 * W + 2 * _opt_bytes_per_chip(cfg, rc, n_chips)
+        total = weights + acts + attn + grads + opt
+        return dict(weights=weights, activations=acts, attention=attn,
+                    grads=grads, optimizer=opt, total=total)
+    if shape.kind == "prefill":
+        tok_chip = shape.global_batch * shape.seq_len / dp
+        weights = W
+        acts = tok_chip * L * d * ab * ACT_TENSORS_PER_LAYER
+        nq = max(shape.seq_len // rc.attn_q_chunk, 1)
+        attn = (tok_chip / max(shape.seq_len, 1)) * nq * (shape.seq_len / 2) \
+            * cfg.kv_dim * 2 * ab * L_attn
+        cache_w = tok_chip * cfg.kv_dim * 2 * ab * L_attn
+        total = weights + acts + attn + cache_w
+        return dict(weights=weights, activations=acts, attention=attn,
+                    cache_write=cache_w, total=total)
+    # decode: weights + full KV-cache read + state r/w per token
+    b_chip = max(shape.global_batch / dp, shape.global_batch / dp)
+    kv_read = (b_chip * shape.seq_len * cfg.kv_dim * 2 * ab * L_attn
+               / (n_chips / dp if False else 1))
+    # kv head_dim is model-sharded: divide by the model-axis size
+    model_par = n_chips // dp
+    kv_read = kv_read / model_par
+    ssm = 0.0
+    if cfg.mamba is not None:
+        d_in = cfg.mamba.expand * d
+        n_mamba = L - L_attn
+        ssm = 2 * b_chip * d_in * cfg.mamba.d_state * 4 * n_mamba / model_par
+    if cfg.family == "xlstm":
+        d_in = 2 * d
+        dh = d_in // cfg.n_heads
+        ssm = 2 * b_chip * cfg.n_heads * dh * dh * 4 * L / model_par
+    acts = b_chip * L * d * ab * ACT_TENSORS_PER_LAYER
+    total = W + kv_read + ssm + acts
+    return dict(weights=W, kv_read=kv_read, state=ssm, activations=acts,
+                total=total)
+
+
+def _cpu_f32_mirror_bytes(hlo: str, args) -> int:
+    """Bytes of f32 while-carry entries shape-matching bf16 input shards.
+
+    These are CPU-backend upcast mirrors (no native bf16 matmul); a TPU
+    build does not allocate them.  Conservative: only counts entries inside
+    top-level while tuples of the entry computation.
+    """
+    from collections import Counter
+    from .hlo_analysis import _SHAPE_RE, parse_hlo
+
+    want: Counter = Counter()
+    for leaf in jax.tree.leaves(args):
+        if getattr(leaf, "dtype", None) == jnp.bfloat16:
+            sh = getattr(leaf, "sharding", None)
+            shard = (sh.shard_shape(leaf.shape) if sh is not None
+                     else leaf.shape)
+            want[tuple(int(d) for d in shard)] += 2   # appears in ≤2 loops
+    comps = parse_hlo(hlo)
+    if "__entry__" not in comps:
+        return 0
+    # while ops at every nesting level (microbatch loop bodies contain the
+    # fwd/bwd layer scans)
+    whiles = []
+    seen_names = set()
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for op in comp.ops.values():
+            if op.kind == "while" and op.name not in seen_names:
+                seen_names.add(op.name)
+                whiles.append(op)
+    for op in comps["__entry__"].ops.values():
+        if op.kind == "while" and op.name not in seen_names:
+            seen_names.add(op.name)
+            whiles.append(op)
+    # bf16 loop-carried buffers (e.g. remat activation saves) also get f32
+    # mirrors; only sizeable ones matter
+    for op in whiles:
+        for dt, dims in _SHAPE_RE.findall(op.result_sig):
+            if dt != "bf16" or not dims:
+                continue
+            shp = tuple(int(d) for d in dims.split(",") if d)
+            if int(np.prod(shp)) * 2 > 1e8:
+                want[shp] += 1
+    mirror = 0
+    for op in whiles:
+        for dt, dims in _SHAPE_RE.findall(op.result_sig):
+            if dt != "f32" or not dims:
+                continue
+            shp = tuple(int(d) for d in dims.split(",") if d)
+            if want.get(shp, 0) > 0:
+                want[shp] -= 1
+                mirror += int(np.prod(shp)) * 4
+    return mirror
+
+
+# ---------------------------------------------------------------------------
+# collective parsing (§Roofline: collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f8\w*|s64|u64)"
+                       r"\[([\d,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes of every collective op in the compiled HLO."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLL_KINDS}
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*((?:\([^)]*\)|\S+))\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", ls)
+        if not m:
+            continue
+        result_sig, kind = m.group(1), m.group(2)
+        if "-start" in ls.split(kind)[1][:10]:
+            pass
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(result_sig):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, rules: str = "default",
+               overrides: Optional[Dict[str, Any]] = None):
+    """Returns (jitted_fn, example_args_abstract) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    overrides = dict(overrides or {})
+    ar = overrides.pop("act_rules", None) or act_rules_for(shape)
+    rc = cell_runconfig(cfg, shape, mesh, rules=rules,
+                        overrides=overrides or None)
+    model = Model(cfg, rc, mesh=mesh, act_rules=ar)
+
+    specs = model_specs(cfg, rc)
+    p_logical = logical_tree(specs)
+    p_shapes = spec_shapes(specs, dtype=rc.param_dtype)
+    p_shard = param_sharding(p_logical, p_shapes, mesh, rc.rules)
+    params_abs = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        p_shapes, p_shard)
+
+    def in_shard(logical, shp):
+        return NamedSharding(mesh, act_pspec(logical, mesh, ar, shp))
+
+    if shape.kind == "train":
+        oc = OptConfig(kind=rc.optimizer if rc.optimizer != "adamw8bit"
+                       else "adamw8bit")
+        oc = OptConfig(kind=rc.optimizer)
+        opt_abs0 = abstract_opt(oc, p_shapes)
+        opt_lg = opt_logical(oc, p_logical)
+        opt_shard = param_sharding(opt_lg, opt_abs0, mesh, rc.rules)
+        opt_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_abs0, opt_shard)
+        batch_abs0 = make_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+        blg = batch_logical_axes(cfg)
+        batch_abs = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=in_shard(blg[k], v.shape))
+            for k, v in batch_abs0.items()}
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(make_train_step(model, oc), donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, batch_abs, step_abs)
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            if cfg.family == "encoder":
+                logits, aux = model.forward(
+                    params, None, input_embeds=batch["input_embeds"])
+                return logits
+            if rc.prefill_seq_chunks > 1:
+                return model.prefill_chunked(
+                    params, batch["tokens"],
+                    n_chunks=rc.prefill_seq_chunks,
+                    patch_embeds=batch.get("patch_embeds"))
+            logits, state = model.prefill(
+                params, batch["tokens"],
+                patch_embeds=batch.get("patch_embeds"))
+            return logits, state
+        batch_abs0 = make_batch_shapes(cfg, shape.global_batch, shape.seq_len)
+        blg = batch_logical_axes(cfg)
+        batch_abs = {k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=in_shard(blg[k], v.shape))
+            for k, v in batch_abs0.items()
+            if k in ("tokens", "input_embeds", "patch_embeds")}
+        # §Perf iteration 1: without explicit out_shardings XLA replicated
+        # the returned decode states (38GB/dev KV caches on jamba prefill).
+        logits_sh = in_shard(("batch", "seq", "vocab"),
+                             (shape.global_batch, shape.seq_len,
+                              padded_vocab(cfg)))
+        if cfg.family == "encoder":
+            out_sh = logits_sh
+        else:
+            state_lg = decode_state_logical(cfg)
+            state_abs0 = decode_state_shapes(cfg, rc, shape.global_batch,
+                                             shape.seq_len, jnp.bfloat16)
+            state_sh = jax.tree.map(
+                lambda lg, s: in_shard(tuple(lg), s.shape),
+                state_lg, state_abs0,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    a is None or isinstance(a, str) for a in x))
+            out_sh = (logits_sh, state_sh)
+        fn = jax.jit(prefill, out_shardings=out_sh)
+        args = (params_abs, batch_abs)
+    else:  # decode
+        state_abs0 = decode_state_shapes(cfg, rc, shape.global_batch,
+                                         shape.seq_len, jnp.bfloat16)
+        state_lg = decode_state_logical(cfg)
+        state_abs = jax.tree.map(
+            lambda s, lg: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=in_shard(("layers",) * 0 + tuple(lg), s.shape)),
+            state_abs0, state_lg,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        tok_abs = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=in_shard(("batch", None), (shape.global_batch, 1)))
+        len_abs = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32,
+            sharding=in_shard(("batch",), (shape.global_batch,)))
+        fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        args = (params_abs, state_abs, tok_abs, len_abs)
+    return cfg, rc, fn, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: str = "default",
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    skip = cell_status(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                "status": "SKIP", "reason": skip}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, rc, fn, args = build_cell(arch, shape_name, mesh, rules, overrides)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)          # loop-aware: while bodies x trip count
+    colls = stats.collectives
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    shape = SHAPES[shape_name]
+
+    xla_flops = float(ca.get("flops", 0.0))   # counts loop bodies ONCE
+    # The compiled SPMD module is the PER-DEVICE program: parsed flops/bytes
+    # are per-chip quantities already.
+    flops = stats.flops
+    bytes_acc = stats.traffic_bytes
+    coll_bytes = stats.collective_bytes
+    dp = dp_size(mesh)
+    mem_model = analytic_memory_bytes(cfg, shape, rc, n_chips, dp)
+
+    # roofline terms (seconds; whole-step, per chip)
+    t_compute = flops / PEAK_FLOPS
+    t_mem_upper = bytes_acc / HBM_BW
+    t_mem_dot = stats.dot_bytes / HBM_BW
+    t_memory = mem_model["total"] / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+
+    # model flops (6ND for train; 2ND-style per-token for decode)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind == "prefill" else 1))
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+        if shape.kind == "decode":
+            # attention reads over the KV cache dominate decode
+            kv = (2 * cfg.n_attn_layers * cfg.kv_dim * shape.seq_len
+                  * shape.global_batch * 2)
+            model_flops += 2.0 * kv
+
+    per_dev = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+    }
+    total_dev = sum(v or 0 for k, v in per_dev.items()
+                    if k != "alias_bytes")
+    # CPU XLA has no native bf16 matmul: it materializes persistent f32
+    # MIRRORS of bf16 operands (KV caches in decode scans, bf16 params in
+    # grad-accumulation loops) — verified in the HLO as f32 while-carry
+    # entries whose shapes equal bf16 input shards.  TPUs do bf16 dots
+    # natively, so we report the footprint with those mirrors removed too.
+    mirror = _cpu_f32_mirror_bytes(hlo, args)
+    total_adj = total_dev - mirror
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "status": "OK", "rules": rules,
+        "chips": n_chips,
+        "params": cfg.param_count(), "active_params": n_active,
+        "runconfig": {"microbatches": rc.microbatches,
+                      "optimizer": rc.optimizer,
+                      "param_dtype": rc.param_dtype,
+                      "rules": rc.rules},
+        "time": {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)},
+        "memory": dict(per_dev, total_per_device=total_dev,
+                       cpu_f32_mirror_bytes=mirror,
+                       total_adjusted_tpu=total_adj,
+                       fits_16gb=bool(total_adj < HBM_PER_CHIP)),
+        "hlo_flops_per_chip": flops,
+        "hlo_flops_global": flops * n_chips,
+        "hlo_bytes_per_chip": bytes_acc,
+        "hlo_dot_bytes_per_chip": stats.dot_bytes,
+        "xla_cost_analysis_flops": xla_flops,   # loop bodies counted once
+        "collectives": colls, "collective_bytes_per_chip": coll_bytes,
+        "memory_model": mem_model,
+        "roofline": {
+            "compute_s": t_compute, "memory_s": t_memory,
+            "memory_hlo_upper_s": t_mem_upper, "memory_dot_s": t_mem_dot,
+            "collective_s": t_coll, "dominant": dom[0],
+            "step_lower_bound_s": max(t_compute, t_memory, t_coll),
+        },
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / (flops * n_chips))
+        if flops else None,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--archs", help="comma-separated arch filter (all shapes)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells even if the JSON exists")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig override key=value")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+
+    if args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.archs:
+        sel = set(args.archs.split(","))
+        cells = [(a, s) for a, s, _ in all_cells() if a in sel]
+    else:
+        cells = [(a, s) for a, s, _ in all_cells()]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+            if args.rules != "default":
+                tag += f"__{args.rules}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                continue
+            try:
+                res = run_cell(arch, shape, mp, args.rules,
+                               overrides or None)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            status = res["status"]
+            extra = ""
+            if status == "OK":
+                r = res["roofline"]
+                extra = (f" dom={r['dominant']} "
+                         f"mem/dev={res['memory']['total_per_device']/1e9:.2f}GB "
+                         f"compile={res['time']['compile_s']}s")
+            elif status == "FAIL":
+                extra = " " + res["error"][:160]
+            print(f"[{status}] {tag}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,317 @@
+"""Loop-aware analysis of compiled HLO text (feeds §Roofline).
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count, which under-counts a scanned-64-layer model by ~2 orders of
+magnitude.  This module parses the compiled HLO text into its computation
+graph, recovers trip counts from loop conditions (``compare(iv,
+constant(N)), direction=LT``), and accumulates through the loop nest:
+
+* ``flops``            — 2 x prod(out) x prod(contracted dims) per ``dot``
+* ``traffic_bytes``    — Σ (operand + result bytes) over fusions/dots/
+                         copies/scatters: an upper-bound HBM-traffic model of
+                         the compiled graph
+* ``collectives``      — per-kind counts and operand bytes, loop-multiplied
+
+Everything is derived from ``compiled.as_text()`` — the only profile source
+available in a CPU dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start", "reduce-scatter-start",
+               "all-to-all-start")
+_COUNTED_TRAFFIC = ("fusion", "dot", "copy", "dynamic-update-slice",
+                    "dynamic-slice", "scatter", "gather", "convolution",
+                    "reduce", "transpose", "broadcast", "concatenate",
+                    "select-and-scatter", "sort", "reshape", "slice", "pad",
+                    "iota", "convert", "add", "multiply", "subtract",
+                    "divide", "exponential", "tanh", "select", "compare",
+                    "maximum", "minimum", "rsqrt", "negate", "log", "custom-call")
+
+
+def _shape_bytes(sig: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(sig: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(sig):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_sig: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+# header params may contain nested tuple types: match permissively
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+# result signature: either a tuple "(s32[], f32[2,4]{1,0}, /*index=5*/...)"
+# (no nested parens, but may contain '=' inside /*index=N*/ comments) or a
+# single "f32[16,64]{1,0}" token.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[^\s=]+))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{"):
+                cur = Computation(m.group(1), {}, [])
+                if s.startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, sig, kind, operands, attrs = m.groups()
+        ops = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+               for o in _split_operands(operands)]
+        cur.ops[name] = Op(name, kind, sig, ops, attrs)
+        cur.order.append(name)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _split_operands(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    # operand tokens look like "bf16[2,4]{1,0} %name" or "%name"
+    names = []
+    for tok in out:
+        tok = tok.strip()
+        m = re.search(r"%([\w.\-]+)\s*$", tok)
+        names.append(m.group(1) if m else tok)
+    return names
+
+
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*{\s*"n"\s*:\s*"(\d+)"')
+
+
+def _trip_count_from_attrs(attrs: str) -> Optional[int]:
+    m = _TRIP_RE.search(attrs)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: Dict[str, int] = {}
+    for op in cond.ops.values():
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", f"constant({op.attrs}")
+            m2 = re.search(r"\((-?\d+)\)", op.result_sig + op.attrs)
+            val = None
+            for mm in (m, m2):
+                if mm:
+                    val = int(mm.group(1))
+                    break
+            if val is None:
+                # constant value printed as operand text
+                pass
+            else:
+                consts[op.name] = val
+    # also catch "s32[] constant(64)" form captured in operands string
+    for op in cond.ops.values():
+        if op.kind == "constant" and op.name not in consts:
+            m = re.search(r"constant\((-?\d+)\)",
+                          "constant(" + ",".join(op.operands) + ")")
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops.values():
+        if op.kind == "compare":
+            m = re.search(r"direction=(\w+)", op.attrs)
+            if not m:
+                continue
+            direction = m.group(1)
+            vals = [consts.get(o) for o in op.operands]
+            bound = next((v for v in vals if v is not None), None)
+            if bound is None:
+                continue
+            if direction in ("LT", "GT"):
+                return max(int(bound), 1)
+            if direction in ("LE", "GE"):
+                return max(int(bound) + 1, 1)
+    # compare may be hidden inside a wrapped fusion: fall back to the single
+    # scalar s32 constant of the condition computation (the loop bound)
+    if len(consts) == 1:
+        return max(next(iter(consts.values())), 1)
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims = _shape_dims(op.result_sig)
+    out_n = 1
+    for _, dims in out_dims:
+        for d in dims:
+            out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m:
+        return 2.0 * out_n
+    lhs_op = comp.ops.get(op.operands[0])
+    lhs_dims: List[int] = []
+    if lhs_op is not None:
+        sd = _shape_dims(lhs_op.result_sig)
+        if sd:
+            lhs_dims = sd[0][1]
+    else:
+        return 2.0 * out_n
+    k = 1
+    for i in m.group(1).split(","):
+        if i and int(i) < len(lhs_dims):
+            k *= lhs_dims[int(i)]
+    return 2.0 * out_n * k
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"count": 0.0,
+                                                     "bytes": 0.0}))
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k]["count"] += v["count"] * mult
+            self.collectives[k]["bytes"] += v["bytes"] * mult
+
+
+def _operand_bytes(op: Op, comp: Computation) -> float:
+    total = 0.0
+    for o in op.operands:
+        src = comp.ops.get(o)
+        if src is not None:
+            total += _shape_bytes(src.result_sig)
+    return total
+
+
+def analyze_computation(comps: Dict[str, Computation], name: str,
+                        memo: Dict[str, HloStats]) -> HloStats:
+    if name in memo:
+        return memo[name]
+    comp = comps[name]
+    st = HloStats()
+    memo[name] = st   # cycles impossible in HLO, safe
+    for op_name in comp.order:
+        op = comp.ops[op_name]
+        kind = op.kind
+        if kind == "while":
+            body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+            cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+            trips = _trip_count_from_attrs(op.attrs)
+            if trips is None:
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+            if body and body.group(1) in comps:
+                st.add(analyze_computation(comps, body.group(1), memo),
+                       mult=trips)
+            if cond and cond.group(1) in comps:
+                st.add(analyze_computation(comps, cond.group(1), memo),
+                       mult=trips)
+            continue
+        if kind in ("call", "fusion", "conditional", "async-start"):
+            for m in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)",
+                                 op.attrs):
+                sub = m.group(1)
+                if sub in comps and sub != name:
+                    sub_st = analyze_computation(comps, sub, memo)
+                    if kind == "fusion":
+                        # fused interiors don't touch HBM: count flops only
+                        st.flops += sub_st.flops
+                    else:
+                        st.add(sub_st)
+                    break
+        base_kind = kind.replace("-start", "")
+        if base_kind in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+            b = _shape_bytes(op.result_sig)
+            st.collectives[base_kind]["count"] += 1
+            st.collectives[base_kind]["bytes"] += b
+            st.collective_bytes += b
+            continue
+        if kind == "dot":
+            st.flops += _dot_flops(op, comp)
+            st.dot_bytes += (_shape_bytes(op.result_sig)
+                             + _operand_bytes(op, comp))
+        if kind == "convolution":
+            # rough: 2 x out x (in_ch x kernel) — conservative
+            st.flops += 2.0 * _shape_bytes(op.result_sig)
+        if kind in ("fusion", "dot", "copy", "dynamic-update-slice",
+                    "dynamic-slice", "scatter", "gather", "reduce", "sort",
+                    "concatenate", "convolution", "custom-call"):
+            st.traffic_bytes += (_shape_bytes(op.result_sig)
+                                 + _operand_bytes(op, comp))
+    return st
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        return HloStats()
+    memo: Dict[str, HloStats] = {}
+    st = HloStats()
+    st.add(analyze_computation(comps, "__entry__", memo))
+    st.collectives = {k: dict(v) for k, v in st.collectives.items()}
+    return st

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+
+Production topology (TPU v5e target):
+* single-pod: 16x16 = 256 chips, axes (data, model)
+* multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the "pod" axis
+  crosses DCN; keeping model-parallel traffic intra-pod and only data-
+  parallel (or pipeline) traffic on "pod" is the standard 1000+-node layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)}. "
+            "Run under dryrun.py (it forces 512 host devices).")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over however many devices exist (CPU tests)."""
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        # replicate the single device — tests that only need mesh semantics
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)

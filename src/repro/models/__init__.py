@@ -1,0 +1,4 @@
+from .config import MambaConfig, ModelConfig, RunConfig
+from .model import (Model, cross_entropy, decode_state_logical,
+                    decode_state_shapes, init_decode_state, model_specs,
+                    padded_vocab)

@@ -1,0 +1,96 @@
+"""Parameter-spec substrate: declare params once, get init + logical sharding.
+
+No flax/haiku offline — this is a tiny pure-functional replacement:
+
+* a model declares a *spec tree*: nested dicts of :class:`Spec` leaves, each
+  carrying shape, logical axis names and an initializer;
+* ``init_params``   materializes a param pytree (deterministic per path);
+* ``logical_tree``  extracts the logical-axes pytree (same structure);
+* ``abstract_params`` builds ShapeDtypeStructs with NamedShardings for the
+  dry-run (no allocation).
+
+Logical axis names are resolved to mesh axes through a rule table in
+:mod:`repro.distributed.sharding` — changing a rule set re-shards the whole
+model, which is the main lever of the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | conv
+    scale: float = 1.0          # stddev multiplier (normal) / fan-in override
+    dtype: Optional[str] = None  # overrides param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _path_seed(path: Tuple[str, ...], base: int) -> int:
+    h = 2166136261
+    for part in path:
+        for ch in part.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return (h ^ base) & 0xFFFFFFFF
+
+
+def _init_leaf(spec: Spec, key, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype or dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "normal":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    if spec.init == "embed":
+        std = spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def _walk(tree: PyTree, fn: Callable[[Tuple[str, ...], Spec], Any],
+          path: Tuple[str, ...] = ()) -> PyTree:
+    if isinstance(tree, dict):
+        return {k: _walk(v, fn, path + (str(k),)) for k, v in tree.items()}
+    assert isinstance(tree, Spec), f"non-Spec leaf at {path}: {tree!r}"
+    return fn(path, tree)
+
+
+def init_params(specs: PyTree, seed: int = 0, dtype: str = "float32") -> PyTree:
+    def make(path, spec):
+        key = jax.random.PRNGKey(_path_seed(path, seed))
+        return _init_leaf(spec, key, dtype)
+    return _walk(specs, make)
+
+
+def logical_tree(specs: PyTree) -> PyTree:
+    return _walk(specs, lambda _, s: s.logical)
+
+
+def spec_shapes(specs: PyTree, dtype: str = "float32") -> PyTree:
+    return _walk(specs, lambda _, s: jax.ShapeDtypeStruct(
+        s.shape, jnp.dtype(s.dtype or dtype)))
+
+
+def count_params(specs: PyTree) -> int:
+    total = 0
+
+    def add(_, s):
+        nonlocal total
+        total += int(np.prod(s.shape))
+        return None
+    _walk(specs, add)
+    return total

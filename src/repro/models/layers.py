@@ -1,0 +1,236 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked
+online-softmax), SwiGLU MLP.
+
+The attention here is the *portable jnp path* with flash-style blocking (no
+S×S materialization — essential for 32k prefill); the Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same blocking for the MXU
+and is validated against :func:`causal_attention` as its oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Spec
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure jnp)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_block(q, k, v, mask, scale):
+    """One (q-block, kv-block) tile: returns (m, l, o) online-softmax stats.
+
+    q: [B, Q, H, D]; k, v: [B, S, H, D] (KV already expanded to H heads —
+    the expansion is a LOCAL broadcast when kv-heads are replicated, which
+    is what keeps prefill free of per-layer head resharding; a grouped
+    [B,Q,KVH,G,D] layout was tried and REFUTED: with KVH=8 < the 16-way
+    model axis it forced q/o resharding every layer, +1.5-15x prefill
+    collectives — §Perf iteration 9).
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                         # [b,h,q]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool,
+                      q_offset: int | jax.Array = 0,
+                      kv_len: Optional[jax.Array] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Memory-efficient attention (train/prefill path).
+
+    q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] with Hq % Hkv == 0 (GQA kv
+    heads broadcast to Hq — local under replicated-kv sharding).
+    ``q_offset`` is the absolute position of q[0] (chunked prefill).
+    Never materializes more than [B, Hq, q_chunk, kv_chunk] scores.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pq = (-Sq) % q_chunk
+    pk = (-Skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    kb = kp.reshape(B, nk, kv_chunk, Hq, D)
+    vb = vp.reshape(B, nk, kv_chunk, Hq, D)
+
+    def q_block(qi, qc):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m_acc, l_acc, o_acc = carry
+            ki, kc, vc = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask &= k_pos[None, :] < kv_len
+            mask &= (k_pos < Skv)[None, :]
+            mask &= (q_pos < q_offset + Sq)[:, None]
+            m, l, o = _attn_block(qc, kc, vc, mask[None, None], scale)
+            m_new = jnp.maximum(m_acc, m)
+            alpha = jnp.exp(m_acc - m_new)
+            beta = jnp.exp(m - m_new)
+            l_new = l_acc * alpha + l * beta
+            o_new = (o_acc * alpha.transpose(0, 2, 1)[..., None]
+                     + o * beta.transpose(0, 2, 1)[..., None])
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, q_chunk, Hq, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0),
+            (jnp.arange(nk), kb.swapaxes(0, 1), vb.swapaxes(0, 1)))
+        l = jnp.maximum(l, 1e-20)
+        return o / l.transpose(0, 2, 1)[..., None]
+
+    qb = qp.reshape(B, nq, q_chunk, Hq, D).swapaxes(0, 1)
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    out = out.swapaxes(0, 1).reshape(B, nq * q_chunk, Hq, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, scale: Optional[float] = None
+                     ) -> jax.Array:
+    """Single-step decode attention (grouped GQA, cache never repeated).
+
+    q: [B, 1, Hq, D]; caches: [B, S, Hkv, D]; kv_len: [B] valid lengths.
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bcgd,bscd->bcgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(S)[None, :] < kv_len[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bcgs,bscd->bcgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (params + apply)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = {
+        "wq": Spec((d, qd), ("embed", "q_heads")),
+        "wk": Spec((d, kvd), ("embed", "kv_heads")),
+        "wv": Spec((d, kvd), ("embed", "kv_heads")),
+        "wo": Spec((qd, d), ("q_heads", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((cfg.head_dim,), (None,), init="ones")
+        s["k_norm"] = Spec((cfg.head_dim,), (None,), init="ones")
+    return s
+
+
+def attention_qkv(cfg: ModelConfig, p: dict, x: jax.Array,
+                  positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(
+        B, S, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(
+        B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(
+        B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(cfg: ModelConfig, p: dict, x: jax.Array,
+                    positions: jax.Array, *, q_chunk: int, kv_chunk: int
+                    ) -> jax.Array:
+    q, k, v = attention_qkv(cfg, p, x, positions)
+    o = chunked_attention(q, k, v, causal=cfg.causal,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, cfg.q_dim), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": Spec((d, ff), ("embed", "mlp")),
+        "w_up": Spec((d, ff), ("embed", "mlp")),
+        "w_down": Spec((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

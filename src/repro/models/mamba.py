@@ -1,0 +1,139 @@
+"""Mamba-1 selective SSM block (for the Jamba hybrid) — pure JAX.
+
+Training/prefill uses a *chunked* selective scan: the sequence is split into
+``scan_chunk``-sized chunks processed by an outer ``lax.scan`` whose body is
+``jax.checkpoint``-ed, so the backward pass stores only chunk-boundary states
+([B, d_inner, d_state] per chunk) instead of the full [B, S, d_inner, d_state]
+state trajectory — the standard memory shape for SSM training, and the reason
+jamba can train at 4k×256 global batch.  Within a chunk the recurrence runs as
+an associative scan (parallel on the MXU/VPU).
+
+Decode keeps O(1) state per layer: (conv_state [B, d_conv-1, d_inner],
+ssm_state [B, d_inner, d_state]) — this is why jamba runs the ``long_500k``
+shape that pure-attention models cannot.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Spec
+from .config import MambaConfig, ModelConfig
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    return {
+        "in_proj": Spec((d, 2 * d_in), ("embed", "mlp")),
+        "conv_w": Spec((mc.d_conv, d_in), (None, "mlp")),
+        "conv_b": Spec((d_in,), ("mlp",), init="zeros"),
+        "x_proj": Spec((d_in, dtr + 2 * mc.d_state), ("mlp", None)),
+        "dt_proj": Spec((dtr, d_in), (None, "mlp")),
+        "dt_bias": Spec((d_in,), ("mlp",), init="zeros"),
+        "A_log": Spec((d_in, mc.d_state), ("mlp", None), init="ones"),
+        "D": Spec((d_in,), ("mlp",), init="ones"),
+        "out_proj": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_chunk(h0, abar, bx):
+    """Associative scan of h_t = abar_t * h_{t-1} + bx_t over one chunk.
+
+    abar, bx: [B, Q, d_in, N]; h0: [B, d_in, N].  Returns (hQ, y_states).
+    """
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    # fold h0 into the first element
+    bx = bx.at[:, 0].add(abar[:, 0] * h0)
+    acc_a, acc_b = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    return acc_b[:, -1], acc_b
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv along time. x: [B, S, d_in]; w: [K, d_in]."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out + b, new_state
+
+
+def mamba_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                scan_chunk: int = 128,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None,
+                return_state: bool = False):
+    """x: [B, S, d_model] → [B, S, d_model] (+ updated decode state)."""
+    mc = cfg.mamba
+    B, S, d = x.shape
+    d_in = mc.expand * d
+    dtr = mc.resolved_dt_rank(d)
+    N = mc.d_state
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    xr, new_conv_state = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xr = jax.nn.silu(xr)
+
+    proj = jnp.einsum("bse,ef->bsf", xr, p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"])
+                         + p["dt_bias"])                       # [B,S,d_in]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [d_in, N]
+
+    dt32 = dt.astype(jnp.float32)
+    xr32 = xr.astype(jnp.float32)
+    h0 = (state[1].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, d_in, N), jnp.float32))
+
+    if S == 1:  # decode step: closed-form single update
+        abar = jnp.exp(dt32[:, 0, :, None] * A)                # [B,d_in,N]
+        bx = (dt32[:, 0, :, None] * Bc[:, 0, None, :].astype(jnp.float32)
+              * xr32[:, 0, :, None])
+        h = abar * h0 + bx
+        y = jnp.einsum("ben,bn->be", h, Cc[:, 0].astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32) * xr32[:, 0]
+        y = y[:, None, :]
+        states_h = h
+    else:
+        Q = min(scan_chunk, S)
+        pad = (-S) % Q
+        def padt(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        dtp, xp_, Bp, Cp = map(padt, (dt32, xr32, Bc.astype(jnp.float32),
+                                      Cc.astype(jnp.float32)))
+        nC = dtp.shape[1] // Q
+
+        def chunk_fn(h, inp):
+            dtc, xc, Bc_, Cc_ = inp                            # [B,Q,...]
+            abar = jnp.exp(dtc[..., None] * A)                 # [B,Q,d_in,N]
+            bx = dtc[..., None] * Bc_[:, :, None, :] * xc[..., None]
+            hQ, hs = _ssm_chunk(h, abar, bx)
+            yc = jnp.einsum("bqen,bqn->bqe", hs, Cc_)
+            return hQ, yc
+
+        xs = tuple(a.reshape(B, nC, Q, *a.shape[2:]).swapaxes(0, 1)
+                   for a in (dtp, xp_, Bp, Cp))
+        hF, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(B, nC * Q, d_in)[:, :S]
+        y = y + p["D"].astype(jnp.float32) * xr32
+        states_h = hF
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        return out, (new_conv_state, states_h)
+    return out

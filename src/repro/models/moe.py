@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN with sort-based top-k dispatch (TPU-idiomatic).
+
+Dispatch is the MegaBlocks/GShard-style capacity-bounded gather:
+
+  1. router logits → top-k experts per token,
+  2. flatten (token, k) assignments, sort by expert id,
+  3. rank within expert = position in sorted order − expert segment start,
+  4. scatter tokens into an [E, C, d] buffer (assignments past capacity drop),
+  5. batched expert GEMMs, 6. weighted scatter-add back.
+
+This avoids the [T, E, C] one-hot dispatch tensor (which at 4k tokens × 60
+experts would dominate memory) while staying fully differentiable: gradients
+flow through gathered activations and router weights; indices are integers.
+
+Shared experts (qwen2-moe) run as one dense SwiGLU with a sigmoid gate.
+
+Expert sharding (RunConfig.expert_sharding):
+* ``tensor`` — every expert's d_ff is sharded over "model" (works for any E,
+  e.g. 60 or 40 experts on a 16-way axis);
+* ``expert`` — experts sharded over "model" (E % axis == 0, e.g. jamba's 16),
+  giving expert parallelism with all-to-all dispatch under SPMD.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Spec
+from .config import ModelConfig, RunConfig
+from ..distributed.sharding import with_logical_constraint
+
+
+def moe_specs(cfg: ModelConfig, rc: RunConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    # Two expert-weight layouts (§Perf iterations 4/6):
+    # * E divisible by the 16-wide data axis (jamba 16e): FSDP over the
+    #   EXPERT dim, d unsharded — avoids the batch-unsharding all-reduce of
+    #   full-batch expert hiddens (16-32GB/layer on jamba prefill) that the
+    #   d-on-data layout provokes.
+    # * E not divisible (granite 40e, qwen2 60e): keep FSDP on d — the
+    #   expert-dim layout degrades to dp-replicated experts there, and the
+    #   partitioner then un-shards the dispatch scatter (u32 index planes,
+    #   16GB all-gathers).  Their experts are small; d-on-data is proven.
+    # (Replicating tiny expert stacks over dp was tried and REFUTED: the
+    # backward pass then all-reduces activation-shaped [E,d,B,C] grad
+    # intermediates, 332s of collectives on granite-moe — §Perf iteration 8.)
+    if E % 16 == 0:
+        wl = ("expert", None, "mlp")
+        wl_down = ("expert", "mlp", None)
+    else:
+        wl = (None, "embed", "mlp")
+        wl_down = (None, "mlp", "embed")
+    s = {
+        "router": Spec((d, E), ("embed", None)),
+        "w_gate": Spec((E, d, ff), wl),
+        "w_up": Spec((E, d, ff), wl),
+        "w_down": Spec((E, ff, d), wl_down),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * ff
+        s["shared"] = {
+            "w_gate": Spec((d, sff), ("embed", "mlp")),
+            "w_up": Spec((d, sff), ("embed", "mlp")),
+            "w_down": Spec((sff, d), ("mlp", "embed")),
+            "gate": Spec((d, 1), ("embed", None)),
+        }
+    return s
+
+
+def _dispatch_indices(expert_ids: jax.Array, E: int, capacity: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """expert_ids: [A] flat assignments → (slot index in [E*C], keep mask)."""
+    A = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids)                    # stable
+    sorted_e = expert_ids[order]
+    # rank within expert: position - start of this expert's segment
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(A) - seg_start[sorted_e]
+    rank = jnp.zeros((A,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < capacity
+    slot = expert_ids * capacity + jnp.minimum(rank, capacity - 1)
+    return jnp.where(keep, slot, E * capacity), keep   # E*C = drop bucket
+
+
+def moe_ffn(cfg: ModelConfig, rc: RunConfig, p: dict, x: jax.Array,
+            mesh=None, act_rules: str = "default",
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] → (y: [B, S, d], aux_loss: scalar load-balance loss).
+
+    Dispatch is per-GROUP (group = sequence), GShard-style: every gather /
+    scatter carries the batch dim, so under data-parallel sharding the
+    indices and buffers stay shard-local — no global index matrices, no
+    all-gather of dispatch state (a global-index scatter made XLA
+    materialize [T_global, d] u32 index planes: +70GB/device on jamba).
+
+    Small expert stacks are constrained dp-replicated at USE (classic FSDP:
+    the partitioner all-gathers the weight shards instead of resharding the
+    multi-GB dispatch buffers — §Perf iteration 5).  Large stacks (jamba:
+    19GB/layer) keep sharded weights: gathering activations is cheaper there.
+    """
+    B, S, d = x.shape
+    E, k, ff = cfg.n_experts, cfg.top_k, cfg.d_ff
+    T = B * S
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    expert_bytes = 3 * E * d * ff * 2
+    if rc.moe_weight_gather and expert_bytes < 2e9:
+        # inference: gather weights, keep batch sharded (training would
+        # reduce-scatter a full-size weight grad per microbatch instead)
+        w_gate = with_logical_constraint(w_gate, (None, None, "mlp"),
+                                         mesh, act_rules)
+        w_up = with_logical_constraint(w_up, (None, None, "mlp"),
+                                       mesh, act_rules)
+        w_down = with_logical_constraint(w_down, (None, "mlp", None),
+                                         mesh, act_rules)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)       # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((B, E), jnp.float32)
+    ce = jax.vmap(lambda c, i: c.at[i.reshape(-1)].add(1.0))(ce, expert_ids)
+    aux = E * jnp.sum(me * (ce.sum(0) / (T * k)))
+
+    A = S * k                                             # assignments/group
+    capacity = int(np.ceil(A * rc.capacity_factor / E))
+    capacity = max(capacity, 4)
+
+    flat_e = expert_ids.reshape(B, A).astype(jnp.int32)
+    slot, keep = jax.vmap(
+        lambda e: _dispatch_indices(e, E, capacity))(flat_e)   # [B, A]
+    tok_idx = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)    # [A]
+
+    # scatter tokens into per-group expert buffers (+1 drop row)
+    def scatter_group(xg, sl):
+        buf = jnp.zeros((E * capacity + 1, d), xg.dtype)
+        return buf.at[sl].set(xg[tok_idx])
+    buf = jax.vmap(scatter_group)(x, slot)                # [B, E*C+1, d]
+    eb = buf[:, : E * capacity].reshape(B, E, capacity, d)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", eb, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", eb, w_up)
+    out = jnp.einsum("becf,efd->becd", h, w_down)
+
+    flat_out = out.reshape(B, E * capacity, d)
+
+    def combine_group(fo, sl, kp, gv):
+        g = jnp.where(kp[:, None], fo[jnp.minimum(sl, E * capacity - 1)], 0.0)
+        w = gv.reshape(-1)[:, None].astype(g.dtype)
+        return jnp.zeros((S, d), g.dtype).at[tok_idx].add(g * w)
+    y = jax.vmap(combine_group)(flat_out, slot, keep, gate_vals)  # [B, S, d]
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+        hs = hs * jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        ys = jnp.einsum("bsf,fd->bsd", hs, sp["w_down"])
+        g = jax.nn.sigmoid(jnp.einsum("bsd,do->bso", x, sp["gate"])
+                           .astype(jnp.float32)).astype(ys.dtype)
+        y = y + g * ys
+
+    return y.astype(x.dtype), aux

@@ -1,0 +1,224 @@
+"""xLSTM blocks (mLSTM + sLSTM) [Beck et al., arXiv:2405.04517] — pure JAX.
+
+xlstm-350m interleaves mLSTM blocks (matrix memory C ∈ R^{dh×dh} per head,
+parallelizable, no h-recurrence) with sLSTM blocks (scalar memory, true
+hidden-state recurrence with block-diagonal per-head R).
+
+Both use *exponential gating* with the max-stabilizer state m; training runs
+the time recurrence under chunked ``jax.checkpoint`` (boundary states only),
+decode carries O(1) state — hence xlstm runs ``long_500k`` trivially.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Spec
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.n_heads
+    return {
+        "up_proj": Spec((d, 2 * d_in), ("embed", "mlp")),
+        "conv_w": Spec((4, d_in), (None, "mlp")),
+        "conv_b": Spec((d_in,), ("mlp",), init="zeros"),
+        "wq": Spec((d_in, d_in), ("mlp", "q_heads")),
+        "wk": Spec((d_in, d_in), ("mlp", "q_heads")),
+        "wv": Spec((d_in, d_in), ("mlp", "q_heads")),
+        "w_i": Spec((d_in, H), ("mlp", None)),
+        "w_f": Spec((d_in, H), ("mlp", None)),
+        "norm": Spec((d_in,), ("mlp",), init="ones"),
+        "down_proj": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+class MLSTMState(NamedTuple):
+    conv: jax.Array   # [B, 3, d_in]
+    C: jax.Array      # [B, H, dh, dh]
+    n: jax.Array      # [B, H, dh]
+    m: jax.Array      # [B, H]
+
+
+def _mlstm_step(carry, qkvif):
+    C, n, m = carry
+    q, k, v, it, ft = qkvif           # q,k,v: [B,H,dh]; it,ft: [B,H]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    h = jnp.einsum("bhde,bhe->bhd", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                scan_chunk: int = 128,
+                state: Optional[MLSTMState] = None,
+                return_state: bool = False):
+    B, S, d = x.shape
+    d_in = 2 * d
+    H = cfg.n_heads
+    dh = d_in // H
+
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else \
+        jnp.zeros((B, 3, d_in), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(xm.dtype), xm], axis=1)
+    xc = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(4)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = xp[:, -3:]
+
+    def heads(a):
+        return a.reshape(B, S, H, dh).astype(jnp.float32)
+    q = heads(jnp.einsum("bse,ef->bsf", xc, p["wq"])) / np.sqrt(dh)
+    k = heads(jnp.einsum("bse,ef->bsf", xc, p["wk"])) / np.sqrt(dh)
+    v = heads(jnp.einsum("bse,ef->bsf", xm, p["wv"]))
+    it = jnp.einsum("bse,eh->bsh", xc, p["w_i"]).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xc, p["w_f"]).astype(jnp.float32))
+
+    if state is not None:
+        C0, n0, m0 = state.C.astype(jnp.float32), state.n.astype(jnp.float32), \
+            state.m.astype(jnp.float32)
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    Q = min(scan_chunk, S)
+    pad = (-S) % Q
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    qs, ks, vs, its, fts = map(padt, (q.transpose(0, 1, 2, 3), k, v, it, ft))
+    nC = qs.shape[1] // Q
+
+    def chunk_fn(carry, inp):
+        qs_, ks_, vs_, its_, fts_ = inp   # [B,Q,...]
+        def t_step(c, tup):
+            return _mlstm_step(c, tup)
+        (C, n, m), hs = jax.lax.scan(
+            t_step, carry,
+            tuple(a.swapaxes(0, 1) for a in (qs_, ks_, vs_, its_, fts_)))
+        return (C, n, m), hs.swapaxes(0, 1)   # [B,Q,H,dh]
+
+    xs = tuple(a.reshape(B, nC, Q, *a.shape[2:]).swapaxes(0, 1)
+               for a in (qs, ks, vs, its, fts))
+    (Cf, nf, mf), hs = jax.lax.scan(jax.checkpoint(chunk_fn), (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, nC * Q, d_in)[:, :S]
+
+    # group-norm per head (xLSTM uses multi-head layer norm) then gate
+    hr = h.reshape(B, S, H, dh)
+    mu = hr.mean(-1, keepdims=True)
+    var = hr.var(-1, keepdims=True)
+    hn = ((hr - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d_in)
+    hn = hn * p["norm"].astype(jnp.float32)
+    y = (hn * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    if return_state:
+        return out, MLSTMState(new_conv, Cf, nf, mf)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = Spec((d, d), ("embed", "q_heads"))
+        gates[f"r_{g}"] = Spec((H, dh, dh), (None, None, None), scale=0.5)
+        gates[f"b_{g}"] = Spec((d,), (None,), init="zeros")
+    gates["norm"] = Spec((d,), (None,), init="ones")
+    gates["out_proj"] = Spec((d, d), ("q_heads", "embed"))
+    return gates
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, d]
+    n: jax.Array   # [B, d]
+    m: jax.Array   # [B, d]
+    h: jax.Array   # [B, d]
+
+
+def slstm_layer(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                scan_chunk: int = 128,
+                state: Optional[SLSTMState] = None,
+                return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+
+    # input contributions for all gates (precomputed in parallel)
+    pre = {g: jnp.einsum("bsd,de->bse", x, p[f"w_{g}"]).astype(jnp.float32)
+           + p[f"b_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, m0, h0 = (a.astype(jnp.float32) for a in state)
+
+    R = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def rec(hprev, g):
+        hh = hprev.reshape(B, H, dh)
+        return jnp.einsum("bhd,hde->bhe", hh, R[g]).reshape(B, d)
+
+    def t_step(carry, inp):
+        c, n, m, h = carry
+        pi, pf, pz, po = inp
+        it = pi + rec(h, "i")
+        ft = jax.nn.log_sigmoid(pf + rec(h, "f"))
+        zt = jnp.tanh(pz + rec(h, "z"))
+        ot = jax.nn.sigmoid(po + rec(h, "o"))
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    Q = min(scan_chunk, S)
+    pad = (-S) % Q
+    xs_all = tuple(jnp.pad(pre[g], ((0, 0), (0, pad), (0, 0)))
+                   for g in ("i", "f", "z", "o"))
+    nC = xs_all[0].shape[1] // Q
+
+    def chunk_fn(carry, inp):
+        carry, hs = jax.lax.scan(
+            t_step, carry, tuple(a.swapaxes(0, 1) for a in inp))
+        return carry, hs.swapaxes(0, 1)
+
+    xs = tuple(a.reshape(B, nC, Q, d).swapaxes(0, 1) for a in xs_all)
+    carryF, hs = jax.lax.scan(jax.checkpoint(chunk_fn), (c0, n0, m0, h0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, nC * Q, d)[:, :S]
+
+    hr = h.reshape(B, S, H, dh)
+    mu = hr.mean(-1, keepdims=True)
+    var = hr.var(-1, keepdims=True)
+    hn = ((hr - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    hn = hn * p["norm"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", hn.astype(x.dtype), p["out_proj"])
+    if return_state:
+        return out, SLSTMState(*carryF)
+    return out

@@ -1,0 +1,291 @@
+"""Optimizers: AdamW, AdamW-8bit (block-quantized first moment), Adafactor.
+
+All pure-functional: ``init(params) -> state``, ``update(grads, state, params,
+step) -> (new_params, new_state)``.  The 8-bit variant is the
+distributed-optimization trick that lets jamba-398B fit a single 256-chip pod
+(see EXPERIMENTS.md §Dry-run): m is stored int8 with per-block scales
+(block = 256), v in bfloat16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adamw8bit | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (for 8-bit moments)
+#
+# Blocks run along the LAST axis only, so quantized moments keep the param's
+# leading dims and inherit its sharding (the whole point for 398B models).
+# ---------------------------------------------------------------------------
+
+QBLOCK = 256
+
+
+def _q8_shapes(shape) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    last = shape[-1] if shape else 1
+    padded = -(-last // QBLOCK) * QBLOCK
+    return (tuple(shape[:-1]) + (padded,),
+            tuple(shape[:-1]) + (padded // QBLOCK,))
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    shape = x.shape
+    qshape, sshape = _q8_shapes(shape)
+    pad = qshape[-1] - shape[-1]
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blk = xp.reshape(sshape + (QBLOCK,))
+    amax = jnp.max(jnp.abs(blk), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(qshape), scale[..., 0].astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    sshape = scale.shape
+    blk = q.reshape(sshape + (QBLOCK,)).astype(jnp.float32) * scale[..., None]
+    return blk.reshape(sshape[:-1] + (-1,))[..., : shape[-1]]
+
+
+# ---------------------------------------------------------------------------
+# AdamW family
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    m_scale: Optional[PyTree]   # None for fp32 m
+
+
+def init_adam(params: PyTree, kind: str = "adamw") -> AdamState:
+    if kind == "adamw8bit":
+        def mk(p):
+            q, s = _q8(jnp.zeros_like(p, jnp.float32))
+            return q, s
+        qs = jax.tree.map(mk, params)
+        m = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+        sc = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        return AdamState(m, v, sc)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(m, v, None)
+
+
+def adam_update(cfg: OptConfig, grads: PyTree, state: AdamState,
+                params: PyTree, step: jax.Array
+                ) -> Tuple[PyTree, AdamState]:
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1 - cfg.b1 ** t
+    c2 = 1 - cfg.b2 ** t
+    eight_bit = state.m_scale is not None
+
+    def upd(p, g, m, v, ms=None):
+        g32 = g.astype(jnp.float32)
+        m32 = _dq8(m, ms, p.shape) if eight_bit else m
+        v32 = v.astype(jnp.float32)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        upd_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        if eight_bit:
+            qm, qs = _q8(m32)
+            return new_p, qm, qs, v32.astype(jnp.bfloat16)
+        return new_p, m32, None, v32
+
+    if eight_bit:
+        out = jax.tree.map(upd, params, grads, state.m, state.v, state.m_scale)
+        leaves = lambda i: jax.tree.map(lambda t: t[i], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        return leaves(0), AdamState(leaves(1), leaves(3), leaves(2))
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaves = lambda i: jax.tree.map(lambda t: t[i], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), AdamState(leaves(1), leaves(3), None)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for >=2D params)
+# ---------------------------------------------------------------------------
+
+class FactorState(NamedTuple):
+    vr: PyTree
+    vc: PyTree
+    v: PyTree      # unfactored fallback for <2D
+
+
+def init_adafactor(params: PyTree) -> FactorState:
+    def rows(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2
+                else jnp.zeros((1,), jnp.float32))
+
+    def cols(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2 else jnp.zeros((1,), jnp.float32))
+
+    def full(p):
+        return (jnp.zeros((1,), jnp.float32) if p.ndim >= 2
+                else jnp.zeros(p.shape, jnp.float32))
+    return FactorState(jax.tree.map(rows, params), jax.tree.map(cols, params),
+                       jax.tree.map(full, params))
+
+
+def adafactor_update(cfg: OptConfig, grads: PyTree, state: FactorState,
+                     params: PyTree, step: jax.Array
+                     ) -> Tuple[PyTree, FactorState]:
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** -0.8
+
+    def upd(p, g, vr, vc, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if p.ndim >= 2:
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, axis=-1,
+                                            keepdims=True)[..., None], 1e-30))
+            u = g32 / jnp.sqrt(denom + 1e-30)
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            u = g32 / jnp.sqrt(v + 1e-30)
+        # update clipping (Shazeer & Stern)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc, v
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc, state.v)
+    leaves = lambda i: jax.tree.map(lambda tup: tup[i], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), FactorState(leaves(1), leaves(2), leaves(3))
+
+
+# ---------------------------------------------------------------------------
+# unified front-end
+# ---------------------------------------------------------------------------
+
+def init_opt(cfg: OptConfig, params: PyTree):
+    if cfg.kind in ("adamw", "adamw8bit"):
+        return init_adam(params, cfg.kind)
+    if cfg.kind == "adafactor":
+        return init_adafactor(params)
+    raise ValueError(cfg.kind)
+
+
+def abstract_opt(cfg: OptConfig, abstract_params: PyTree):
+    """ShapeDtypeStruct mirror of ``init_opt`` (dry-run: no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    if cfg.kind == "adamw":
+        m = jax.tree.map(lambda p: sds(p.shape, jnp.float32), abstract_params)
+        v = jax.tree.map(lambda p: sds(p.shape, jnp.float32), abstract_params)
+        return AdamState(m, v, None)
+    if cfg.kind == "adamw8bit":
+        m = jax.tree.map(lambda p: sds(_q8_shapes(p.shape)[0], jnp.int8),
+                         abstract_params)
+        sc = jax.tree.map(lambda p: sds(_q8_shapes(p.shape)[1], jnp.float32),
+                          abstract_params)
+        v = jax.tree.map(lambda p: sds(p.shape, jnp.bfloat16), abstract_params)
+        return AdamState(m, v, sc)
+    if cfg.kind == "adafactor":
+        def rows(p):
+            return (sds(p.shape[:-1], jnp.float32) if len(p.shape) >= 2
+                    else sds((1,), jnp.float32))
+
+        def cols(p):
+            return (sds(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if len(p.shape) >= 2 else sds((1,), jnp.float32))
+
+        def full(p):
+            return (sds((1,), jnp.float32) if len(p.shape) >= 2
+                    else sds(p.shape, jnp.float32))
+        return FactorState(jax.tree.map(rows, abstract_params),
+                           jax.tree.map(cols, abstract_params),
+                           jax.tree.map(full, abstract_params))
+    raise ValueError(cfg.kind)
+
+
+def opt_logical(cfg: OptConfig, param_logical: PyTree):
+    """Logical axes for the opt state (mirrors ``abstract_opt``).
+
+    Moment tensors inherit the param's logical axes (same rank); factored /
+    scale tensors inherit sliced axes; non-divisible dims fall back to
+    replication inside ``logical_to_pspec``'s divisibility check.
+    """
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    ident = lambda lg: lg
+    if cfg.kind == "adamw":
+        m = jax.tree.map(ident, param_logical, is_leaf=is_leaf)
+        return AdamState(m, m, None)
+    if cfg.kind == "adamw8bit":
+        m = jax.tree.map(ident, param_logical, is_leaf=is_leaf)
+        return AdamState(m, m, m)
+    if cfg.kind == "adafactor":
+        rows = jax.tree.map(lambda lg: lg[:-1] or (None,), param_logical,
+                            is_leaf=is_leaf)
+        cols = jax.tree.map(lambda lg: (lg[:-2] + lg[-1:]) if len(lg) >= 2
+                            else (None,), param_logical, is_leaf=is_leaf)
+        full = jax.tree.map(lambda lg: (None,) if len(lg) >= 2 else lg,
+                            param_logical, is_leaf=is_leaf)
+        return FactorState(rows, cols, full)
+    raise ValueError(cfg.kind)
+
+
+def apply_opt(cfg: OptConfig, grads: PyTree, state, params: PyTree,
+              step: jax.Array):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if cfg.kind in ("adamw", "adamw8bit"):
+        new_p, new_s = adam_update(cfg, grads, state, params, step)
+    else:
+        new_p, new_s = adafactor_update(cfg, grads, state, params, step)
+    return new_p, new_s, gnorm

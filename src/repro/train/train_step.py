@@ -1,0 +1,136 @@
+"""Train step: loss, gradient accumulation (microbatching), optimizer apply.
+
+Microbatching reshapes the global batch [B, ...] into [n_micro, B/n_micro,
+...] and accumulates grads with a ``lax.scan`` — the standard memory/compute
+trade for big models (jamba-398B trains with n_micro >= 8).  Compute/comm
+overlap comes for free: XLA overlaps the per-microbatch reduce-scatter of
+grads with the next microbatch's compute when grads are sharded (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, RunConfig
+from ..models.model import Model, cross_entropy
+from ..optim.optimizer import OptConfig, apply_opt
+
+PyTree = Any
+
+MOE_AUX_COEF = 0.01
+
+
+def make_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Abstract input batch for this architecture (ShapeDtypeStructs)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if cfg.family == "encoder":
+        return {
+            "input_embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), f32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), f32),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), f32)
+    return out
+
+
+def batch_logical_axes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    if cfg.family == "encoder":
+        return {"input_embeds": ("batch", "seq", None),
+                "labels": ("batch", "seq"), "mask": ("batch", "seq")}
+    out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = ("batch", None, None)
+    return out
+
+
+def loss_fn(model: Model, params: PyTree, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cfg = model.cfg
+    if cfg.family == "encoder":
+        loss, aux = model.loss(params, None, batch["labels"],
+                               mask=batch.get("mask"),
+                               input_embeds=batch["input_embeds"])
+    else:
+        loss, aux = model.loss(params, batch["tokens"], batch["labels"],
+                               patch_embeds=batch.get("patch_embeds"))
+    total = loss + MOE_AUX_COEF * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+    return {k: f(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics)."""
+    rc = model.rc
+
+    def grads_of(params, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            functools.partial(loss_fn, model), has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, step):
+        n = rc.microbatches
+        gdt = jnp.dtype(rc.grad_dtype)
+        if n > 1:
+            micro = _split_micro(batch, n)
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(gdt),
+                                     g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            m0 = {"loss": jnp.float32(0), "aux": jnp.float32(0)}
+            (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m / n, metrics)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        new_params, new_opt, gnorm = apply_opt(opt_cfg, grads, opt_state,
+                                               params, step)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        cfg = model.cfg
+        if cfg.family == "encoder":
+            logits, _ = model.forward(params, None,
+                                      input_embeds=batch["input_embeds"])
+            return logits
+        logits, state = model.prefill(params, batch["tokens"],
+                                      patch_embeds=batch.get("patch_embeds"))
+        return logits, state
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step against a dense KV/SSM cache (dry-run `serve_step`)."""
+    def serve_step(params, state, tokens, kv_len):
+        return model.decode_step(params, state, tokens, kv_len)
+    return serve_step

@@ -1,0 +1,132 @@
+"""Fault-tolerant training loop.
+
+Fault-tolerance posture (designed for 1000+ nodes, exercised on CPU tests):
+
+* **checkpoint/restart** — async atomic checkpoints every ``ckpt_every``
+  steps (params, opt state, data-pipeline state, step); ``Trainer.run``
+  auto-resumes from the newest complete checkpoint, so a killed process
+  (node failure) loses at most ``ckpt_every`` steps.
+* **elastic rescale**   — restore maps leaves onto the *current* mesh's
+  shardings (see Checkpointer.restore), so the same checkpoint continues on
+  a different device count after failures shrink the fleet.
+* **straggler mitigation** — per-step wall times feed an EWMA watchdog; steps
+  slower than ``straggler_factor``× the EWMA are logged and counted.  On real
+  fleets this signal drives hot-spare swap-in; here it is surfaced in metrics
+  and tested via injected delays.
+* **failure injection**  — ``failure_hook(step)`` raising ``SimulatedFailure``
+  exercises the crash/restore path in integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..data.pipeline import DataPipeline, PipelineConfig
+from ..models.model import Model
+from ..optim.optimizer import OptConfig, init_opt
+from .train_step import make_train_step
+
+PyTree = Any
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 2
+    log_every: int = 10
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: OptConfig, tc: TrainerConfig,
+                 pipeline: DataPipeline,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 param_shardings: Optional[PyTree] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.tc = tc
+        self.pipeline = pipeline
+        self.failure_hook = failure_hook
+        self.param_shardings = param_shardings
+        self.ckpt = Checkpointer(tc.ckpt_dir, keep=tc.keep)
+        self.train_step = jax.jit(make_train_step(model, opt_cfg),
+                                  donate_argnums=(0, 1))
+        self.metrics_log: list = []
+        self.straggler_steps: list = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.model.init(seed)
+        if self.param_shardings is not None:
+            params = jax.tree.map(jax.device_put, params,
+                                  self.param_shardings)
+        opt_state = init_opt(self.opt_cfg, params)
+        return params, opt_state, 0
+
+    def try_restore(self):
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        params0 = self.model.init(0)   # structure donor
+        opt0 = init_opt(self.opt_cfg, params0)
+        tree, extras = self.ckpt.restore(
+            step, target={"params": params0, "opt": opt0})
+        self.pipeline.restore(extras["pipeline"])
+        return tree["params"], tree["opt"], int(extras["step"])
+
+    # ------------------------------------------------------------------
+    def run(self, seed: int = 0) -> Dict[str, Any]:
+        restored = self.try_restore()
+        if restored is not None:
+            params, opt_state, start = restored
+        else:
+            params, opt_state, start = self.init_state(seed)
+            self.pipeline.restore({"step": start})
+
+        ewma: Optional[float] = None
+        executed = 0
+        step = start
+        for step in range(start, self.tc.total_steps):
+            if self.failure_hook is not None:
+                self.failure_hook(step)
+            batch = next(self.pipeline)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch, jax.numpy.int32(step))
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            executed += 1
+            if executed == 1:
+                pass          # first step pays compile; never seeds the ewma
+            elif ewma is None:
+                ewma = dt
+            else:
+                if dt > self.tc.straggler_factor * ewma:
+                    self.straggler_steps.append((step, dt, ewma))
+                ewma = 0.9 * ewma + 0.1 * dt
+            if step % self.tc.log_every == 0 or step == self.tc.total_steps - 1:
+                self.metrics_log.append(dict(step=step, time=dt, **metrics))
+            if (step + 1) % self.tc.ckpt_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt": opt_state},
+                               extras={"step": step + 1,
+                                       "pipeline": self.pipeline.state()})
+        self.ckpt.save(self.tc.total_steps,
+                       {"params": params, "opt": opt_state},
+                       extras={"step": self.tc.total_steps,
+                               "pipeline": self.pipeline.state()},
+                       blocking=True)
+        return {"params": params, "opt": opt_state,
+                "metrics": self.metrics_log,
+                "stragglers": self.straggler_steps}

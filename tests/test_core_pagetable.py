@@ -1,0 +1,120 @@
+"""Page-table / contiguity semantics against the paper's own worked examples."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Mapping, aligned_vpn, alignment_class, compute_runs,
+                        contiguity_chunks, contiguity_histogram, covers,
+                        determine_k, f_alignment, fill_select, make_mapping,
+                        stored_contiguity)
+from repro.core.aligned import Entry, REGULAR, aligned_lookup
+
+# The paper's Figure 4 page table: VPN -> PPN (K = {1, 2, 3}).
+FIG4_PPN = [0x8, 0x9, 0x2, 0x0, 0x4, 0x5, 0x6, 0x3,
+            0xA, 0xB, 0xC, 0xD, 0xE, 0xF, 0x1, 0x7]
+
+
+@pytest.fixture(scope="module")
+def fig4():
+    return make_mapping(np.array(FIG4_PPN, dtype=np.int64), name="fig4")
+
+
+class TestFig4:
+    def test_chunks(self, fig4):
+        # "three contiguity chunks occur ... their sizes are 2, 3 and 6"
+        sizes = sorted(s for _, s in contiguity_chunks(fig4) if s > 1)
+        assert sizes == [2, 3, 6]
+
+    def test_chunk_positions(self, fig4):
+        chunks = dict(contiguity_chunks(fig4))
+        assert chunks[0] == 2      # VPN 0: chunk of 2
+        assert chunks[4] == 3      # VPN 4: chunk of 3
+        assert chunks[8] == 6      # VPN 8: chunk of 6
+
+    def test_alignment_classes(self, fig4):
+        # Rightward Compatible Rule (paper's examples)
+        K = (3, 2, 1)
+        assert alignment_class(8, K) == 3
+        assert alignment_class(4, K) == 2
+        assert alignment_class(6, K) == 1
+        assert alignment_class(0, K) == 3
+        assert alignment_class(5, K) == REGULAR
+
+    def test_stored_contiguity(self, fig4):
+        # Fig 4 annotations: VPN 0 (3-bit) -> 2; VPN 4 (2-bit) -> 3;
+        # VPN 8 (3-bit) -> 6 "completely covering the chunk of size 6"
+        assert stored_contiguity(fig4, 0, 3) == 2
+        assert stored_contiguity(fig4, 4, 2) == 3
+        assert stored_contiguity(fig4, 8, 3) == 6
+        assert stored_contiguity(fig4, 10, 1) == 2
+
+    def test_fig5_fill(self, fig4):
+        # Fig 5: translating VPN 13 fills the 3-bit aligned entry at VPN 8
+        # (contiguity 6 covers diff 5), preferred over the 2-bit at VPN 12.
+        e = fill_select(fig4, 13, K=(3, 2, 1))
+        assert (e.tag, e.kcls, e.contiguity) == (8, 3, 6)
+        assert e.ppn + (13 - 8) == FIG4_PPN[13]
+
+    def test_fig5_lookup(self, fig4):
+        e = fill_select(fig4, 13, K=(3, 2, 1))
+        ppn, probes, hit_k = aligned_lookup([e], 11, K=(3, 2, 1), first_k=3)
+        assert ppn == FIG4_PPN[11] and probes == 1 and hit_k == 3
+        # VPN 14 is NOT covered (chunk of 6 = VPNs 8..13)
+        ppn, _, _ = aligned_lookup([e], 14, K=(3, 2, 1))
+        assert ppn is None
+
+
+class TestDetermineK:
+    def test_size_range_table(self):
+        # Table 1 boundaries
+        for size, k in [(2, 4), (16, 4), (17, 6), (64, 6), (65, 7), (128, 7),
+                        (129, 8), (256, 8), (257, 9), (512, 9), (513, 10),
+                        (1024, 10), (1025, 11), (10**6, 11)]:
+            assert f_alignment(size) == k, size
+        assert f_alignment(1) == -1
+
+    def test_paper_example(self):
+        # §3.3: "if the memory mapping is filled with the contiguity chunks of
+        # size 16 and 128 that cover more than 90% of contiguous pages,
+        # K = {4, 7} will be returned"
+        hist = {16: 100, 128: 100, 2: 1}
+        assert sorted(determine_k(hist)) == [4, 7]
+
+    def test_theta_stops(self):
+        hist = {16: 1000, 64: 1}   # k=4 alone covers ~99.6%
+        assert determine_k(hist, theta=0.9) == [4]
+
+    def test_psi_bound(self):
+        hist = {2: 100, 32: 100, 100: 120, 200: 90, 400: 70, 600: 60}
+        assert len(determine_k(hist, theta=1.0, psi=4)) <= 4
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=30),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_run_extraction_properties(sizes, seed):
+    """compute_runs recovers exactly the chunks a random layout creates."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(sizes))
+    ppn = []
+    base = 0
+    bases = {}
+    for idx in order:
+        bases[idx] = base
+        base += sizes[idx] + 1          # +1 gap: chunks never merge
+    for idx, s in enumerate(sizes):
+        ppn.extend(range(bases[idx], bases[idx] + s))
+    m = make_mapping(np.array(ppn, dtype=np.int64))
+    assert sorted(s for _, s in contiguity_chunks(m)) == sorted(sizes)
+    # contiguity field: within a chunk it counts down to 1
+    for start, size in contiguity_chunks(m):
+        got = m.contiguity(np.arange(start, start + size))
+        assert list(got) == list(range(size, 0, -1))
+
+
+@given(st.integers(0, 10**6), st.integers(1, 11))
+@settings(max_examples=200, deadline=None)
+def test_aligned_vpn_properties(vpn, k):
+    vk = aligned_vpn(vpn, k)
+    assert vk % (1 << k) == 0
+    assert 0 <= vpn - vk < (1 << k)

@@ -1,0 +1,174 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention_gqa
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.ops import (build_descriptors, dma_stats,
+                                               paged_attention)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kvcache.allocator import PagedKVAllocator
+from repro.kvcache.block_table import (assign_classes, choose_kernel_classes,
+                                       window_coverage)
+
+TOL = dict(atol=5e-5, rtol=5e-5)
+TOL_BF16 = dict(atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _random_pool_case(rng, B, H, KVH, D, T, n_pages, frag: float,
+                      dtype=jnp.float32):
+    """Build block tables with tunable fragmentation."""
+    alloc = PagedKVAllocator(n_pages, max_order=5,
+                             alloc_policy="page" if frag > 0.9
+                             else "buddy_best")
+    # churn
+    for i in range(int(frag * 10)):
+        alloc.allocate(1000 + i, int(rng.integers(1, 6)))
+    for i in range(int(frag * 10)):
+        if rng.random() < 0.5:
+            alloc.free(1000 + i)
+    lens, tables = [], []
+    max_pages = n_pages // 2
+    for b in range(B):
+        L = int(rng.integers(T, T * max_pages // 2))
+        alloc.allocate(b, -(-L // T))
+        lens.append(L)
+        tables.append(alloc.block_table(b, max_pages))
+    bt = np.stack(tables)
+    kp = jnp.asarray(rng.standard_normal((n_pages, T, KVH, D)), dtype)
+    vp = jnp.asarray(rng.standard_normal((n_pages, T, KVH, D)), dtype)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), dtype)
+    return q, kp, vp, bt, jnp.asarray(lens, jnp.int32)
+
+
+@pytest.mark.parametrize("B,H,KVH,D,T", [
+    (2, 4, 2, 64, 16),
+    (3, 8, 8, 32, 8),     # MHA
+    (1, 8, 1, 128, 16),   # MQA
+])
+@pytest.mark.parametrize("K_classes", [(), (2,), (3, 1)])
+def test_paged_attention_shapes(rng, B, H, KVH, D, T, K_classes):
+    q, kp, vp, bt, lens = _random_pool_case(rng, B, H, KVH, D, T, 128, 0.3)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), lens, T)
+    out = paged_attention(q, kp, vp, bt, lens, page_size=T,
+                          K_classes=K_classes, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, TOL),
+                                       (jnp.bfloat16, TOL_BF16)])
+def test_paged_attention_dtypes(rng, dtype, tol):
+    q, kp, vp, bt, lens = _random_pool_case(rng, 2, 4, 2, 64, 16, 128, 0.2,
+                                            dtype)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), lens, 16)
+    out = paged_attention(q, kp, vp, bt, lens, page_size=16, K_classes=(2,),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@given(frag=st.floats(0.0, 1.0), seed=st.integers(0, 10_000),
+       psi=st.integers(1, 4))
+@settings(max_examples=12, deadline=None)
+def test_paged_attention_any_fragmentation(frag, seed, psi):
+    """Property: coalesced result is exact for ANY contiguity pattern and
+    any K chosen by Algorithm 3."""
+    rng = np.random.default_rng(seed)
+    q, kp, vp, bt, lens = _random_pool_case(rng, 2, 4, 2, 32, 8, 64, frag)
+    alloc_hist = {}
+    K = choose_kernel_classes(
+        {int(s): 1 for s in np.diff(np.flatnonzero(
+            np.diff(np.concatenate([[-9], bt[0][bt[0] >= 0]])) != 1))
+         if s > 0} or {1: 1}, psi=psi)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), lens, 8)
+    out = paged_attention(q, kp, vp, bt, lens, page_size=8,
+                          K_classes=tuple(K), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_descriptor_partition_property(rng):
+    """Class windows partition the mapped pages: every mapped page is read by
+    exactly one class pass."""
+    _, _, _, bt, _ = _random_pool_case(rng, 3, 4, 2, 32, 8, 128, 0.5)
+    K = [3, 2, 1]
+    for b in range(bt.shape[0]):
+        asg = assign_classes(bt[b], K)
+        covered = np.zeros(bt.shape[1], bool)
+        for k, take in asg.items():
+            w = 1 << k
+            pages = np.repeat(take, w)[: bt.shape[1]] if k else take
+            assert not (covered & pages).any(), "double-read"
+            covered |= pages
+        np.testing.assert_array_equal(covered, bt[b] >= 0)
+
+
+def test_window_coverage_requires_alignment():
+    # physically consecutive but misaligned start ⇒ not class-2 coverable
+    bt = np.array([5, 6, 7, 8], np.int64)        # starts at 5 (not %4==0)
+    assert not window_coverage(bt, 2)[0]
+    bt = np.array([8, 9, 10, 11], np.int64)
+    assert window_coverage(bt, 2)[0]
+
+
+def test_dma_reduction_monotone(rng):
+    """More contiguity ⇒ at least as few descriptors."""
+    q, kp, vp, bt_frag, lens = _random_pool_case(rng, 2, 4, 2, 32, 8, 128, 1.0)
+    q, kp, vp, bt_cont, lens = _random_pool_case(rng, 2, 4, 2, 32, 8, 128, 0.0)
+    K = [3, 2, 1]
+    frag = dma_stats(bt_frag, K)
+    cont = dma_stats(bt_cont, K)
+    assert cont["reduction"] >= frag["reduction"]
+    assert cont["reduction"] > 0.4
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KVH,D,causal,bq,bk", [
+    (2, 128, 4, 2, 64, True, 64, 64),
+    (1, 200, 4, 4, 32, True, 64, 32),     # ragged block boundary
+    (2, 96, 8, 2, 64, False, 32, 64),
+    (1, 64, 2, 1, 128, True, 64, 64),     # MQA, D=128
+])
+def test_flash_attention(rng, B, S, H, KVH, D, causal, bq, bk):
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, D)), jnp.float32)
+    out = flash_attention_gqa(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    kr = jnp.repeat(k, H // KVH, 2)
+    vr = jnp.repeat(v, H // KVH, 2)
+    ref = attention_ref(q, kr, vr, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@given(s=st.integers(8, 160), bq=st.sampled_from([8, 32, 64]),
+       bk=st.sampled_from([8, 32, 64]), seed=st.integers(0, 999))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_block_shape_sweep(s, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, s, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, 2, 32)), jnp.float32)
+    out = flash_attention_gqa(q, k, v, causal=True, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_flash_matches_chunked_jnp_path(rng):
+    """The model's portable chunked attention and the Pallas kernel agree."""
+    from repro.models.layers import chunked_attention
+    q = jnp.asarray(rng.standard_normal((2, 96, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 96, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 96, 2, 32)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    b = flash_attention_gqa(q, k, v, causal=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)

@@ -1,0 +1,145 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finite checks; decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model, RunConfig, init_decode_state, padded_vocab
+from repro.optim import OptConfig, init_opt
+from repro.train import make_train_step
+from repro.data import DataPipeline, PipelineConfig
+
+RC = RunConfig(attn_q_chunk=32, attn_kv_chunk=32, scan_chunk=16)
+
+
+def _batch(cfg, B, S, rng):
+    if cfg.family == "encoder":
+        return {"input_embeds": jnp.asarray(
+                    rng.standard_normal((B, S, cfg.d_model)), jnp.float32),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+                "mask": jnp.ones((B, S), jnp.float32)}
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+           "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg, RC)
+    params = model.init(0)
+    B, S = 2, 48
+    b = _batch(cfg, B, S, rng)
+    logits, aux = jax.jit(model.forward)(
+        params, b.get("tokens"),
+        patch_embeds=b.get("patch_embeds"),
+        input_embeds=b.get("input_embeds"))
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg, RC)
+    params = model.init(0)
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt(oc, params)
+    step = jax.jit(make_train_step(model, oc))
+    b = _batch(cfg, 2, 32, rng)
+    # step 1: step 0 of a 1-step warmup has lr == 0 (params must not move!)
+    p2, o2, metrics = step(params, opt, b, jnp.int32(1))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(bool(jnp.any(a != b_)) for a, b_ in
+                zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "hubert-xlarge"])
+def test_decode_matches_forward(arch, rng):
+    """Greedy decode over a prefix must equal teacher-forced forward argmax:
+    the strongest cheap consistency check between cache and full paths."""
+    cfg = get_config(arch, reduced=True)
+    # f32 for tight tolerance; huge capacity factor so the MoE dispatch drops
+    # nothing (forward dispatches per 24-token group, decode per 1 token —
+    # capacity drops are the one legitimate forward/decode divergence).
+    model = Model(cfg, RC.replace(compute_dtype="float32",
+                                  capacity_factor=32.0))
+    params = model.init(0)
+    B, S = 1, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    pe = (jnp.asarray(rng.standard_normal((B, cfg.n_patches, cfg.d_model))
+                      * 0.02, jnp.float32) if cfg.family == "vlm" else None)
+    logits, _ = jax.jit(model.forward)(params, toks, patch_embeds=pe)
+
+    # replay through decode_step one token at a time
+    state = init_decode_state(cfg, RC, B, S + 4, jnp.float32)
+    dec = jax.jit(model.decode_step)
+    outs = []
+    # feed the true tokens (teacher forcing) so positions match
+    if cfg.family == "vlm":
+        # decode path has no patch injection for the prefix; skip strict
+        # equality, just run the steps for finiteness
+        for t in range(4):
+            lg, state = dec(params, state, toks[:, t:t + 1],
+                            jnp.full((B,), t, jnp.int32))
+            assert bool(jnp.isfinite(lg).all())
+        return
+    for t in range(S):
+        lg, state = dec(params, state, toks[:, t:t + 1],
+                        jnp.full((B,), t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(logits), atol=2e-3, rtol=2e-3)
+
+
+def test_loss_decreases_dense(rng):
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    model = Model(cfg, RC)
+    oc = OptConfig(lr=3e-3, warmup_steps=1, total_steps=40)
+    params = model.init(0)
+    opt = init_opt(oc, params)
+    step = jax.jit(make_train_step(model, oc))
+    pc = PipelineConfig(batch=4, seq=32, seed=1)
+    losses = []
+    from repro.data.pipeline import _batch_at
+    for i in range(12):
+        b = {k: jnp.asarray(v) for k, v in _batch_at(cfg, pc, 0).items()}
+        params, opt, m = step(params, opt, b, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "jamba-1.5-large-398b"])
+def test_chunked_prefill_matches_full(arch, rng):
+    """Sarathi-style chunked prefill == single-pass prefill (logits+state)."""
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg, RC.replace(compute_dtype="float32",
+                                  capacity_factor=32.0))
+    params = model.init(0)
+    B, S = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    lg_full, st_full = jax.jit(model.prefill)(params, toks)
+    lg_c, st_c = jax.jit(lambda p, t: model.prefill_chunked(
+        p, t, n_chunks=4))(params, toks)
+    np.testing.assert_allclose(np.asarray(lg_c), np.asarray(lg_full),
+                               atol=3e-3, rtol=3e-3)
+    # decode states agree (caches compared over the filled prefix)
+    for pos, st in st_full.items():
+        for key, val in st.items():
+            got = np.asarray(st_c[pos][key], np.float32)
+            want = np.asarray(val, np.float32)
+            if key in ("k", "v"):
+                got, want = got[:, :, :S], want[:, :, :S]
+            np.testing.assert_allclose(got, want, atol=3e-3, rtol=3e-3)

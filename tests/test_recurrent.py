@@ -1,0 +1,98 @@
+"""Recurrent layers: chunked-parallel prefill == step-by-step decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model, RunConfig
+from repro.models.config import MambaConfig, ModelConfig
+from repro.models.mamba import mamba_layer, mamba_specs
+from repro.models.xlstm import (MLSTMState, SLSTMState, mlstm_layer,
+                                mlstm_specs, slstm_layer, slstm_specs)
+from repro.models.common import init_params
+
+
+def _params(specs, seed=0):
+    return init_params(specs, seed=seed, dtype="float32")
+
+
+CFG = ModelConfig(name="t", family="hybrid", n_layers=1, d_model=32,
+                  n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=64,
+                  mamba=MambaConfig(d_state=4, d_conv=4, expand=2))
+XCFG = ModelConfig(name="x", family="xlstm", n_layers=1, d_model=32,
+                   n_heads=4, n_kv_heads=4, head_dim=8, d_ff=0, vocab=64)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_mamba_chunked_equals_sequential(rng, chunk):
+    """Chunk size must not change the result (checkpoint boundaries only)."""
+    p = _params(mamba_specs(CFG))
+    x = jnp.asarray(rng.standard_normal((2, 48, 32)) * 0.3, jnp.float32)
+    full = mamba_layer(CFG, p, x, scan_chunk=48)
+    chunked = mamba_layer(CFG, p, x, scan_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_prefill_equals_decode(rng):
+    """Prefill final state == state after token-by-token decode; decode
+    outputs match the parallel outputs."""
+    p = _params(mamba_specs(CFG))
+    x = jnp.asarray(rng.standard_normal((1, 12, 32)) * 0.3, jnp.float32)
+    full, (conv_f, ssm_f) = mamba_layer(CFG, p, x, scan_chunk=4,
+                                        return_state=True)
+    state = None
+    outs = []
+    for t in range(12):
+        o, state = mamba_layer(CFG, p, x[:, t:t + 1], state=state,
+                               return_state=True)
+        outs.append(o[:, 0])
+    seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state[1]), np.asarray(ssm_f),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mlstm_prefill_equals_decode(rng):
+    p = _params(mlstm_specs(XCFG))
+    x = jnp.asarray(rng.standard_normal((1, 10, 32)) * 0.3, jnp.float32)
+    full, st_f = mlstm_layer(XCFG, p, x, scan_chunk=5, return_state=True)
+    state = None
+    outs = []
+    for t in range(10):
+        o, state = mlstm_layer(XCFG, p, x[:, t:t + 1], state=state,
+                               return_state=True)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state.C), np.asarray(st_f.C),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_slstm_prefill_equals_decode(rng):
+    p = _params(slstm_specs(XCFG))
+    x = jnp.asarray(rng.standard_normal((1, 9, 32)) * 0.3, jnp.float32)
+    full, st_f = slstm_layer(XCFG, p, x, scan_chunk=3, return_state=True)
+    state = None
+    outs = []
+    for t in range(9):
+        o, state = slstm_layer(XCFG, p, x[:, t:t + 1], state=state,
+                               return_state=True)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state.c), np.asarray(st_f.c),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_state_is_o1(rng):
+    """Decode state size is independent of sequence length (the reason
+    jamba/xlstm run long_500k)."""
+    p = _params(mamba_specs(CFG))
+    for S in (8, 64):
+        x = jnp.asarray(rng.standard_normal((1, S, 32)), jnp.float32)
+        _, (conv, ssm) = mamba_layer(CFG, p, x, return_state=True)
+        assert ssm.shape == (1, 64, 4)
+        assert conv.shape[1] == 3

@@ -1,0 +1,170 @@
+"""Optimizers, gradient compression, trainer fault tolerance, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import DataPipeline, PipelineConfig
+from repro.models import Model, RunConfig
+from repro.optim import OptConfig, apply_opt, init_opt
+from repro.optim.optimizer import _dq8, _q8
+from repro.train import SimulatedFailure, Trainer, TrainerConfig
+
+RC = RunConfig(attn_q_chunk=32, attn_kv_chunk=32, scan_chunk=16)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizer_minimizes_quadratic(kind):
+    oc = OptConfig(kind=kind, lr=0.1, warmup_steps=0, total_steps=200,
+                   weight_decay=0.0, clip_norm=1e9)
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((8, 16)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 16), jnp.float32)}
+    state = init_opt(oc, params)
+    loss = lambda p: jnp.mean((p["w"] - target) ** 2)
+    for step in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = apply_opt(oc, g, state, params, jnp.int32(step))
+    assert float(loss(params)) < 0.01, kind
+
+
+@given(st.integers(0, 1000), st.integers(1, 600))
+@settings(max_examples=30, deadline=None)
+def test_q8_roundtrip_bounded_error(seed, n):
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32) * 10
+    q, s = _q8(jnp.asarray(x))
+    back = np.asarray(_dq8(q, s, x.shape))
+    blockmax = np.abs(x).max() if n else 0
+    # error bounded by scale/2 per block (127 levels)
+    err = np.abs(back - x)
+    assert err.max() <= (np.abs(x).max() / 127) * 1.01 + 1e-6
+
+
+def test_q8_preserves_leading_dims():
+    x = jnp.ones((3, 5, 300))
+    q, s = _q8(x)
+    assert q.shape[:2] == (3, 5) and s.shape[:2] == (3, 5)
+
+
+def test_grad_compression_error_feedback():
+    """EF property: mean of compressed updates converges to the true mean."""
+    from repro.distributed.grad_compress import _dequant, _quant
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(1000).astype(np.float32)
+    resid = np.zeros_like(g)
+    acc = np.zeros_like(g)
+    for t in range(50):
+        x = jnp.asarray(g + resid)
+        q, s = _quant(x)
+        sent = np.asarray(_dequant(q, s, x.shape))
+        resid = np.asarray(x) - sent
+        acc += sent
+    # accumulated transmitted mass ≈ accumulated true mass
+    np.testing.assert_allclose(acc / 50, g, atol=np.abs(g).max() / 127 / 50
+                               + 1e-3, rtol=0.01)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        tree = {"a": jnp.arange(10, dtype=jnp.bfloat16),
+                "b": {"c": jnp.ones((3, 3), jnp.int8)}}
+        for step in (1, 2, 3):
+            ck.save(step, tree, extras={"step": step}, blocking=True)
+        assert ck.latest_step() == 3
+        got, extras = ck.restore(target=tree)
+        assert extras["step"] == 3
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        # keep=2: step 1 garbage-collected
+        assert not os.path.exists(os.path.join(d, "step_00000001"))
+
+
+def test_checkpoint_atomicity_tmp_cleanup():
+    with tempfile.TemporaryDirectory() as d:
+        os.makedirs(os.path.join(d, "step_00000009.tmp-deadbeef"))
+        ck = Checkpointer(d)
+        assert ck.latest_step() is None          # partial save invisible
+        assert not any(".tmp-" in n for n in os.listdir(d))
+
+
+# ---------------------------------------------------------------------------
+# trainer fault tolerance
+# ---------------------------------------------------------------------------
+
+def _make_trainer(d, total, fail_at=None):
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    model = Model(cfg, RC)
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=100)
+    tc = TrainerConfig(total_steps=total, ckpt_every=3, ckpt_dir=d,
+                       log_every=1)
+    hook = None
+    if fail_at is not None:
+        def hook(step):
+            if step == fail_at:
+                raise SimulatedFailure(f"injected at {step}")
+    pipe = DataPipeline(cfg, PipelineConfig(batch=2, seq=16))
+    return Trainer(model, oc, tc, pipe, failure_hook=hook)
+
+
+def test_crash_restart_resumes_training():
+    with tempfile.TemporaryDirectory() as d:
+        t1 = _make_trainer(d, total=9, fail_at=7)
+        with pytest.raises(SimulatedFailure):
+            t1.run()
+        t1.ckpt.wait()
+        # "node" restarts: fresh trainer picks up from last checkpoint (6)
+        t2 = _make_trainer(d, total=9)
+        out = t2.run()
+        steps = [m["step"] for m in out["metrics"]]
+        assert steps[0] == 6, "resumed from last checkpoint"
+        assert steps[-1] == 8
+
+
+def test_restart_is_deterministic_continuation():
+    """Run-through losses == crash+resume losses (same data, same steps)."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        full = _make_trainer(d1, total=6).run()
+        t1 = _make_trainer(d2, total=6, fail_at=4)
+        with pytest.raises(SimulatedFailure):
+            t1.run()
+        t1.ckpt.wait()
+        resumed = _make_trainer(d2, total=6).run()
+        a = {m["step"]: m["loss"] for m in full["metrics"]}
+        b = {m["step"]: m["loss"] for m in resumed["metrics"]}
+        for s in (4, 5):
+            assert abs(a[s] - b[s]) < 1e-4, (s, a[s], b[s])
+
+
+def test_straggler_watchdog():
+    import time as _time
+    with tempfile.TemporaryDirectory() as d:
+        tr = _make_trainer(d, total=8)
+        orig = tr.train_step
+
+        calls = {"n": 0}
+
+        def slow(*a, **k):
+            calls["n"] += 1
+            if calls["n"] == 6:
+                _time.sleep(1.0)      # inject a straggler step
+            return orig(*a, **k)
+        tr.train_step = slow
+        tr.run()
+        assert len(tr.straggler_steps) >= 1
