@@ -1,0 +1,16 @@
+"""Benchmark process environment: import BEFORE anything that imports jax.
+
+Exposes one virtual XLA host device per CPU core so the sweep engine can
+shard lanes across cores with ``pmap``.  This is benchmark-only: tests and
+library users keep the default single device (see tests/conftest.py note).
+"""
+import os
+import sys
+
+_FLAG = "xla_force_host_platform_device_count"
+
+if "jax" not in sys.modules and _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    _n = os.cpu_count() or 1
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + f" --{_FLAG}={_n}").strip()

@@ -13,7 +13,6 @@ TPU.  Kernel correctness is interpret-mode-validated in tests/test_kernels.
 from __future__ import annotations
 
 import time
-from typing import Dict, List
 
 import numpy as np
 
@@ -113,7 +112,6 @@ def bench_kernel_classes_ablation(B=24, pages_per_seq=64):
 def bench_engine_end_to_end(quick=True):
     """Serving engine: tokens/step metrics with the real model + kernel
     (interpret mode — correctness path timing, not TPU wall time)."""
-    import jax.numpy as jnp
     from repro.configs import get_config
     from repro.models import Model, RunConfig
     from repro.serve import EngineConfig, ServingEngine

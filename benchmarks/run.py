@@ -3,17 +3,30 @@
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) followed by
 the full result tables; writes results/benchmarks.json.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
+
+Tiers:
+
+* default — the quick suite (8 benchmarks, 120-150k-access traces)
+* ``--full`` — all 16 benchmarks, long traces
+* ``--smoke`` — tiny traces and footprints, TLB benches only; exercises the
+  whole batched-sweep path end-to-end in seconds (the CI tier).  With
+  ``--budget-s N`` the run exits non-zero if it exceeds the time budget.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
-from typing import Any, Callable, Dict, List
+from typing import Any, Dict, List
 
+from . import _env  # noqa: F401  (must precede jax-importing modules)
 from . import paged_kernel, roofline_summary, tlb_suite
+
+SMOKE_TRACE_LEN = 4096
+SMOKE_MAX_PAGES = 1 << 15
 
 
 def _fmt_table(rows: List[Dict[str, Any]]) -> str:
@@ -47,65 +60,96 @@ BENCHES: List = [
 ]
 
 
+def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
+    try:
+        if name == "tlb_synthetic":
+            mixed = next(r for r in rows if r["mapping"] == "mixed")
+            return (f"mixed:|K|=3 rel={mixed.get('|K|=3', '')};"
+                    f"anchor rel={mixed['Anchor-Static']}")
+        if name == "tlb_demand":
+            import numpy as np
+            ks = [r["|K|=2"] for r in rows]
+            an = [r["Anchor-Static"] for r in rows]
+            return (f"mean |K|=2 rel={np.mean(ks):.3f};"
+                    f"mean anchor rel={np.mean(an):.3f};"
+                    f"reduction vs anchor="
+                    f"{1 - np.mean(ks) / max(np.mean(an), 1e-9):.3f}")
+        if name == "tlb_predictor":
+            import numpy as np
+            return "mean acc |K|=2 = {:.3f}".format(
+                np.mean([r["|K|=2"] for r in rows]))
+        if name == "dma_fragmentation":
+            mid = rows[len(rows) // 2]
+            return (f"frag=0.5: desc_red={mid['desc_reduction']},"
+                    f"speedup={mid['speedup']}")
+        if name == "engine_end_to_end":
+            return f"buddy desc_red={rows[0]['desc_reduction']}"
+    except Exception as e:    # derived metrics must never kill the run
+        return f"derive-error:{e}"
+    return ""
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="all 16 benchmarks, long traces")
+    tier = ap.add_mutually_exclusive_group()
+    tier.add_argument("--full", action="store_true",
+                      help="all 16 benchmarks, long traces")
+    tier.add_argument("--smoke", action="store_true",
+                      help="tiny traces, TLB benches only (CI tier)")
     ap.add_argument("--only", help="comma list of bench names")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="exit non-zero if total wall-clock exceeds this")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the on-disk sweep cache")
     args = ap.parse_args(argv)
 
+    if args.no_cache:
+        os.environ["REPRO_SWEEP_NO_CACHE"] = "1"
     only = set(args.only.split(",")) if args.only else None
+    t_start = time.time()
     results: Dict[str, Any] = {}
     csv_lines = ["name,us_per_call,derived"]
     for name, artifact, fn in BENCHES:
         if only and name not in only:
             continue
-        t0 = time.time()
+        if args.smoke and not name.startswith("tlb_"):
+            continue
         kwargs = {}
-        if "quick" in fn.__code__.co_varnames:
+        varnames = fn.__code__.co_varnames[:fn.__code__.co_argcount]
+        if "quick" in varnames:
             kwargs["quick"] = not args.full
+        if args.smoke:
+            if "trace_len" in varnames:
+                kwargs["trace_len"] = SMOKE_TRACE_LEN
+            if "max_pages" in varnames:
+                kwargs["max_pages"] = SMOKE_MAX_PAGES
+        t0 = time.time()
         rows = fn(**kwargs)
         dt = time.time() - t0
         results[name] = {"artifact": artifact, "rows": rows,
                          "wall_s": round(dt, 1)}
-        derived = ""
-        try:
-            if name == "tlb_synthetic":
-                mixed = next(r for r in rows if r["mapping"] == "mixed")
-                derived = (f"mixed:|K|=3 rel={mixed['|K|=3']};"
-                           f"anchor rel={mixed['Anchor-Static']}")
-            elif name == "tlb_demand":
-                import numpy as np
-                ks = [r["|K|=2"] for r in rows]
-                an = [r["Anchor-Static"] for r in rows]
-                derived = (f"mean |K|=2 rel={np.mean(ks):.3f};"
-                           f"mean anchor rel={np.mean(an):.3f};"
-                           f"reduction vs anchor="
-                           f"{1 - np.mean(ks)/max(np.mean(an),1e-9):.3f}")
-            elif name == "tlb_predictor":
-                import numpy as np
-                derived = "mean acc |K|=2 = {:.3f}".format(
-                    np.mean([r["|K|=2"] for r in rows]))
-            elif name == "dma_fragmentation":
-                mid = rows[len(rows) // 2]
-                derived = (f"frag=0.5: desc_red={mid['desc_reduction']},"
-                           f"speedup={mid['speedup']}")
-            elif name == "engine_end_to_end":
-                derived = f"buddy desc_red={rows[0]['desc_reduction']}"
-        except Exception as e:    # derived metrics must never kill the run
-            derived = f"derive-error:{e}"
         n_calls = max(len(rows), 1)
-        csv_lines.append(f"{name},{dt * 1e6 / n_calls:.0f},{derived}")
+        csv_lines.append(
+            f"{name},{dt * 1e6 / n_calls:.0f},{_derived_metric(name, rows)}")
         print(f"\n=== {name}  [{artifact}]  ({dt:.1f}s) ===")
         print(_fmt_table(rows))
 
+    total = time.time() - t_start
     print("\n--- CSV (name,us_per_call,derived) ---")
     for line in csv_lines:
         print(line)
     os.makedirs("results", exist_ok=True)
+    tier_name = "smoke" if args.smoke else ("full" if args.full else "quick")
+    payload = {"tier": tier_name, "total_wall_s": round(total, 1),
+               "sections": results}
     with open("results/benchmarks.json", "w") as f:
-        json.dump(results, f, indent=1)
-    print("\nwrote results/benchmarks.json")
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote results/benchmarks.json  (tier={tier_name}, "
+          f"total {total:.1f}s)")
+    if args.budget_s is not None and total > args.budget_s:
+        print(f"ERROR: exceeded time budget: {total:.1f}s > "
+              f"{args.budget_s:.0f}s", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

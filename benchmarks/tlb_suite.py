@@ -11,145 +11,216 @@
 All traces are synthetic access-pattern analogues of the paper's benchmarks
 (no Pin offline); see repro.core.traces.BENCHMARKS and EXPERIMENTS.md for the
 fidelity discussion.
+
+Every bench routes through :func:`repro.core.sweep.run_sweep`: all of its
+(method, mapping, trace) cells run as lanes of ONE batched vmapped simulation
+compiled once per shape bucket, instead of one ``run_method`` compile+scan
+per cell.  ``max_pages`` caps mapping footprints so the ``--smoke`` tier can
+exercise the identical sweep path in seconds.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Sequence
+import zlib
+from typing import Dict, Iterable, List, Sequence, Tuple
 
-import numpy as np
-
-from repro.core import (BENCHMARKS, anchor_static, base_spec, benchmark_trace,
-                        cluster_spec, colt_spec, demand_mapping,
-                        generate_trace, kaligned_for_mapping, rmm_spec,
-                        run_method, synthetic_mapping, thp_spec)
+from repro.core import (BENCHMARKS, SimResult, base_spec, cluster_spec,
+                        colt_spec, demand_mapping, generate_trace,
+                        kaligned_for_mapping, rmm_spec, synthetic_mapping,
+                        thp_spec)
+from repro.core.baselines import anchor_spec
+from repro.core.sweep import SweepCell, run_sweep
 
 QUICK_BENCHES = ("mcf", "bwaves", "gups", "graph500", "omnetpp", "gromacs",
                  "xalancbmk", "libquantum")
 ANCHOR_GRID_QUICK = (4, 6, 8, 10)
+MAX_PAGES_DEFAULT = 1 << 19
 
 
-def _mapping_for(name: str, n_pages: int, seed: int = 0):
-    return demand_mapping(n_pages, seed=seed)
+def _bench_seed(name: str) -> int:
+    """Stable per-benchmark mapping seed (process-independent, unlike
+    ``hash(name)``, so the sweep cache works across runs)."""
+    return zlib.crc32(name.encode()) % 1000
 
 
-def _suite(m, tr, anchor_grid, psis=(2, 3, 4)) -> Dict[str, object]:
-    out = {}
-    out["Base"] = run_method(base_spec(), m, tr)
-    out["THP"] = run_method(thp_spec(), m, tr)
-    out["RMM"] = run_method(rmm_spec(), m, tr)
-    out["COLT"] = run_method(colt_spec(), m, tr)
-    out["Cluster"] = run_method(cluster_spec(), m, tr)
-    out["Anchor-Static"] = anchor_static(m, tr, grid=anchor_grid)
+def _mapping_for(name: str, n_pages: int):
+    return demand_mapping(n_pages, seed=_bench_seed(name))
+
+
+class SweepPlan:
+    """Accumulates tagged sweep cells; one ``run_sweep`` serves all rows.
+
+    ``group="anchor"`` cells are reduced to the best (fewest walks) result
+    per (row, label) — the Anchor-Static exhaustive-grid policy of §4.1.
+    """
+
+    def __init__(self):
+        self.cells: List[SweepCell] = []
+        self.tags: List[Tuple[str, str, str]] = []
+
+    def add(self, spec, mapping, trace, row: str, label: str,
+            group: str = "plain") -> None:
+        self.cells.append(SweepCell(spec, mapping, trace))
+        self.tags.append((row, label, group))
+
+    def add_anchor_static(self, mapping, trace, row: str,
+                          grid: Iterable[int],
+                          label: str = "Anchor-Static") -> None:
+        for d in grid:
+            self.add(anchor_spec(d), mapping, trace, row, label,
+                     group="anchor")
+
+    def run(self, cache: bool = True) -> Dict[str, Dict[str, SimResult]]:
+        sweep = run_sweep(self.cells, cache=cache)
+        out: Dict[str, Dict[str, SimResult]] = {}
+        for (row, label, group), r in zip(self.tags, sweep.results):
+            cols = out.setdefault(row, {})
+            if group == "anchor" and label in cols:
+                if r.walks < cols[label].walks:
+                    cols[label] = r
+            else:
+                cols[label] = r
+        return out
+
+
+def _add_suite(plan: SweepPlan, m, tr, row: str, anchor_grid,
+               psis: Sequence[int] = (2, 3, 4)) -> None:
+    plan.add(base_spec(), m, tr, row, "Base")
+    plan.add(thp_spec(), m, tr, row, "THP")
+    plan.add(rmm_spec(), m, tr, row, "RMM")
+    plan.add(colt_spec(), m, tr, row, "COLT")
+    plan.add(cluster_spec(), m, tr, row, "Cluster")
+    plan.add_anchor_static(m, tr, row, anchor_grid)
     for psi in psis:
-        out[f"|K|={psi}"] = run_method(
-            kaligned_for_mapping(m, psi=psi, theta=1.0 if psi > 2 else 0.9),
-            m, tr)
-    return out
+        spec = kaligned_for_mapping(m, psi=psi,
+                                    theta=1.0 if psi > 2 else 0.9)
+        plan.add(spec, m, tr, row, f"|K|={psi}")
 
 
-def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True):
+def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
+                    max_pages=MAX_PAGES_DEFAULT):
     """Table 4 synthetic-mapping rows."""
-    rows = []
+    n_pages = min(n_pages, max_pages)
+    plan = SweepPlan()
+    order = []
     for kind in ("small", "medium", "large", "mixed"):
         m = synthetic_mapping(kind, n_pages, seed=1)
         tr = generate_trace("multiscale", 0, trace_len, seed=2, mapping=m)
-        t0 = time.time()
-        res = _suite(m, tr, ANCHOR_GRID_QUICK)
-        base = res["Base"].walks
-        row = {"mapping": kind,
-               **{k: round(v.walks / max(base, 1), 4) for k, v in res.items()},
-               "wall_s": round(time.time() - t0, 1)}
-        rows.append(row)
+        _add_suite(plan, m, tr, kind, ANCHOR_GRID_QUICK)
+        order.append(kind)
+    res = plan.run()
+    rows = []
+    for kind in order:
+        cols = res[kind]
+        base = cols["Base"].walks
+        rows.append({"mapping": kind,
+                     **{k: round(v.walks / max(base, 1), 4)
+                        for k, v in cols.items()}})
     return rows
 
 
-def bench_demand(trace_len=150_000, quick=True):
-    """Figure 8: per-benchmark relative misses on the demand mapping."""
-    rows = []
+def bench_demand(trace_len=150_000, quick=True, max_pages=None):
+    """Figure 8: per-benchmark relative misses on the demand mapping.
+
+    Footprints are only capped in quick/smoke tiers; ``--full`` runs the
+    declared paper-scale footprints (up to 4GB of virtual address space).
+    """
+    cap = max_pages if max_pages is not None else (
+        MAX_PAGES_DEFAULT if quick else None)
     benches = QUICK_BENCHES if quick else tuple(BENCHMARKS)
+    plan = SweepPlan()
     for name in benches:
         pattern, n_pages = BENCHMARKS[name]
-        n_pages = min(n_pages, 1 << 19) if quick else n_pages
-        m = _mapping_for(name, n_pages, seed=hash(name) % 1000)
+        m = _mapping_for(name, min(n_pages, cap) if cap else n_pages)
         tr = generate_trace(pattern, 0, trace_len, seed=3, mapping=m)
-        res = _suite(m, tr, ANCHOR_GRID_QUICK, psis=(2,))
-        base = res["Base"].walks
+        _add_suite(plan, m, tr, name, ANCHOR_GRID_QUICK, psis=(2,))
+    res = plan.run()
+    rows = []
+    for name in benches:
+        cols = res[name]
+        base = cols["Base"].walks
         rows.append({"benchmark": name,
                      **{k: round(v.walks / max(base, 1), 4)
-                        for k, v in res.items()}})
+                        for k, v in cols.items()}})
     return rows
 
 
-def bench_coverage(trace_len=120_000, quick=True):
+def bench_coverage(trace_len=120_000, quick=True,
+                   max_pages=MAX_PAGES_DEFAULT):
     """Table 5: relative TLB translation coverage (covered PTEs / 1024)."""
-    rows = []
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
+    plan = SweepPlan()
     for name in benches:
         pattern, n_pages = BENCHMARKS[name]
-        n_pages = min(n_pages, 1 << 19)
-        m = _mapping_for(name, n_pages, seed=hash(name) % 1000)
+        m = _mapping_for(name, min(n_pages, max_pages))
         tr = generate_trace(pattern, 0, trace_len, seed=4, mapping=m)
-        base = run_method(base_spec(), m, tr)
-        colt = run_method(colt_spec(), m, tr)
-        anch = anchor_static(m, tr, grid=(6, 8, 10))
-        ka = run_method(kaligned_for_mapping(m, psi=2), m, tr)
-        denom = max(base.coverage_mean, 1.0)
+        plan.add(base_spec(), m, tr, name, "Base")
+        plan.add(colt_spec(), m, tr, name, "COLT")
+        plan.add_anchor_static(m, tr, name, grid=(6, 8, 10))
+        plan.add(kaligned_for_mapping(m, psi=2), m, tr, name, "|K|=2")
+    res = plan.run()
+    rows = []
+    for name in benches:
+        cols = res[name]
+        denom = max(cols["Base"].coverage_mean, 1.0)
         rows.append({"benchmark": name, "Base": 1.0,
-                     "COLT": round(colt.coverage_mean / denom, 2),
-                     "Anchor-Static": round(anch.coverage_mean / denom, 2),
-                     "|K|=2": round(ka.coverage_mean / denom, 2)})
+                     **{k: round(cols[k].coverage_mean / denom, 2)
+                        for k in ("COLT", "Anchor-Static", "|K|=2")}})
     return rows
 
 
-def bench_predictor(trace_len=120_000, quick=True):
+def bench_predictor(trace_len=120_000, quick=True,
+                    max_pages=MAX_PAGES_DEFAULT):
     """Table 6: predictor accuracy per benchmark for |K| = 2, 3, 4."""
-    rows = []
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
+    plan = SweepPlan()
     for name in benches:
         pattern, n_pages = BENCHMARKS[name]
-        n_pages = min(n_pages, 1 << 19)
-        m = _mapping_for(name, n_pages, seed=hash(name) % 1000)
+        m = _mapping_for(name, min(n_pages, max_pages))
         tr = generate_trace(pattern, 0, trace_len, seed=5, mapping=m)
-        row = {"benchmark": name}
         for psi in (2, 3, 4):
-            r = run_method(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr)
-            row[f"|K|={psi}"] = round(r.predictor_accuracy, 3)
-        rows.append(row)
-    return rows
+            plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
+                     name, f"|K|={psi}")
+    res = plan.run()
+    return [{"benchmark": name,
+             **{k: round(v.predictor_accuracy, 3)
+                for k, v in res[name].items()}}
+            for name in benches]
 
 
-def bench_k_sweep(trace_len=150_000, n_pages=1 << 19):
+def bench_k_sweep(trace_len=150_000, n_pages=1 << 19,
+                  max_pages=MAX_PAGES_DEFAULT):
     """Figure 9: misses of |K| modes relative to Anchor-Static (mixed)."""
-    m = synthetic_mapping("mixed", n_pages, seed=1)
+    m = synthetic_mapping("mixed", min(n_pages, max_pages), seed=1)
     tr = generate_trace("multiscale", 0, trace_len, seed=6, mapping=m)
-    anch = anchor_static(m, tr, grid=ANCHOR_GRID_QUICK)
-    rows = []
+    plan = SweepPlan()
+    plan.add_anchor_static(m, tr, "mixed", grid=ANCHOR_GRID_QUICK)
     for psi in (1, 2, 3, 4):
-        r = run_method(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr)
-        rows.append({"|K|": psi,
-                     "rel_misses_vs_anchor": round(
-                         r.walks / max(anch.walks, 1), 4)})
-    return rows
+        plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
+                 "mixed", f"|K|={psi}")
+    res = plan.run()["mixed"]
+    anch = res["Anchor-Static"]
+    return [{"|K|": psi,
+             "rel_misses_vs_anchor": round(
+                 res[f"|K|={psi}"].walks / max(anch.walks, 1), 4)}
+            for psi in (1, 2, 3, 4)]
 
 
-def bench_cpi(trace_len=120_000, quick=True):
+def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
     """Figures 10/11: translation cycles per access."""
-    rows = []
     benches = ("gups", "mcf", "graph500") if quick else tuple(BENCHMARKS)
+    plan = SweepPlan()
     for name in benches:
         pattern, n_pages = BENCHMARKS[name]
-        n_pages = min(n_pages, 1 << 19)
-        m = _mapping_for(name, n_pages, seed=hash(name) % 1000)
+        m = _mapping_for(name, min(n_pages, max_pages))
         tr = generate_trace(pattern, 0, trace_len, seed=7, mapping=m)
-        row = {"benchmark": name}
-        for label, spec in (("Base", base_spec()), ("THP", thp_spec()),
-                            ("COLT", colt_spec())):
-            row[label] = round(run_method(spec, m, tr).cpi, 3)
-        row["Anchor-Static"] = round(
-            anchor_static(m, tr, grid=(6, 8, 10)).cpi, 3)
+        plan.add(base_spec(), m, tr, name, "Base")
+        plan.add(thp_spec(), m, tr, name, "THP")
+        plan.add(colt_spec(), m, tr, name, "COLT")
+        plan.add_anchor_static(m, tr, name, grid=(6, 8, 10))
         for psi in (2, 3):
-            row[f"|K|={psi}"] = round(run_method(
-                kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr).cpi, 3)
-        rows.append(row)
-    return rows
+            plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
+                     name, f"|K|={psi}")
+    res = plan.run()
+    return [{"benchmark": name,
+             **{k: round(v.cpi, 3) for k, v in res[name].items()}}
+            for name in benches]

@@ -7,7 +7,6 @@ Run:  PYTHONPATH=src python examples/train_100m.py [--steps 200]
 (~100M params on CPU: expect a few seconds/step; use --steps 20 for a smoke.)
 """
 import argparse
-import dataclasses
 import time
 
 from repro.data import DataPipeline, PipelineConfig

@@ -1,17 +1,25 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+"""Render EXPERIMENTS.md tables from result artifacts.
 
-    PYTHONPATH=src python scripts/make_experiments_tables.py \
-        results/dryrun_final2 [results/dryrun_baseline]
+Two sources:
+
+* dry-run JSONs (§Dry-run / §Roofline):
+      PYTHONPATH=src python scripts/make_experiments_tables.py \
+          results/dryrun_final2 [results/dryrun_baseline]
+* batched-sweep TLB results written by ``python -m benchmarks.run``
+  (the sweep engine's results/benchmarks.json):
+      PYTHONPATH=src python scripts/make_experiments_tables.py \
+          --tlb results/benchmarks.json
 """
+import argparse
 import glob
 import json
-import sys
 
 
 def load(d):
     out = {}
     for p in sorted(glob.glob(f"{d}/*.json")):
-        r = json.load(open(p))
+        with open(p) as f:
+            r = json.load(f)
         out[(r["arch"], r["shape"], r["mesh"])] = r
     return out
 
@@ -26,12 +34,13 @@ def fmt_s(v):
     return f"{v:.2f}s"
 
 
-def main():
-    final = load(sys.argv[1])
-    base = load(sys.argv[2]) if len(sys.argv) > 2 else {}
+def render_dryrun(final_dir, base_dir=None):
+    final = load(final_dir)
+    base = load(base_dir) if base_dir else {}
 
     print("### §Dry-run — per-cell compile + memory (all 40 cells × 2 meshes)\n")
-    print("| arch | shape | mesh | status | mem/dev raw | mem/dev TPU-adj | fits 16GB | compile |")
+    print("| arch | shape | mesh | status | mem/dev raw | mem/dev TPU-adj "
+          "| fits 16GB | compile |")
     print("|---|---|---|---|---|---|---|---|")
     for key in sorted(final):
         r = final[key]
@@ -46,8 +55,8 @@ def main():
               f"| {r['time']['compile_s']}s |")
 
     print("\n### §Roofline — single-pod (16×16) terms per step\n")
-    print("| arch | shape | compute | memory (analytic) | collective | dominant | "
-          "MODEL_FLOPS/HLO | vs baseline coll |")
+    print("| arch | shape | compute | memory (analytic) | collective "
+          "| dominant | MODEL_FLOPS/HLO | vs baseline coll |")
     print("|---|---|---|---|---|---|---|---|")
     for key in sorted(final):
         a, s, m = key
@@ -65,10 +74,10 @@ def main():
             c1 = rf["collective_s"]
             if c0 > 0:
                 delta = f"{(c1/c0 - 1)*100:+.0f}%"
-        print(f"| {a} | {s} | {fmt_s(rf['compute_s'])} "
-              f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
-              f"| {rf['dominant']} | {uf:.2f} | {delta} |"
-              if uf is not None else "")
+        if uf is not None:
+            print(f"| {a} | {s} | {fmt_s(rf['compute_s'])} "
+                  f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+                  f"| {rf['dominant']} | {uf:.2f} | {delta} |")
 
     print("\n### Multi-pod (2×16×16) — collective scaling\n")
     print("| arch | shape | coll sp | coll mp | mp/sp |")
@@ -86,6 +95,48 @@ def main():
         c_mp = r_mp["roofline"]["collective_s"]
         print(f"| {a} | {s} | {fmt_s(c_sp)} | {fmt_s(c_mp)} "
               f"| {c_mp/max(c_sp,1e-12):.2f}× |")
+
+
+def render_tlb(path):
+    """Markdown tables for the paper's TLB artifacts from the batched-sweep
+    results/benchmarks.json (one section per table/figure)."""
+    with open(path) as f:
+        payload = json.load(f)
+    # pre-sweep runs wrote the sections dict at top level
+    sections = payload.get("sections", payload)
+    tier = payload.get("tier", "?")
+    total = payload.get("total_wall_s", "?")
+    print(f"## TLB sweep results  (tier={tier}, total {total}s)\n")
+    for name, sec in sections.items():
+        if not name.startswith("tlb_"):
+            continue
+        rows = sec.get("rows") or []
+        if not rows:
+            continue
+        print(f"### {name} — {sec.get('artifact', '')}\n")
+        cols = list(rows[0].keys())
+        print("| " + " | ".join(str(c) for c in cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+        print()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dryrun_dir", nargs="?",
+                    help="directory of dry-run JSONs (results/dryrun_*)")
+    ap.add_argument("baseline_dir", nargs="?",
+                    help="optional baseline dry-run directory")
+    ap.add_argument("--tlb", metavar="BENCHMARKS_JSON",
+                    help="render TLB sweep tables from benchmarks.json")
+    args = ap.parse_args()
+    if not args.dryrun_dir and not args.tlb:
+        ap.error("need a dry-run directory and/or --tlb results")
+    if args.tlb:
+        render_tlb(args.tlb)
+    if args.dryrun_dir:
+        render_dryrun(args.dryrun_dir, args.baseline_dir)
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ Faithful reproduction layer:
   * :mod:`repro.core.aligned`      — K-bit aligned entries, Algorithms 1-2
   * :mod:`repro.core.determine_k`  — Algorithm 3 (Table 1 size ranges)
   * :mod:`repro.core.simulator`    — unified trace-driven TLB engine
+  * :mod:`repro.core.sweep`        — batched methods×traces sweep engine
   * :mod:`repro.core.baselines`    — Base/THP/COLT/Cluster/RMM/Anchor specs
   * :mod:`repro.core.mappings`     — Table-3 synthetic + demand mappings
   * :mod:`repro.core.traces`       — benchmark access-pattern analogues
@@ -19,5 +20,6 @@ from .determine_k import SIZE_RANGE_TABLE, determine_k, f_alignment
 from .mappings import BuddyAllocator, demand_mapping, synthetic_mapping
 from .page_table import (Mapping, compute_runs, contiguity_chunks,
                          contiguity_histogram, huge_page_backed, make_mapping)
-from .simulator import MethodSpec, SimResult, run_method
+from .simulator import MethodSpec, SimResult, miss_chain_cycles, run_method
+from .sweep import SweepCell, SweepResult, run_sweep
 from .traces import BENCHMARKS, benchmark_trace, generate_trace

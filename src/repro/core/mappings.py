@@ -14,7 +14,7 @@ free lists, so a warmed-up process sees chunks of many coexisting sizes.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

@@ -17,7 +17,14 @@ in simulation machinery:
 The L2 set index follows the paper's modified scheme (Fig 7): bits
 ``[k_hat : k_hat+N)`` of the VPN, where ``k_hat = max(K)`` — every probe
 (regular and all alignments) of one VPN lands in the same set, which is what
-makes multi-alignment lookup a same-set tag compare.
+makes multi-alignment lookup a same-set tag compare.  The same property is
+what lets :mod:`repro.core.sweep` batch *different* methods into one vmapped
+engine: because the set index is always ``(vpn >> k_hat) & (l2_sets - 1)``
+with per-method ``k_hat``/``l2_sets`` data, every method's L2 can live on one
+padded ``(max_sets, max_ways)`` array layout — padded ways carry INVALID
+k-classes (never hit, never chosen as victims) and unused alignment slots
+carry inert ``K = -1`` classes whose probes are masked.  ``run_method`` below
+stays as the per-call parity oracle for that batched engine.
 
 Latency model (Table 2): L1 hit 0 (parallel with the cache access), L2
 regular hit 7, coalesced/aligned/range/cluster hit 8 (+7 per extra aligned
@@ -101,6 +108,15 @@ class SimResult:
     @property
     def predictor_accuracy(self) -> float:   # Table 6
         return self.pred_correct / max(self.l2_coalesced_hits, 1)
+
+
+def miss_chain_cycles(spec: MethodSpec) -> int:
+    """Cycles burned on the failed lookup chain before a walk (§3.5)."""
+    if spec.K and spec.kind in ("kaligned", "anchor"):
+        return LAT_COAL + LAT_EXTRA_PROBE * (len(spec.K) - 1)
+    if spec.kind == "colt" or spec.side is not None:
+        return LAT_COAL
+    return LAT_L2_REG
 
 
 def _full(shape, val):
@@ -301,12 +317,7 @@ def _simulate(spec: MethodSpec, ppn_map, run_start, run_len, huge_ok,
         walk = ~hit_any
 
         # ---------------- latency (Table 2, §3.5) ---------------------------
-        if Ks and spec.kind in ("kaligned", "anchor"):
-            miss_chain = LAT_COAL + LAT_EXTRA_PROBE * (len(Ks) - 1)
-        elif spec.kind == "colt" or spec.side is not None:
-            miss_chain = LAT_COAL
-        else:
-            miss_chain = LAT_L2_REG
+        miss_chain = miss_chain_cycles(spec)
         cyc = jnp.where(
             l1_served, 0,
             jnp.where(reg_hit, LAT_L2_REG,

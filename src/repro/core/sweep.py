@@ -1,0 +1,765 @@
+"""Batched sweep engine: every method × trace as one vmapped simulation.
+
+:func:`repro.core.simulator.run_method` simulates one ``(spec, mapping,
+trace)`` triple per call and re-compiles for every distinct ``MethodSpec``
+and every distinct array shape.  A paper-scale sweep (7+ methods × 16
+benchmarks × several |K| / seed settings) pays that compile cost hundreds of
+times.  This module instead *pads every method onto one common array layout*
+so that all of ``base/thp/colt/cluster/rmm/anchor/kaligned`` run as rows of a
+single ``jax.vmap``-ed set-associative scan, compiled once per shape bucket
+and reused across traces and seeds:
+
+* L2 arrays are padded to the max ``(l2_sets, l2_ways)`` of the batch; padded
+  ways carry ``INVALID`` k-classes and a ``+BIG`` victim score so they can
+  neither hit nor be chosen for fill.
+* ``K`` is padded to the max ``|K|`` with inert ``-1`` alignment classes
+  whose probes are masked out.
+* The THP 2MB L1 array, the RMM range TLB, and the clustered side TLB are
+  always present in the carried state but gated per lane by ``has_*`` flags
+  (they are tiny next to L2, so inert lanes cost almost nothing).
+* Traces are stacked and padded to a common length; padded steps are fully
+  masked (no state writes, no counter increments), which keeps every lane
+  bit-exact with its per-call :func:`run_method` equivalent.
+
+Every per-method *static* attribute of the specialized engine (kind, side,
+predictor, miss-chain latency, set mask, index shift) becomes per-lane
+*data*, so one compiled program serves the whole sweep.
+
+Two structural optimizations make the batched step fast on CPU (where each
+vmapped point-scatter is a per-lane loop):
+
+* each TLB structure lives in ONE packed array with a trailing field axis
+  (L2 is ``[sets, ways, 5]`` = tag/k/contig/ppn/lru), so a fill is a single
+  row scatter instead of five;
+* fill selection (Algorithm 1, the COLT window clip, THP promotion) depends
+  only on ``(mapping, fill policy, vpn)`` — it is precomputed *outside* the
+  scan as a per-vpn record and becomes one gather inside the step.
+
+When JAX exposes several (virtual) host devices, lanes are additionally
+sharded across them with ``pmap`` — ``benchmarks/_env.py`` turns that on for
+benchmark runs.
+
+:func:`run_sweep` is the orchestrator: it dedups mappings/traces, packs
+lanes, consults an on-disk result cache under ``results/sweep_cache`` keyed
+by ``(spec, mapping hash, trace hash, git describe)``, simulates only the
+missing cells, and returns per-cell :class:`~repro.core.simulator.SimResult`
+objects bit-identical to the per-call oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import subprocess
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .page_table import Mapping, cluster_bitmap, huge_page_backed
+from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
+                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_EXTRA_PROBE,
+                        LAT_L2_REG, LAT_WALK, N_COV_SAMPLES, NEG, REGULAR,
+                        RMM_ENTRIES, MethodSpec, SimResult, miss_chain_cycles)
+
+BIG = 2**30  # victim score for padded ways: never evictable
+
+# Shape buckets: pad so repeated sweeps of similar size reuse the same
+# compiled executable instead of specializing on exact lane/trace/page counts.
+LANE_BUCKET = 8
+TRACE_BUCKET = 4096
+
+# packed-field indices
+TAG, KCLS, CONTIG, PPN, LRU = 0, 1, 2, 3, 4          # L2: [S, W, 5]
+# L1/L1H: [sets, ways, 3] = tag, ppn, lru
+# RMM:    [32, 4]         = start, len, ppn, lru
+# CLUS:   [64, 5, 3]      = tag, bitmap, lru
+# fill record: [P, 4]     = tag, k, contig, ppn
+# map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]
+# counters: [9] = l1_hits, reg_hits, coal_hits, walks, probes, pred_correct,
+#                 cycles, cov, (spare)
+N_COUNTERS = 9
+(C_L1, C_REG, C_COAL, C_WALK, C_PROBE, C_PRED, C_CYC, C_COV) = range(8)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One cell of a sweep: simulate ``spec`` over ``(mapping, trace)``."""
+
+    spec: MethodSpec
+    mapping: Mapping
+    trace: np.ndarray
+
+    def __post_init__(self):
+        assert self.trace.ndim == 1
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-cell results (aligned with the request list) plus run stats."""
+
+    results: List[SimResult]
+    stats: Dict[str, float]
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
+
+# ---------------------------------------------------------------------------
+# Precomputed per-vpn records (fill policy is trace-independent)
+# ---------------------------------------------------------------------------
+
+
+def _map_record(m: Mapping, P: int) -> np.ndarray:
+    """[P, 4] int32: ppn, run_start, run_len, ppn[run_start] (RMM fill)."""
+    n = m.n_pages
+    rec = np.zeros((P, 4), np.int32)
+    rec[:, 0] = -1
+    rec[:n, 0] = m.ppn
+    rec[:n, 1] = m.run_start
+    rec[:n, 2] = m.run_len
+    rec[:n, 3] = m.ppn[np.clip(m.run_start, 0, n - 1)]
+    return rec
+
+
+def _fill_profile_key(spec: MethodSpec):
+    if spec.kind in ("kaligned", "anchor"):
+        return ("ka", spec.K)
+    if spec.kind in ("colt", "thp"):
+        return (spec.kind,)
+    return ("reg",)
+
+
+def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
+    """[P, 4] int32 fill record (tag, k, contig, ppn): what Algorithm 1 /
+    COLT / THP / the regular policy would install on a walk at each vpn."""
+    n = m.n_pages
+    vpn = np.arange(n, dtype=np.int64)
+    ppn = m.ppn
+    rs, rl = m.run_start, m.run_len
+
+    def contig_at(v):
+        v = np.clip(v, 0, n - 1)
+        return np.where(ppn[v] >= 0, rs[v] + rl[v] - v, 0)
+
+    tag = vpn.copy()
+    kcls = np.full(n, REGULAR, np.int64)
+    contig = np.ones(n, np.int64)
+    fppn = ppn.copy()
+    if key[0] == "ka":
+        chosen = np.zeros(n, bool)
+        for k in key[1]:                    # descending; first cover wins
+            vk = vpn & ~((1 << k) - 1)
+            sc = np.minimum(contig_at(vk), 1 << k)
+            take = (sc > (vpn - vk)) & ~chosen
+            tag = np.where(take, vk, tag)
+            kcls = np.where(take, k, kcls)
+            contig = np.where(take, sc, contig)
+            fppn = np.where(take, ppn[np.clip(vk, 0, n - 1)], fppn)
+            chosen |= take
+    elif key[0] == "colt":
+        w8 = vpn & ~np.int64(7)
+        re = rs + rl
+        tag = np.maximum(rs, w8)
+        contig = np.maximum(np.minimum(re, w8 + 8) - tag, 1)
+        kcls = np.where(contig > 1, 3, REGULAR)
+        fppn = ppn[np.clip(tag, 0, n - 1)]
+    elif key[0] == "thp":
+        huge = huge_page_backed(m)
+        hv = vpn >> 9
+        tag = np.where(huge, hv, vpn)
+        kcls = np.where(huge, HUGE, REGULAR)
+        contig = np.where(huge, 512, 1)
+        fppn = ppn[np.clip(np.where(huge, hv << 9, vpn), 0, n - 1)]
+
+    rec = np.zeros((P, 4), np.int32)
+    rec[:n, 0] = tag
+    rec[:n, 1] = kcls
+    rec[:n, 2] = contig
+    rec[:n, 3] = fppn
+    rec[n:, 1] = REGULAR
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Lane packing
+# ---------------------------------------------------------------------------
+
+
+def _pack_lanes(cells: Sequence[SweepCell]):
+    """Dedup mappings/traces/fill-profiles; pack per-lane params to arrays."""
+    maps: List[Mapping] = []
+    map_index: Dict[int, int] = {}
+    traces: List[np.ndarray] = []
+    trace_index: Dict[int, int] = {}
+    fill_keys: List = []
+    fill_index: Dict = {}
+    for c in cells:
+        if id(c.mapping) not in map_index:
+            map_index[id(c.mapping)] = len(maps)
+            maps.append(c.mapping)
+        if id(c.trace) not in trace_index:
+            trace_index[id(c.trace)] = len(traces)
+            traces.append(c.trace)
+        fk = (map_index[id(c.mapping)], _fill_profile_key(c.spec))
+        if fk not in fill_index:
+            fill_index[fk] = len(fill_keys)
+            fill_keys.append(fk)
+
+    P = _next_pow2(max(m.n_pages for m in maps))
+    T = -(-max(t.shape[0] for t in traces) // TRACE_BUCKET) * TRACE_BUCKET
+
+    need_clus = any(c.spec.side == "cluster" for c in cells)
+
+    map_stack = np.stack([_map_record(m, P) for m in maps])
+    fill_stack = np.stack([_fill_profile(maps[mi], key, P)
+                           for mi, key in fill_keys])
+    clus_stack = np.zeros((len(maps), P if need_clus else 1), np.int32)
+    if need_clus:
+        for i, m in enumerate(maps):
+            clus_stack[i, : m.n_pages] = cluster_bitmap(m)
+    trace_stack = np.zeros((len(traces), T), np.int32)
+    for i, t in enumerate(traces):
+        trace_stack[i, : t.shape[0]] = t
+
+    L = -(-len(cells) // LANE_BUCKET) * LANE_BUCKET
+    max_sets = max(c.spec.l2_sets for c in cells)
+    max_ways = max(c.spec.l2_ways for c in cells)
+    maxk = max([len(c.spec.K) for c in cells] + [1])
+
+    lanes = dict(
+        is_colt=np.zeros(L, bool), is_thp=np.zeros(L, bool),
+        has_rmm=np.zeros(L, bool),
+        has_cluster=np.zeros(L, bool), use_pred=np.zeros(L, bool),
+        kvals=np.full((L, maxk), -1, np.int32),
+        set_mask=np.zeros(L, np.int32), n_ways=np.ones(L, np.int32),
+        k_hat=np.zeros(L, np.int32), miss_chain=np.zeros(L, np.int32),
+        pred0=np.zeros(L, np.int32), map_id=np.zeros(L, np.int32),
+        fill_id=np.zeros(L, np.int32),
+        trace_id=np.zeros(L, np.int32), t_real=np.zeros(L, np.int32),
+        sample_every=np.ones(L, np.int32),
+    )
+    for i, c in enumerate(cells):
+        s = c.spec
+        mi = map_index[id(c.mapping)]
+        lanes["is_colt"][i] = s.kind == "colt"
+        lanes["is_thp"][i] = s.kind == "thp"
+        lanes["has_rmm"][i] = s.side == "rmm"
+        lanes["has_cluster"][i] = s.side == "cluster"
+        lanes["use_pred"][i] = s.use_predictor
+        lanes["kvals"][i, : len(s.K)] = s.K
+        lanes["set_mask"][i] = s.l2_sets - 1
+        lanes["n_ways"][i] = s.l2_ways
+        lanes["k_hat"][i] = s.index_shift
+        lanes["miss_chain"][i] = miss_chain_cycles(s)
+        lanes["pred0"][i] = s.K[0] if s.K else 0
+        lanes["map_id"][i] = mi
+        lanes["fill_id"][i] = fill_index[(mi, _fill_profile_key(s))]
+        lanes["trace_id"][i] = trace_index[id(c.trace)]
+        lanes["t_real"][i] = c.trace.shape[0]
+        lanes["sample_every"][i] = max(c.trace.shape[0] // N_COV_SAMPLES, 1)
+    stacks = dict(maps=map_stack, fills=fill_stack, clus=clus_stack,
+                  trace=trace_stack)
+    return lanes, stacks, (L, max_sets, max_ways)
+
+
+def _init_batched_state(L: int, max_sets: int, max_ways: int, pred0):
+    def packed(shape, init_tag):
+        a = np.zeros(shape, np.int32)
+        a[..., 0] = init_tag
+        return a
+
+    l2 = np.zeros((L, max_sets, max_ways, 5), np.int32)
+    l2[..., TAG] = -1
+    l2[..., KCLS] = INVALID
+    l2[..., PPN] = -1
+    return dict(
+        t=np.zeros(L, np.int32),
+        l1=packed((L, L1_SETS, L1_WAYS, 3), -1),
+        l1h=packed((L, L1H_SETS, L1H_WAYS, 3), -1),
+        l2=l2,
+        rmm=packed((L, RMM_ENTRIES, 4), -1),
+        clus=packed((L, CLUS_SETS, CLUS_WAYS, 3), -1),
+        pred=np.asarray(pred0, np.int32).copy(),
+        counters=np.zeros((L, N_COUNTERS), np.int32),
+        cov_samples=np.zeros((L, N_COV_SAMPLES), np.int32),
+    )
+
+
+def _cond_set(arr, idx, value, pred):
+    """In-place conditional point/row write (same trick as the oracle)."""
+    old = arr[idx]
+    return arr.at[idx].set(jnp.where(pred, value, old))
+
+
+# ---------------------------------------------------------------------------
+# The batched step: the union of every kind's datapath, selected per lane
+# ---------------------------------------------------------------------------
+
+
+def _run_lanes_impl(lanes, stacks, st0):
+    map_stack = stacks["maps"]
+    fill_stack = stacks["fills"]
+    clus_map = stacks["clus"]
+    trace_stack = stacks["trace"]
+    T = trace_stack.shape[1]
+    maxk = lanes["kvals"].shape[1]
+    n_ways_total = st0["l2"].shape[2]
+    way_idx = jnp.arange(n_ways_total, dtype=jnp.int32)
+
+    def one_lane(lane, st_init):
+        mid = lane["map_id"]
+        fid = lane["fill_id"]
+        set_mask = lane["set_mask"]
+        k_hat = lane["k_hat"]
+        kvals = lane["kvals"]
+        is_colt, is_thp = lane["is_colt"], lane["is_thp"]
+        is_generic = ~is_colt & ~is_thp
+        has_rmm, has_cluster = lane["has_rmm"], lane["has_cluster"]
+        use_pred = lane["use_pred"]
+        way_ok = way_idx < lane["n_ways"]
+
+        def probe_order(pred_k):
+            """[pred_k, remaining K desc] when predicting, else K as packed
+            (padded positions stay -1 and probe inertly)."""
+            order = [jnp.where(use_pred, pred_k, kvals[0])]
+            not_pred = kvals != pred_k
+            csum = jnp.cumsum(not_pred.astype(jnp.int32))
+            for pos in range(1, maxk):
+                sel = not_pred & (csum == pos)
+                spec_k = jnp.where(sel.any(), kvals[jnp.argmax(sel)],
+                                   jnp.int32(-1))
+                order.append(jnp.where(use_pred, spec_k, kvals[pos]))
+            return order
+
+        def step(st, t_idx):
+            t = st["t"]
+            vpn = trace_stack[lane["trace_id"], t_idx]
+            active = t_idx < lane["t_real"]
+            mrec = map_stack[mid, vpn]          # ppn, rs, rl, ppn[rs]
+            ppn_true, rs_v, rl_v, rmm_fill_ppn = (mrec[0], mrec[1], mrec[2],
+                                                  mrec[3])
+            frec = fill_stack[fid, vpn]         # tag, k, contig, ppn
+            fill_tag, fill_k, fill_contig, fill_ppn = (frec[0], frec[1],
+                                                       frec[2], frec[3])
+            new = dict(st)
+
+            # ---------------- L1 (regular + gated 2MB array) ----------------
+            s1 = vpn & jnp.int32(L1_SETS - 1)
+            l1row = st["l1"][s1]
+            l1_ways_hit = l1row[:, 0] == vpn
+            l1_hit = l1_ways_hit.any()
+            l1_way = jnp.argmax(l1_ways_hit)
+            hv = vpn >> 9
+            s1h = hv & jnp.int32(L1H_SETS - 1)
+            l1hrow = st["l1h"][s1h]
+            h_ways_hit = l1hrow[:, 0] == hv
+            l1h_hit = is_thp & h_ways_hit.any()
+            l1h_way = jnp.argmax(h_ways_hit)
+            l1_served = l1_hit | l1h_hit
+            l1_out_ppn = jnp.where(l1_hit, l1row[l1_way, 1],
+                                   l1hrow[l1h_way, 1] + (vpn & 511))
+
+            # ---------------- L2 probes (all kinds, selected) ---------------
+            s2 = (vpn >> k_hat) & set_mask
+            row = st["l2"][s2]                  # [W, 5]
+            tags, kcls, contig, pbase = (row[:, TAG], row[:, KCLS],
+                                         row[:, CONTIG], row[:, PPN])
+            valid = kcls != INVALID
+
+            # colt branch
+            diff = vpn - tags
+            cover = valid & (diff >= 0) & (diff < contig)
+            colt_hit = cover.any()
+            colt_way = jnp.argmax(cover)
+            colt_reg = colt_hit & (contig[colt_way] == 1)
+            colt_coal = colt_hit & (contig[colt_way] > 1)
+            colt_ppn = pbase[colt_way] + (vpn - tags[colt_way])
+
+            # thp branch (dual-set probe on the same packed array)
+            s2h = hv & set_mask
+            row_h = st["l2"][s2h]
+            huge_ways = (row_h[:, KCLS] == HUGE) & (row_h[:, TAG] == hv)
+            reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
+            huge_hit = huge_ways.any()
+            hw = jnp.argmax(huge_ways)
+            rw = jnp.argmax(reg_ways)
+            thp_reg = reg_ways.any() | huge_hit
+            thp_ppn = jnp.where(reg_ways.any(), pbase[rw],
+                                row_h[hw, PPN] + (vpn - (hv << 9)))
+            thp_touch_ways = jnp.where(reg_ways.any(), reg_ways, huge_ways)
+            thp_touch_set = jnp.where(reg_ways.any(), s2, s2h)
+
+            # generic branch: regular probe + padded aligned-probe chain
+            gen_reg = reg_ways.any()
+            probes_used = jnp.int32(0)
+            hit_k = jnp.int32(-1)
+            gen_coal = jnp.bool_(False)
+            coal_ppn = jnp.int32(-1)
+            coal_way = jnp.int32(0)
+            first_probe_k = jnp.int32(-1)
+            for pos, k_val in enumerate(probe_order(st["pred"])):
+                sh = jnp.maximum(k_val, 0)
+                vk = jnp.where(k_val >= 0,
+                               vpn & ~((jnp.int32(1) << sh) - 1),
+                               jnp.int32(-10))
+                m_ways = (kcls == k_val) & (tags == vk) & valid & \
+                         (contig > (vpn - vk))
+                m_hit = m_ways.any() & (k_val >= 0) & ~gen_reg & ~gen_coal
+                probes_used = probes_used + jnp.where(
+                    ~gen_reg & ~gen_coal & (k_val >= 0), 1, 0)
+                coal_ppn = jnp.where(m_hit, pbase[jnp.argmax(m_ways)]
+                                     + (vpn - vk), coal_ppn)
+                coal_way = jnp.where(m_hit, jnp.argmax(m_ways), coal_way)
+                hit_k = jnp.where(m_hit, k_val, hit_k)
+                if pos == 0:
+                    first_probe_k = k_val
+                gen_coal = gen_coal | m_hit
+
+            # per-lane branch selection
+            reg_hit = jnp.where(is_colt, colt_reg,
+                                jnp.where(is_thp, thp_reg, gen_reg))
+            coal_hit = jnp.where(is_generic, gen_coal, colt_coal & is_colt)
+            l2_hit = reg_hit | coal_hit
+            l2_ppn_val = jnp.where(
+                is_colt, colt_ppn,
+                jnp.where(is_thp, thp_ppn,
+                          jnp.where(gen_reg, pbase[rw], coal_ppn)))
+            pred_ok = jnp.where(use_pred & gen_coal
+                                & (hit_k == first_probe_k), 1, 0)
+            touch_set = jnp.where(is_thp, thp_touch_set, s2)
+            tw = jnp.where(
+                is_colt, colt_way,
+                jnp.where(is_thp, jnp.argmax(thp_touch_ways),
+                          jnp.where(gen_reg, rw, coal_way)))
+            probes_used = jnp.where(is_generic, probes_used, 0)
+
+            # ---------------- side structures (gated) -----------------------
+            d_r = vpn - st["rmm"][:, 0]
+            in_rng = (d_r >= 0) & (d_r < st["rmm"][:, 1])
+            rmm_hit = has_rmm & in_rng.any()
+            sw = jnp.argmax(in_rng)
+            rmm_ppn_val = st["rmm"][sw, 2] + d_r[sw]
+
+            cwd = vpn >> 3
+            sc = cwd & jnp.int32(CLUS_SETS - 1)
+            crow = st["clus"][sc]               # [5, 3]
+            bit = (crow[:, 1] >> (vpn & 7)) & 1
+            c_ways = (crow[:, 0] == cwd) & (bit == 1)
+            cl_hit = has_cluster & c_ways.any()
+
+            side_hit = rmm_hit | cl_hit
+            side_ppn = jnp.where(rmm_hit, rmm_ppn_val, ppn_true)
+
+            hit_any = l1_served | l2_hit | side_hit
+            walk = ~hit_any
+            wr = walk & active  # gate for every state write below
+
+            # ---------------- latency (per-lane miss chain) -----------------
+            cyc = jnp.where(
+                l1_served, 0,
+                jnp.where(reg_hit, LAT_L2_REG,
+                          jnp.where(coal_hit,
+                                    LAT_COAL + LAT_EXTRA_PROBE *
+                                    jnp.maximum(probes_used - 1, 0),
+                                    jnp.where(side_hit, LAT_COAL,
+                                              lane["miss_chain"]
+                                              + LAT_WALK))))
+
+            # ---------------- L2 fill (precomputed record; LRU victim) ------
+            served_huge = is_thp & (fill_k == HUGE)
+            fill_set = jnp.where(served_huge, s2h, s2)
+            frow = st["l2"][fill_set]
+            valid_row = frow[:, KCLS] != INVALID
+            score = jnp.where(way_ok,
+                              jnp.where(valid_row, frow[:, LRU],
+                                        jnp.int32(NEG)),
+                              jnp.int32(BIG))
+            victim = jnp.argmin(score)
+            evicted_contig = jnp.where(valid_row[victim],
+                                       frow[victim, CONTIG], 0)
+            fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t])
+            l2n = _cond_set(st["l2"], (fill_set, victim), fill_vec, wr)
+            new["l2"] = _cond_set(l2n, (touch_set, tw, LRU), t,
+                                  l2_hit & ~walk & ~l1_served & active)
+            cov_delta = jnp.where(wr, fill_contig - evicted_contig, 0)
+
+            # ---------------- side fills (gated) ----------------------------
+            rmm_len = st["rmm"][:, 1]
+            victim_r = jnp.argmin(jnp.where(rmm_len > 0, st["rmm"][:, 3],
+                                            jnp.int32(NEG)))
+            ev_len = jnp.where(rmm_len[victim_r] > 0, rmm_len[victim_r], 0)
+            rmm_wr = wr & has_rmm
+            rmm_vec = jnp.stack([rs_v, rl_v, rmm_fill_ppn, t])
+            rmmn = _cond_set(st["rmm"], victim_r, rmm_vec, rmm_wr)
+            new["rmm"] = _cond_set(rmmn, (sw, 3), t, rmm_hit & active)
+            cov_delta = cov_delta + jnp.where(rmm_wr, rl_v - ev_len, 0)
+
+            bm = clus_map[mid, jnp.clip(vpn, 0, clus_map.shape[1] - 1)]
+            clusterable = bm != (jnp.int32(1) << (vpn & 7))
+            fill_c = wr & clusterable & has_cluster
+            vrow = crow[:, 1] != 0
+            victim_c = jnp.argmin(jnp.where(vrow, crow[:, 2],
+                                            jnp.int32(NEG)))
+            cl_vec = jnp.stack([cwd, bm, t])
+            cln = _cond_set(st["clus"], (sc, victim_c), cl_vec, fill_c)
+            hit_cway = jnp.argmax(crow[:, 0] == cwd)
+            new["clus"] = _cond_set(cln, (sc, hit_cway, 2), t,
+                                    cl_hit & active)
+
+            # ---------------- L1 fills --------------------------------------
+            do1h = ~l1_served & served_huge & active
+            vrh = l1hrow[:, 0] >= 0
+            vich = jnp.argmin(jnp.where(vrh, l1hrow[:, 2], jnp.int32(NEG)))
+            l1h_vec = jnp.stack([hv, fill_ppn, t])
+            l1hn = _cond_set(st["l1h"], (s1h, vich), l1h_vec, do1h)
+            new["l1h"] = _cond_set(
+                l1hn, (s1h, l1h_way, 2), t,
+                is_thp & l1_served & h_ways_hit.any() & ~l1_hit & active)
+
+            do1 = ~l1_served & ~served_huge & active
+            vr1 = l1row[:, 0] >= 0
+            vic1 = jnp.argmin(jnp.where(vr1, l1row[:, 2], jnp.int32(NEG)))
+            l1_vec = jnp.stack([vpn, ppn_true, t])
+            l1n = _cond_set(st["l1"], (s1, vic1), l1_vec, do1)
+            new["l1"] = _cond_set(l1n, (s1, l1_way, 2), t, l1_hit & active)
+
+            # ---------------- predictor update (gated) ----------------------
+            upd = use_pred & active
+            new["pred"] = jnp.where(
+                upd & gen_coal, hit_k,
+                jnp.where(upd & walk & (fill_k >= 0), fill_k, st["pred"]))
+
+            # ---------------- accounting (one packed add) -------------------
+            act = active
+            delta = jnp.stack([
+                (l1_served & act).astype(jnp.int32),
+                (reg_hit & ~l1_served & act).astype(jnp.int32),
+                ((coal_hit | side_hit) & ~reg_hit & ~l1_served
+                 & act).astype(jnp.int32),
+                (walk & act).astype(jnp.int32),
+                jnp.where(coal_hit & ~l1_served & act, probes_used, 0),
+                jnp.where(~l1_served & act, pred_ok, 0),
+                jnp.where(act, cyc, 0),
+                cov_delta,
+                jnp.int32(0),
+            ])
+            new["counters"] = st["counters"] + delta
+            new["t"] = t + act.astype(jnp.int32)
+            se = lane["sample_every"]
+            slot = jnp.minimum(t // se, N_COV_SAMPLES - 1)
+            new["cov_samples"] = _cond_set(st["cov_samples"], slot,
+                                           new["counters"][C_COV],
+                                           (t % se == se - 1) & active)
+
+            out_ppn = jnp.where(
+                l1_served, l1_out_ppn,
+                jnp.where(l2_hit, l2_ppn_val,
+                          jnp.where(side_hit, side_ppn, ppn_true)))
+            return new, out_ppn
+
+        return jax.lax.scan(step, st_init, jnp.arange(T, dtype=jnp.int32))
+
+    return jax.vmap(one_lane)(lanes, st0)
+
+
+_run_lanes_jit = jax.jit(_run_lanes_impl)
+_run_lanes_pmap = jax.pmap(_run_lanes_impl, in_axes=(0, None, 0))
+
+
+def _simulate_lanes(lanes, stacks, st0):
+    """Dispatch to pmap over virtual host devices when available (lanes are
+    sharded across devices), else a single jitted vmap."""
+    dev = jax.local_device_count()
+    L = lanes["map_id"].shape[0]
+    if dev > 1 and L % dev == 0:
+        def shard(x):
+            return x.reshape((dev, L // dev) + x.shape[1:])
+
+        stF, ppns = _run_lanes_pmap(
+            {k: shard(v) for k, v in lanes.items()}, stacks,
+            {k: shard(v) for k, v in st0.items()})
+        unshard = lambda x: np.asarray(x).reshape((L,) + x.shape[2:])  # noqa: E731
+        return ({k: unshard(v) for k, v in jax.device_get(stF).items()},
+                unshard(jax.device_get(ppns)))
+    stF, ppns = _run_lanes_jit(lanes, stacks, st0)
+    return jax.device_get(stF), np.asarray(jax.device_get(ppns))
+
+
+# ---------------------------------------------------------------------------
+# On-disk result cache
+# ---------------------------------------------------------------------------
+
+_GIT_DESCRIBE: Optional[str] = None
+_CODE_FINGERPRINT: Optional[str] = None
+
+
+def _git_describe() -> str:
+    global _GIT_DESCRIBE
+    if _GIT_DESCRIBE is None:
+        try:
+            _GIT_DESCRIBE = subprocess.run(
+                ["git", "describe", "--always", "--dirty"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip() or "nogit"
+        except (OSError, subprocess.SubprocessError):
+            _GIT_DESCRIBE = "nogit"
+    return _GIT_DESCRIBE
+
+
+def _code_fingerprint() -> str:
+    """git describe + a content hash of the engine sources, so uncommitted
+    edits to the simulation semantics invalidate the cache too (a dirty
+    tree always yields the same '<sha>-dirty' describe string)."""
+    global _CODE_FINGERPRINT
+    if _CODE_FINGERPRINT is None:
+        h = hashlib.sha256(_git_describe().encode())
+        here = os.path.dirname(os.path.abspath(__file__))
+        for fname in ("simulator.py", "sweep.py", "page_table.py"):
+            try:
+                with open(os.path.join(here, fname), "rb") as f:
+                    h.update(f.read())
+            except OSError:
+                h.update(b"?")
+        _CODE_FINGERPRINT = h.hexdigest()
+    return _CODE_FINGERPRINT
+
+
+def _array_digest(a: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
+             ) -> str:
+    """Stable cache key: spec config + mapping/trace content + code version.
+
+    ``_digests`` is an id-keyed memo so sweeps that share one mapping/trace
+    across many specs hash each array once (valid while the arrays are kept
+    alive by the caller, as run_sweep does).
+    """
+    def digest(a: np.ndarray) -> str:
+        if _digests is None:
+            return _array_digest(a)
+        d = _digests.get(id(a))
+        if d is None:
+            d = _digests[id(a)] = _array_digest(a)
+        return d
+
+    h = hashlib.sha256()
+    h.update(repr(cell.spec).encode())
+    h.update(digest(cell.mapping.ppn).encode())
+    h.update(digest(cell.trace).encode())
+    h.update(_code_fingerprint().encode())
+    return h.hexdigest()[:32]
+
+
+_COUNTER_FIELDS = ("accesses", "l1_hits", "l2_regular_hits",
+                   "l2_coalesced_hits", "walks", "aligned_probes",
+                   "pred_correct", "cycles")
+
+
+def _cache_load(path: str) -> Optional[SimResult]:
+    if not os.path.exists(path):
+        return None
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            counters = z["counters"]
+            return SimResult(
+                name=str(z["name"]),
+                **{f: int(counters[i]) for i, f in enumerate(_COUNTER_FIELDS)},
+                coverage_mean=float(z["coverage_mean"]),
+                ppn=z["ppn"],
+            )
+    except (OSError, KeyError, ValueError):
+        return None
+
+
+def _cache_store(path: str, r: SimResult) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}.npz"
+    np.savez_compressed(
+        tmp, name=np.str_(r.name),
+        counters=np.array([getattr(r, f) for f in _COUNTER_FIELDS], np.int64),
+        coverage_mean=np.float64(r.coverage_mean), ppn=r.ppn)
+    os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator
+# ---------------------------------------------------------------------------
+
+DEFAULT_CACHE_DIR = os.path.join("results", "sweep_cache")
+
+
+def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
+              cache_dir: str = DEFAULT_CACHE_DIR) -> SweepResult:
+    """Simulate every cell, batched into one compiled vmapped scan.
+
+    Results are bit-identical to per-cell :func:`run_method` calls.  With
+    ``cache`` enabled, previously simulated cells (same spec, mapping, trace
+    and git version) are loaded from ``cache_dir`` and skipped.
+    """
+    t0 = time.time()
+    cache = cache and not os.environ.get("REPRO_SWEEP_NO_CACHE")
+    cells = list(cells)
+    results: List[Optional[SimResult]] = [None] * len(cells)
+    todo: List[int] = []
+    hits = 0
+    digests: Dict[int, str] = {}   # id-keyed; cells keep the arrays alive
+    keys = [cell_key(c, digests) if cache else "" for c in cells]
+    for i, c in enumerate(cells):
+        if cache:
+            r = _cache_load(os.path.join(cache_dir, keys[i] + ".npz"))
+            if r is not None:
+                results[i] = r
+                hits += 1
+                continue
+        todo.append(i)
+
+    if todo:
+        sub = [cells[i] for i in todo]
+        lanes, stacks, (L, max_sets, max_ways) = _pack_lanes(sub)
+        st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"])
+        stF, ppns = _simulate_lanes(
+            {k: jnp.asarray(v) for k, v in lanes.items()},
+            {k: jnp.asarray(v) for k, v in stacks.items()},
+            {k: jnp.asarray(v) for k, v in st0.items()})
+        counters = np.asarray(stF["counters"])
+        cov_samples = np.asarray(stF["cov_samples"])
+        for j, i in enumerate(todo):
+            c = cells[i]
+            t_real = c.trace.shape[0]
+            cnt = counters[j]
+            r = SimResult(
+                name=c.spec.name, accesses=t_real,
+                l1_hits=int(cnt[C_L1]),
+                l2_regular_hits=int(cnt[C_REG]),
+                l2_coalesced_hits=int(cnt[C_COAL]),
+                walks=int(cnt[C_WALK]),
+                aligned_probes=int(cnt[C_PROBE]),
+                pred_correct=int(cnt[C_PRED]),
+                cycles=int(cnt[C_CYC]),
+                coverage_mean=float(np.mean(cov_samples[j])),
+                ppn=ppns[j, :t_real],
+            )
+            results[i] = r
+            if cache:
+                _cache_store(os.path.join(cache_dir, keys[i] + ".npz"), r)
+
+    stats = dict(n_cells=len(cells), cache_hits=hits,
+                 simulated=len(todo), wall_s=round(time.time() - t0, 3))
+    return SweepResult(results=results, stats=stats)  # type: ignore[arg-type]

@@ -17,7 +17,7 @@ Patterns:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -59,7 +59,6 @@ def _bfs(n_pages: int, length: int, rng: np.random.Generator,
     out = np.empty(length, dtype=np.int64)
     cur = int(rng.integers(0, n_pages))
     # vectorized-ish: segment between jumps shares a frontier centre
-    seg_id = np.cumsum(jumps)
     centres = targets[np.searchsorted(np.flatnonzero(jumps), np.arange(length), side="right") - 1] \
         if jumps.any() else np.full(length, cur)
     centres[:int(np.argmax(jumps))] = cur if jumps.any() else cur

@@ -12,7 +12,6 @@ only has S=2.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

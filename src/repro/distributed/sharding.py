@@ -117,12 +117,13 @@ def _resolve(axis: AxisVal, mesh: Mesh, dim_size: Optional[int] = None
     if not names:
         return None
     if dim_size is not None:
-        total = int(np.prod([mesh.shape[a] for a in names]))
         while names and dim_size % int(np.prod([mesh.shape[a] for a in names])) != 0:
             names = names[1:]   # drop outermost axis until divisible
         if not names:
             return None
-    return names if len(names) > 1 else names[0]
+    # preserve the declared form: tuple-valued rules stay tuples even when
+    # axis dropping leaves a single mesh axis (("pod","data") -> ("data",))
+    return names if (len(names) > 1 or isinstance(axis, tuple)) else names[0]
 
 
 def logical_to_pspec(logical: Sequence[Optional[str]], mesh: Mesh,
@@ -135,10 +136,16 @@ def logical_to_pspec(logical: Sequence[Optional[str]], mesh: Mesh,
         ax = _resolve(ax, mesh, None if shape is None else shape[i])
         # a mesh axis may appear at most once in a PartitionSpec
         if ax is not None:
-            names = ax if isinstance(ax, tuple) else (ax,)
+            was_tuple = isinstance(ax, tuple)
+            names = ax if was_tuple else (ax,)
             names = tuple(a for a in names if a not in used)
             used.update(names)
-            ax = (names if len(names) > 1 else (names[0] if names else None))
+            if not names:
+                ax = None
+            elif len(names) > 1 or was_tuple:
+                ax = names
+            else:
+                ax = names[0]
         out.append(ax)
     return P(*out)
 

@@ -39,8 +39,6 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     k_pos = ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
 
-    run = (not causal) or True
-
     @pl.when((not causal) or (ki * block_k <= qi * block_q + block_q - 1))
     def _attend():
         q = q_ref[0].astype(jnp.float32)          # [Bq, D]
@@ -70,8 +68,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(ki == pl.num_programs(2) - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -145,9 +145,9 @@ def merge_partials(parts) -> jax.Array:
     ms = jnp.stack([p[1] for p in parts])            # [C, B, H]
     m_star = jnp.max(ms, axis=0)
     o = 0.0
-    l = 0.0
+    lsum = 0.0
     for o_k, m_k, l_k in parts:
         w = jnp.exp(m_k - m_star)
         o = o + o_k * w[..., None]
-        l = l + l_k * w
-    return o / jnp.maximum(l, 1e-30)[..., None]
+        lsum = lsum + l_k * w
+    return o / jnp.maximum(lsum, 1e-30)[..., None]

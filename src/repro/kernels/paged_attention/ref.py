@@ -7,8 +7,6 @@ for every (shape, dtype, contiguity pattern) — see tests/test_kernels.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -23,8 +23,6 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from ..core.determine_k import determine_k
-
 
 def window_coverage(block_table: np.ndarray, k: int) -> np.ndarray:
     """bool[n_windows]: class-k coverage of each 2^k-page logical window.

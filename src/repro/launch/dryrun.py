@@ -28,16 +28,15 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..configs import SHAPES, ShapeSpec, all_cells, cell_status, get_config
-from ..distributed.sharding import (ACT_RULES, act_pspec, dp_size,
-                                    logical_to_pspec, param_sharding)
+from ..distributed.sharding import act_pspec, dp_size, param_sharding
 from ..models import Model, RunConfig
 from ..models.config import ModelConfig
 from ..models.model import (decode_state_logical, decode_state_shapes,
                             model_specs, padded_vocab)
-from ..models.common import count_params, logical_tree, spec_shapes
+from ..models.common import logical_tree, spec_shapes
 from ..optim import OptConfig, abstract_opt, opt_logical
 from ..train.train_step import (batch_logical_axes, make_batch_shapes,
                                 make_serve_step, make_train_step)
@@ -65,7 +64,6 @@ def cell_runconfig(cfg: ModelConfig, shape: ShapeSpec, mesh,
     if shape.kind == "train":
         # auto-microbatching: keep per-layer saved activations ~<=2GB/device
         b_loc = max(shape.global_batch // dp, 1)
-        from ..models.model import n_superblocks, block_period
         bytes_per_layer_carry = (b_loc * shape.seq_len * cfg.d_model * 2)
         saved = bytes_per_layer_carry * cfg.n_layers
         micro = 1

@@ -11,7 +11,7 @@ Production topology (TPU v5e target):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

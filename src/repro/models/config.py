@@ -7,7 +7,7 @@ hillclimb iterates on (dtypes, chunking, microbatching, sharding rule set).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,6 @@ and is validated against :func:`causal_attention` as its oracle.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -72,10 +71,10 @@ def _attn_block(q, k, v, mask, scale):
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)                         # [b,h,q]
     p = jnp.exp(s - m[..., None])
-    l = jnp.sum(p, axis=-1)
+    lsum = jnp.sum(p, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
-    return m, l, o
+    return m, lsum, o
 
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -138,11 +137,11 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m0 = jnp.full((B, Hq, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, Hq, q_chunk), jnp.float32)
         o0 = jnp.zeros((B, q_chunk, Hq, D), jnp.float32)
-        (m, l, o), _ = jax.lax.scan(
+        (m, lsum, o), _ = jax.lax.scan(
             kv_step, (m0, l0, o0),
             (jnp.arange(nk), kb.swapaxes(0, 1), vb.swapaxes(0, 1)))
-        l = jnp.maximum(l, 1e-20)
-        return o / l.transpose(0, 2, 1)[..., None]
+        lsum = jnp.maximum(lsum, 1e-20)
+        return o / lsum.transpose(0, 2, 1)[..., None]
 
     qb = qp.reshape(B, nq, q_chunk, Hq, D).swapaxes(0, 1)
     out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))

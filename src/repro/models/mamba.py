@@ -18,10 +18,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .common import Spec
-from .config import MambaConfig, ModelConfig
+from .config import ModelConfig
 
 
 def mamba_specs(cfg: ModelConfig) -> dict:

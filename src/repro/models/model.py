@@ -11,8 +11,7 @@ through the same superblock scan as stacked pytrees.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -618,7 +617,6 @@ class Model:
         """One decode step: tokens [B, 1], kv_len [B] → (logits, new state)."""
         cfg, rc = self.cfg, self.rc
         cdt = jnp.dtype(rc.compute_dtype)
-        B = tokens.shape[0]
         x = self._embed(params, tokens)
         positions = kv_len[:, None]
 

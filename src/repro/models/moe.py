@@ -22,7 +22,7 @@ Expert sharding (RunConfig.expert_sharding):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ decode carries O(1) state — hence xlstm runs ``long_500k`` trivially.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,11 +9,10 @@ distributed-optimization trick that lets jamba-398B fit a single 256-chip pod
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PyTree = Any
 

@@ -18,9 +18,8 @@ This is where the paper's pieces meet end-to-end:
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,6 @@ import numpy as np
 from ..kernels.paged_attention.ops import build_descriptors, dma_stats
 from ..kvcache.allocator import PagedKVAllocator
 from ..kvcache.block_table import choose_kernel_classes
-from ..models.config import ModelConfig, RunConfig
 from ..models.model import Model, block_period, n_superblocks, _mixer_kind
 
 

@@ -8,15 +8,14 @@ grads with the next microbatch's compute when grads are sharded (ZeRO).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..models.config import ModelConfig, RunConfig
-from ..models.model import Model, cross_entropy
+from ..models.config import ModelConfig
+from ..models.model import Model
 from ..optim.optimizer import OptConfig, apply_opt
 
 PyTree = Any

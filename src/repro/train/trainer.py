@@ -23,10 +23,9 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from ..checkpoint.checkpointer import Checkpointer
-from ..data.pipeline import DataPipeline, PipelineConfig
+from ..data.pipeline import DataPipeline
 from ..models.model import Model
 from ..optim.optimizer import OptConfig, init_opt
 from .train_step import make_train_step

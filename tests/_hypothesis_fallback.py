@@ -1,0 +1,120 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The real hypothesis is declared as a test dependency in pyproject.toml and is
+what CI runs.  Hermetic environments without it (e.g. the pinned benchmark
+container) still need the suite to *collect and pass*, so ``conftest.py``
+registers this module as ``hypothesis`` when the import fails.  It implements
+just the API surface our tests use — ``@given``/``@settings`` with integers,
+floats, booleans, lists, tuples and sampled_from strategies — drawing a fixed
+number of deterministic pseudo-random examples (no shrinking, no database).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+from typing import Any, Callable, List
+
+DEFAULT_MAX_EXAMPLES = 40
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int = -(2**63), max_value: int = 2**63 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        options = list(seq)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10):
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elements.example_for(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*parts: _Strategy):
+        return _Strategy(
+            lambda rng: tuple(p.example_for(rng) for p in parts))
+
+
+class _HypothesisHandle:
+    """Mimics hypothesis' handle: plugins reach for ``.inner_test``."""
+
+    def __init__(self, inner_test):
+        self.inner_test = inner_test
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test once per drawn example (deterministic seed)."""
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # parameters; kwargs strategies fill by name; anything left over is
+        # a pytest fixture and must stay visible in the signature.
+        pos_names = names[-len(arg_strategies):] if arg_strategies else []
+        drawn_names = set(pos_names) | set(kw_strategies)
+        fixture_params = [p for p in sig.parameters.values()
+                          if p.name not in drawn_names]
+
+        @functools.wraps(fn)
+        def wrapper(**fixtures):
+            n = getattr(fn, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in itertools.islice(itertools.count(), n):
+                drawn = {name: s.example_for(rng)
+                         for name, s in zip(pos_names, arg_strategies)}
+                drawn.update((k, s.example_for(rng))
+                             for k, s in kw_strategies.items())
+                try:
+                    fn(**fixtures, **drawn)
+                except Exception:
+                    print(f"Falsifying example ({i + 1}/{n}): {drawn!r}")
+                    raise
+
+        # pytest must only see the fixture parameters (setting __signature__
+        # also stops inspect from following __wrapped__ to the original)
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        wrapper.hypothesis = _HypothesisHandle(fn)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        # runs before @given wraps (decorators apply bottom-up), so stash the
+        # budget on the function for given() to read; after given, update the
+        # wrapper's view too.
+        fn._max_examples = max_examples
+        inner = getattr(fn, "__wrapped__", None)
+        if inner is not None:
+            inner._max_examples = max_examples
+        return fn
+
+    return decorate

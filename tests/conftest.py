@@ -1,8 +1,17 @@
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
 # only launch/dryrun.py forces 512 host devices (in its own process).
+
+try:  # real hypothesis (declared in pyproject [test]) when available
+    import hypothesis  # noqa: F401
+except ImportError:  # hermetic containers: register the minimal fallback
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
 
 
 @pytest.fixture(scope="session")

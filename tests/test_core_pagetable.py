@@ -3,11 +3,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Mapping, aligned_vpn, alignment_class, compute_runs,
-                        contiguity_chunks, contiguity_histogram, covers,
+from repro.core import (aligned_vpn, alignment_class, contiguity_chunks,
                         determine_k, f_alignment, fill_select, make_mapping,
                         stored_contiguity)
-from repro.core.aligned import Entry, REGULAR, aligned_lookup
+from repro.core.aligned import REGULAR, aligned_lookup
 
 # The paper's Figure 4 page table: VPN -> PPN (K = {1, 2, 3}).
 FIG4_PPN = [0x8, 0x9, 0x2, 0x0, 0x4, 0x5, 0x6, 0x3,

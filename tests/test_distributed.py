@@ -1,12 +1,9 @@
 """Distribution substrate tests — run in subprocesses with 8 fake devices
 (the main pytest process keeps the default 1 device for smoke tests)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -1,8 +1,6 @@
 """Loop-aware HLO analyzer: exact flop/collective counts on known graphs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
 

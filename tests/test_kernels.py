@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention_gqa
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.paged_attention.ops import (build_descriptors, dma_stats,
+from repro.kernels.paged_attention.ops import (dma_stats,
                                                paged_attention)
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kvcache.allocator import PagedKVAllocator
@@ -82,7 +81,6 @@ def test_paged_attention_any_fragmentation(frag, seed, psi):
     any K chosen by Algorithm 3."""
     rng = np.random.default_rng(seed)
     q, kp, vp, bt, lens = _random_pool_case(rng, 2, 4, 2, 32, 8, 64, frag)
-    alloc_hist = {}
     K = choose_kernel_classes(
         {int(s): 1 for s in np.diff(np.flatnonzero(
             np.diff(np.concatenate([[-9], bt[0][bt[0] >= 0]])) != 1))

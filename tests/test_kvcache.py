@@ -1,10 +1,9 @@
 """Allocator + block-table invariants (property-based)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mappings import BuddyAllocator
-from repro.kvcache import PagedKVAllocator, assign_classes, window_coverage
+from repro.kvcache import PagedKVAllocator, assign_classes
 from repro.kvcache.block_table import choose_kernel_classes
 
 
@@ -78,9 +77,6 @@ def test_buddy_policy_produces_more_contiguity():
         for i in range(0, 40, 2):
             alloc.free(1000 + i)
         alloc.allocate(1, 16)
-        hist_pages = [s for s, f in alloc.contiguity_histogram().items()
-                      if 1 in alloc.seqs for _ in range(f)]
-        runs = []
         phys = np.asarray(alloc.seqs[1].pages, np.int64)
         from repro.core.page_table import compute_runs
         _, rl = compute_runs(phys)

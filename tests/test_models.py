@@ -9,7 +9,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import Model, RunConfig, init_decode_state, padded_vocab
 from repro.optim import OptConfig, init_opt
 from repro.train import make_train_step
-from repro.data import DataPipeline, PipelineConfig
+from repro.data import PipelineConfig
 
 RC = RunConfig(attn_q_chunk=32, attn_kv_chunk=32, scan_chunk=16)
 

@@ -1,15 +1,12 @@
 """Recurrent layers: chunked-parallel prefill == step-by-step decode."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.models import Model, RunConfig
 from repro.models.config import MambaConfig, ModelConfig
 from repro.models.mamba import mamba_layer, mamba_specs
-from repro.models.xlstm import (MLSTMState, SLSTMState, mlstm_layer,
-                                mlstm_specs, slstm_layer, slstm_specs)
+from repro.models.xlstm import (mlstm_layer, mlstm_specs, slstm_layer,
+                                slstm_specs)
 from repro.models.common import init_params
 
 

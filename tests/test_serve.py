@@ -1,7 +1,6 @@
 """Serving engine: end-to-end paged decode == dense decode, scheduling."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -98,7 +97,7 @@ def test_fragmented_pool_still_exact(model_and_params, rng):
                       interpret=True, alloc_policy="page")
     eng = ServingEngine(model, params, ec)
     eng.add_request(prompt, max_new_tokens=3)
-    m = eng.run_to_completion()
+    eng.run_to_completion()
     assert eng.requests[0].generated == want
 
 
@@ -132,7 +131,7 @@ def test_preemption_under_pool_pressure(model_and_params, rng):
     eng = ServingEngine(model, params, ec)
     for p in prompts:
         eng.add_request(p, max_new_tokens=3)
-    m = eng.run_to_completion()
+    eng.run_to_completion()
     assert all(r.state == "done" for r in eng.requests.values())
     for rid, want in enumerate(wants):
         assert eng.requests[rid].generated == want, rid

@@ -1,0 +1,85 @@
+"""Batched sweep engine: bit-exact parity with run_method + cache behavior."""
+import numpy as np
+import pytest
+
+from repro.core import (anchor_spec, base_spec, cluster_spec, colt_spec,
+                        demand_mapping, generate_trace, kaligned_spec,
+                        rmm_spec, run_method, thp_spec)
+from repro.core.sweep import SweepCell, cell_key, run_sweep
+
+COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
+            "walks", "aligned_probes", "pred_correct", "cycles",
+            "coverage_mean")
+
+ALL_KINDS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
+             anchor_spec(6), kaligned_spec([8, 6, 4]),
+             kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    m = demand_mapping(1 << 12, seed=11)
+    m2 = demand_mapping(1 << 11, seed=5)
+    tr = generate_trace("multiscale", 0, 2500, seed=4, mapping=m)
+    tr2 = generate_trace("zipf", 0, 1800, seed=9, mapping=m2)
+    return m, m2, tr, tr2
+
+
+@pytest.fixture(scope="module")
+def sweep_and_oracle(small_world):
+    m, m2, tr, tr2 = small_world
+    # heterogeneous batch: two mappings of different sizes, two trace
+    # lengths, all seven method kinds (plus a predictor-less kaligned) —
+    # exercises every padding axis at once
+    cells = [SweepCell(s, m, tr) for s in ALL_KINDS]
+    cells += [SweepCell(s, m2, tr2) for s in ALL_KINDS]
+    sweep = run_sweep(cells, cache=False)
+    oracle = [run_method(c.spec, c.mapping, c.trace) for c in cells]
+    return cells, sweep, oracle
+
+
+@pytest.mark.parametrize("i", range(2 * len(ALL_KINDS)),
+                         ids=lambda i: f"{ALL_KINDS[i % len(ALL_KINDS)].name}"
+                                       f"/m{i // len(ALL_KINDS)}")
+def test_sweep_matches_run_method_exactly(sweep_and_oracle, i):
+    """Every counter and every translated PPN must match the per-call oracle
+    bit-for-bit — the padded batched engine is the same machine."""
+    _, sweep, oracle = sweep_and_oracle
+    got, want = sweep.results[i], oracle[i]
+    for f in COUNTERS:
+        assert getattr(got, f) == getattr(want, f), f
+    np.testing.assert_array_equal(got.ppn, want.ppn)
+
+
+def test_sweep_stats(sweep_and_oracle):
+    cells, sweep, _ = sweep_and_oracle
+    assert sweep.stats["n_cells"] == len(cells)
+    assert sweep.stats["simulated"] == len(cells)
+    assert sweep.stats["cache_hits"] == 0
+
+
+def test_cache_roundtrip(small_world, tmp_path):
+    """Second run_sweep hits the on-disk cache and skips simulation."""
+    m, _, tr, _ = small_world
+    cells = [SweepCell(base_spec(), m, tr),
+             SweepCell(kaligned_spec([6, 4]), m, tr)]
+    cdir = str(tmp_path / "sweep_cache")
+    first = run_sweep(cells, cache=True, cache_dir=cdir)
+    assert first.stats["simulated"] == 2
+    second = run_sweep(cells, cache=True, cache_dir=cdir)
+    assert second.stats["simulated"] == 0
+    assert second.stats["cache_hits"] == 2
+    for a, b in zip(first.results, second.results):
+        for f in COUNTERS:
+            assert getattr(a, f) == getattr(b, f), f
+        np.testing.assert_array_equal(a.ppn, b.ppn)
+
+
+def test_cache_key_sensitivity(small_world):
+    """The key must change when spec, mapping, or trace content changes."""
+    m, m2, tr, tr2 = small_world
+    base = cell_key(SweepCell(base_spec(), m, tr))
+    assert cell_key(SweepCell(thp_spec(), m, tr)) != base
+    assert cell_key(SweepCell(base_spec(), m2, tr)) != base
+    assert cell_key(SweepCell(base_spec(), m, tr2)) != base
+    assert cell_key(SweepCell(base_spec(), m, tr)) == base

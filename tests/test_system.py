@@ -4,7 +4,6 @@ These are the integration tests that pin the reproduction: relative-miss
 ordering across methods (Fig 1/Table 4 structure) and the serving stack's
 descriptor reduction under mixed contiguity.
 """
-import numpy as np
 import pytest
 
 from repro.core import (anchor_static, base_spec, generate_trace,

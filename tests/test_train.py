@@ -44,7 +44,6 @@ def test_q8_roundtrip_bounded_error(seed, n):
     x = np.random.default_rng(seed).standard_normal(n).astype(np.float32) * 10
     q, s = _q8(jnp.asarray(x))
     back = np.asarray(_dq8(q, s, x.shape))
-    blockmax = np.abs(x).max() if n else 0
     # error bounded by scale/2 per block (127 levels)
     err = np.abs(back - x)
     assert err.max() <= (np.abs(x).max() / 127) * 1.01 + 1e-6
