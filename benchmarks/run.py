@@ -24,6 +24,7 @@ from typing import Any, Dict, List
 
 from . import _env  # noqa: F401  (must precede jax-importing modules)
 from . import paged_kernel, roofline_summary, tlb_suite
+from repro.scenarios import clear_materialized_cache
 
 SMOKE_TRACE_LEN = 4096
 SMOKE_MAX_PAGES = 1 << 15
@@ -49,6 +50,10 @@ BENCHES: List = [
     ("tlb_predictor", "Table 6", tlb_suite.bench_predictor),
     ("tlb_k_sweep", "Figure 9", tlb_suite.bench_k_sweep),
     ("tlb_cpi", "Figures 10/11", tlb_suite.bench_cpi),
+    ("tlb_scenarios", "Workload-derived + adversarial scenarios (registry)",
+     tlb_suite.bench_scenarios),
+    ("tlb_scenario_contiguity", "Scenario contiguity (Figs 2-3 analogue)",
+     tlb_suite.bench_scenario_contiguity),
     ("dma_fragmentation", "TPU adaptation: descriptor model",
      paged_kernel.bench_dma_vs_fragmentation),
     ("dma_k_ablation", "TPU adaptation: |K| ablation",
@@ -82,6 +87,13 @@ def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
             mid = rows[len(rows) // 2]
             return (f"frag=0.5: desc_red={mid['desc_reduction']},"
                     f"speedup={mid['speedup']}")
+        if name == "tlb_scenarios":
+            import numpy as np
+            kv = next(r for r in rows if r["scenario"] == "kv-churn")
+            ks = [r["|K|=2"] for r in rows]
+            return (f"kv-churn:|K|=2 rel={kv.get('|K|=2', '')};"
+                    f"mean |K|=2 rel={np.mean(ks):.3f} over {len(rows)}"
+                    " scenarios")
         if name == "engine_end_to_end":
             return f"buddy desc_red={rows[0]['desc_reduction']}"
     except Exception as e:    # derived metrics must never kill the run
@@ -126,6 +138,10 @@ def main(argv=None) -> None:
         t0 = time.time()
         rows = fn(**kwargs)
         dt = time.time() - t0
+        # worlds are memoized per-process so one bench builds each once;
+        # drop them between benches or --full retains every mapping+trace
+        # (hundreds of MB) until exit
+        clear_materialized_cache()
         results[name] = {"artifact": artifact, "rows": rows,
                          "wall_s": round(dt, 1)}
         n_calls = max(len(rows), 1)

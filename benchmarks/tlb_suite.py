@@ -17,33 +17,50 @@ Every bench routes through :func:`repro.core.sweep.run_sweep`: all of its
 compiled once per shape bucket, instead of one ``run_method`` compile+scan
 per cell.  ``max_pages`` caps mapping footprints so the ``--smoke`` tier can
 exercise the identical sweep path in seconds.
+
+Mappings and traces come from the scenario registry
+(:mod:`repro.scenarios`): the paper benches use the synthetic families
+(``synth-*``, ``paper-*``); ``bench_scenarios``/``bench_scenario_contiguity``
+additionally sweep the workload-derived and adversarial scenarios — the
+repo's own serving/training stacks as translation workloads.
 """
 from __future__ import annotations
 
-import zlib
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core import (BENCHMARKS, SimResult, base_spec, cluster_spec,
-                        colt_spec, demand_mapping, generate_trace,
-                        kaligned_for_mapping, rmm_spec, synthetic_mapping,
-                        thp_spec)
+                        colt_spec, kaligned_for_mapping, rmm_spec, thp_spec)
 from repro.core.baselines import anchor_spec
+from repro.core.page_table import contiguity_histogram
 from repro.core.sweep import SweepCell, run_sweep
+from repro.kvcache.block_table import choose_kernel_classes
+from repro.scenarios import get_scenario, list_scenarios
 
 QUICK_BENCHES = ("mcf", "bwaves", "gups", "graph500", "omnetpp", "gromacs",
                  "xalancbmk", "libquantum")
 ANCHOR_GRID_QUICK = (4, 6, 8, 10)
 MAX_PAGES_DEFAULT = 1 << 19
 
+# scenario lanes swept by bench_scenarios; quick keeps the python-driven
+# churn cheap, full runs every workload + adversarial scenario registered
+SCENARIO_LANES_QUICK = ("kv-churn", "kv-churn-page", "kv-gather",
+                        "train-pipeline", "adv-numa")
+SCENARIO_SEEDS = dict(map_seed=0, trace_seed=8)
 
-def _bench_seed(name: str) -> int:
-    """Stable per-benchmark mapping seed (process-independent, unlike
-    ``hash(name)``, so the sweep cache works across runs)."""
-    return zlib.crc32(name.encode()) % 1000
+
+def _scenario_world(name: str, trace_len: int, max_pages: int):
+    data = get_scenario(name).materialize(n_pages=max_pages,
+                                          trace_len=trace_len,
+                                          **SCENARIO_SEEDS)
+    return data
 
 
-def _mapping_for(name: str, n_pages: int):
-    return demand_mapping(n_pages, seed=_bench_seed(name))
+def _paper_world(name: str, trace_len: int, cap, trace_seed: int):
+    """(mapping, trace) of a paper-benchmark analogue via the registry."""
+    n_pages = min(BENCHMARKS[name][1], cap) if cap else BENCHMARKS[name][1]
+    d = get_scenario(f"paper-{name}").materialize(
+        n_pages=n_pages, trace_len=trace_len, trace_seed=trace_seed)
+    return d.mapping, d.trace
 
 
 class SweepPlan:
@@ -103,9 +120,9 @@ def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
     plan = SweepPlan()
     order = []
     for kind in ("small", "medium", "large", "mixed"):
-        m = synthetic_mapping(kind, n_pages, seed=1)
-        tr = generate_trace("multiscale", 0, trace_len, seed=2, mapping=m)
-        _add_suite(plan, m, tr, kind, ANCHOR_GRID_QUICK)
+        d = get_scenario(f"synth-{kind}").materialize(
+            n_pages=n_pages, trace_len=trace_len, map_seed=1, trace_seed=2)
+        _add_suite(plan, d.mapping, d.trace, kind, ANCHOR_GRID_QUICK)
         order.append(kind)
     res = plan.run()
     rows = []
@@ -129,9 +146,7 @@ def bench_demand(trace_len=150_000, quick=True, max_pages=None):
     benches = QUICK_BENCHES if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
     for name in benches:
-        pattern, n_pages = BENCHMARKS[name]
-        m = _mapping_for(name, min(n_pages, cap) if cap else n_pages)
-        tr = generate_trace(pattern, 0, trace_len, seed=3, mapping=m)
+        m, tr = _paper_world(name, trace_len, cap, trace_seed=3)
         _add_suite(plan, m, tr, name, ANCHOR_GRID_QUICK, psis=(2,))
     res = plan.run()
     rows = []
@@ -150,9 +165,7 @@ def bench_coverage(trace_len=120_000, quick=True,
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
     for name in benches:
-        pattern, n_pages = BENCHMARKS[name]
-        m = _mapping_for(name, min(n_pages, max_pages))
-        tr = generate_trace(pattern, 0, trace_len, seed=4, mapping=m)
+        m, tr = _paper_world(name, trace_len, max_pages, trace_seed=4)
         plan.add(base_spec(), m, tr, name, "Base")
         plan.add(colt_spec(), m, tr, name, "COLT")
         plan.add_anchor_static(m, tr, name, grid=(6, 8, 10))
@@ -174,9 +187,7 @@ def bench_predictor(trace_len=120_000, quick=True,
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
     for name in benches:
-        pattern, n_pages = BENCHMARKS[name]
-        m = _mapping_for(name, min(n_pages, max_pages))
-        tr = generate_trace(pattern, 0, trace_len, seed=5, mapping=m)
+        m, tr = _paper_world(name, trace_len, max_pages, trace_seed=5)
         for psi in (2, 3, 4):
             plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
                      name, f"|K|={psi}")
@@ -190,8 +201,10 @@ def bench_predictor(trace_len=120_000, quick=True,
 def bench_k_sweep(trace_len=150_000, n_pages=1 << 19,
                   max_pages=MAX_PAGES_DEFAULT):
     """Figure 9: misses of |K| modes relative to Anchor-Static (mixed)."""
-    m = synthetic_mapping("mixed", min(n_pages, max_pages), seed=1)
-    tr = generate_trace("multiscale", 0, trace_len, seed=6, mapping=m)
+    d = get_scenario("synth-mixed").materialize(
+        n_pages=min(n_pages, max_pages), trace_len=trace_len,
+        map_seed=1, trace_seed=6)
+    m, tr = d.mapping, d.trace
     plan = SweepPlan()
     plan.add_anchor_static(m, tr, "mixed", grid=ANCHOR_GRID_QUICK)
     for psi in (1, 2, 3, 4):
@@ -210,9 +223,7 @@ def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
     benches = ("gups", "mcf", "graph500") if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
     for name in benches:
-        pattern, n_pages = BENCHMARKS[name]
-        m = _mapping_for(name, min(n_pages, max_pages))
-        tr = generate_trace(pattern, 0, trace_len, seed=7, mapping=m)
+        m, tr = _paper_world(name, trace_len, max_pages, trace_seed=7)
         plan.add(base_spec(), m, tr, name, "Base")
         plan.add(thp_spec(), m, tr, name, "THP")
         plan.add(colt_spec(), m, tr, name, "COLT")
@@ -224,3 +235,72 @@ def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
     return [{"benchmark": name,
              **{k: round(v.cpi, 3) for k, v in res[name].items()}}
             for name in benches]
+
+
+# ---------------------------------------------------------------------------
+# Workload-derived / adversarial scenario sweeps (ROADMAP: "open a new
+# workload") — the repo's own serving and training stacks as translation
+# workloads, plus adversarial contiguity generators.
+# ---------------------------------------------------------------------------
+
+
+def _scenario_names(quick: bool) -> Tuple[str, ...]:
+    if quick:
+        return SCENARIO_LANES_QUICK
+    return tuple(sc.name for sc in list_scenarios("workload")
+                 ) + tuple(sc.name for sc in list_scenarios("adversarial"))
+
+
+def bench_scenarios(trace_len=120_000, quick=True,
+                    max_pages=MAX_PAGES_DEFAULT):
+    """Per-scenario relative misses, full method suite through run_sweep.
+
+    Each row is one registered scenario (workload-derived or adversarial):
+    mappings and traces recorded from the in-repo systems, swept exactly
+    like the paper benches.
+    """
+    names = _scenario_names(quick)
+    plan = SweepPlan()
+    for name in names:
+        d = _scenario_world(name, trace_len, max_pages)
+        _add_suite(plan, d.mapping, d.trace, name, ANCHOR_GRID_QUICK,
+                   psis=(2, 3))
+    res = plan.run()
+    rows = []
+    for name in names:
+        cols = res[name]
+        base = cols["Base"].walks
+        rows.append({"scenario": name,
+                     **{k: round(v.walks / max(base, 1), 4)
+                        for k, v in cols.items()}})
+    return rows
+
+
+_HIST_BUCKETS = ((1, 1), (2, 15), (16, 63), (64, 255), (256, 511),
+                 (512, 100_000_000))
+
+
+def bench_scenario_contiguity(trace_len=120_000, quick=True,
+                              max_pages=MAX_PAGES_DEFAULT):
+    """Per-scenario contiguity histograms (the Figs 2–3 measurement, run on
+    our own workloads): % of mapped pages living in chunks of each size
+    bucket, plus the K Algorithm 3 picks from the histogram."""
+    names = _scenario_names(quick)
+    rows = []
+    for name in names:
+        d = _scenario_world(name, trace_len, max_pages)
+        hist = d.meta.get("contiguity_histogram") or \
+            contiguity_histogram(d.mapping)
+        total = sum(s * f for s, f in hist.items()) or 1
+        row = {"scenario": name,
+               "mapped_pages": int((d.mapping.ppn >= 0).sum()),
+               "chunks": int(sum(hist.values()))}
+        for lo, hi in _HIST_BUCKETS:
+            pct = 100.0 * sum(s * f for s, f in hist.items()
+                              if lo <= s <= hi) / total
+            label = f"{lo}" if lo == hi else \
+                (f"{lo}+" if hi >= 100_000_000 else f"{lo}-{hi}")
+            row[f"pages in {label}"] = round(pct, 1)
+        row["K (Alg 3)"] = str(choose_kernel_classes(hist, psi=3) or [0])
+        rows.append(row)
+    return rows

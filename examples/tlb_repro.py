@@ -5,10 +5,24 @@ Runs the full method suite (Base, THP, RMM, COLT, Cluster, Anchor-Static,
 relative-miss tables next to the paper's published numbers.
 
 Run:  PYTHONPATH=src python examples/tlb_repro.py [--quick]
+
+With ``--scenario NAME`` it instead sweeps the full suite over any scenario
+from the registry (``python -c "import repro.scenarios as s; print([x.name
+for x in s.list_scenarios()])"`` lists them) and prints its contiguity
+histogram next to the relative misses — e.g. ``--scenario kv-churn`` runs
+the paper's comparison on the repo's own KV-cache serving workload.
 """
 import argparse
+import os
+import sys
 
-from benchmarks.tlb_suite import bench_demand, bench_synthetic
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))    # repo root, for the benchmarks package
+
+from benchmarks.tlb_suite import (ANCHOR_GRID_QUICK, SweepPlan,  # noqa: E402
+                                  _add_suite, bench_demand, bench_synthetic)
+from repro.core.page_table import contiguity_histogram  # noqa: E402
+from repro.scenarios import get_scenario, list_scenarios  # noqa: E402
 
 PAPER_TABLE4 = {
     # mapping: {method: relative misses}  (paper Table 4)
@@ -27,12 +41,46 @@ PAPER_TABLE4 = {
 }
 
 
+def run_scenario(name: str, n_pages: int, trace_len: int) -> None:
+    """Full method suite over one registered scenario."""
+    sc = get_scenario(name)
+    data = sc.materialize(n_pages=n_pages, trace_len=trace_len, trace_seed=8)
+    print(f"=== scenario {name} ({sc.family}) ===")
+    print(f"  {sc.description}")
+    print(f"  expected contiguity: {sc.contiguity}")
+    hist = data.meta.get("contiguity_histogram") or \
+        contiguity_histogram(data.mapping)
+    top = sorted(hist.items(), key=lambda kv: -kv[0] * kv[1])[:8]
+    print("  contiguity histogram (size×count, by covered pages): "
+          + "  ".join(f"{s}×{f}" for s, f in top))
+    plan = SweepPlan()
+    _add_suite(plan, data.mapping, data.trace, name, ANCHOR_GRID_QUICK)
+    cols = plan.run()[name]
+    base = max(cols["Base"].walks, 1)
+    print("  relative misses vs Base:")
+    for label, r in cols.items():
+        print(f"    {label:14s} {r.walks / base:6.3f}   (cpi {r.cpi:.2f})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scenario", metavar="NAME",
+                    help="sweep one registered scenario instead of the "
+                         "paper tables ('list' to enumerate)")
     args = ap.parse_args()
     n = 1 << 18 if args.quick else 1 << 19
     tl = 100_000 if args.quick else 200_000
+
+    if args.scenario == "list":
+        for sc in list_scenarios():
+            print(f"{sc.name:18s} [{sc.family}] {sc.description}")
+        return
+    if args.scenario:
+        run_scenario(args.scenario,
+                     n_pages=1 << 16 if args.quick else 1 << 17,
+                     trace_len=tl)
+        return
 
     print("=== Table 4, synthetic mappings (ours vs paper) ===")
     rows = bench_synthetic(trace_len=tl, n_pages=n)

@@ -1,0 +1,72 @@
+"""Markdown link checker for the docs CI job.
+
+Walks every tracked ``*.md`` file and verifies that relative link targets
+exist in the working tree.  ``http(s)``/``mailto`` links are skipped (CI
+must not depend on the network); ``#Lnn``/anchor fragments are stripped
+before the existence check, so ``file.py#L123``-style references stay
+checkable as files.
+
+Exit code 1 with a listing when any link is broken.
+
+    python scripts/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".ruff_cache",
+             "results", ".github", ".venv", "venv", "node_modules",
+             ".claude"}
+# arxiv-scraped reference material ships with figure links we don't vendor
+SKIP_FILES = {"PAPERS.md", "SNIPPETS.md"}
+
+
+def md_files(root: str):
+    try:
+        out = subprocess.run(["git", "ls-files", "*.md"], cwd=root,
+                             capture_output=True, text=True, check=True)
+        names = out.stdout.splitlines()
+    except (OSError, subprocess.CalledProcessError):
+        # not a git checkout: walk, skipping virtualenvs and caches
+        names = []
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+            names.extend(os.path.relpath(os.path.join(dirpath, f), root)
+                         for f in filenames if f.endswith(".md"))
+    for name in names:
+        if os.path.basename(name) not in SKIP_FILES:
+            yield os.path.join(root, name)
+
+
+def check(root: str) -> int:
+    broken = []
+    n_links = 0
+    for md in sorted(md_files(root)):
+        with open(md, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:          # pure in-page anchor
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), path))
+            n_links += 1
+            if not os.path.exists(resolved):
+                broken.append((md, target))
+    rel = os.path.relpath
+    for md, target in broken:
+        print(f"BROKEN  {rel(md, root)} -> {target}", file=sys.stderr)
+    print(f"checked {n_links} relative links in docs; "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else os.getcwd()))

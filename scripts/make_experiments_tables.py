@@ -97,9 +97,28 @@ def render_dryrun(final_dir, base_dir=None):
               f"| {c_mp/max(c_sp,1e-12):.2f}× |")
 
 
+SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios")
+
+
+def _md_cell(v) -> str:
+    # '|K|=2'-style labels must not break the GFM table structure
+    return str(v).replace("|", "\\|")
+
+
+def _md_table(rows):
+    cols = list(rows[0].keys())
+    print("| " + " | ".join(_md_cell(c) for c in cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(_md_cell(r.get(c, "")) for c in cols) + " |")
+    print()
+
+
 def render_tlb(path):
     """Markdown tables for the paper's TLB artifacts from the batched-sweep
-    results/benchmarks.json (one section per table/figure)."""
+    results/benchmarks.json (one section per table/figure), plus a dedicated
+    per-scenario section pairing each workload-derived/adversarial
+    scenario's contiguity histogram with its miss-rate comparison."""
     with open(path) as f:
         payload = json.load(f)
     # pre-sweep runs wrote the sections dict at top level
@@ -108,18 +127,29 @@ def render_tlb(path):
     total = payload.get("total_wall_s", "?")
     print(f"## TLB sweep results  (tier={tier}, total {total}s)\n")
     for name, sec in sections.items():
-        if not name.startswith("tlb_"):
+        if not name.startswith("tlb_") or name in SCENARIO_SECTIONS:
             continue
         rows = sec.get("rows") or []
         if not rows:
             continue
         print(f"### {name} — {sec.get('artifact', '')}\n")
-        cols = list(rows[0].keys())
-        print("| " + " | ".join(str(c) for c in cols) + " |")
-        print("|" + "---|" * len(cols))
-        for r in rows:
-            print("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
-        print()
+        _md_table(rows)
+
+    if any(sections.get(s, {}).get("rows") for s in SCENARIO_SECTIONS):
+        print("## Scenario registry: workload-derived contiguity\n")
+        print("Mappings and VPN traces recorded from the repo's own serving"
+              " and training stacks (plus adversarial generators), swept"
+              " through `run_sweep` like the paper benches — see"
+              " `docs/scenarios.md` for each scenario's definition.\n")
+        cont = sections.get("tlb_scenario_contiguity", {}).get("rows")
+        if cont:
+            print("### Contiguity histograms (the Figs 2–3 measurement on"
+                  " our workloads)\n")
+            _md_table(cont)
+        sc = sections.get("tlb_scenarios", {}).get("rows")
+        if sc:
+            print("### Relative TLB misses per scenario (Base = 1.0)\n")
+            _md_table(sc)
 
 
 def main():

@@ -23,6 +23,11 @@ import numpy as np
 UNMAPPED = -1
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 if n <= 1 else 1 << int(n - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class Mapping:
     """A virtual→physical page mapping with derived contiguity metadata."""

@@ -58,7 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import Mapping, cluster_bitmap, huge_page_backed
+from .page_table import (Mapping, cluster_bitmap, huge_page_backed,
+                         next_pow2 as _next_pow2)
 from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
                         L1H_SETS, L1H_WAYS, LAT_COAL, LAT_EXTRA_PROBE,
                         LAT_L2_REG, LAT_WALK, N_COV_SAMPLES, NEG, REGULAR,
@@ -84,13 +85,24 @@ N_COUNTERS = 9
 (C_L1, C_REG, C_COAL, C_WALK, C_PROBE, C_PRED, C_CYC, C_COV) = range(8)
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << max(int(n - 1).bit_length(), 0)
-
-
 @dataclasses.dataclass(frozen=True)
 class SweepCell:
-    """One cell of a sweep: simulate ``spec`` over ``(mapping, trace)``."""
+    """One cell of a sweep: simulate ``spec`` over ``(mapping, trace)``.
+
+    * ``spec``    — a :class:`~repro.core.simulator.MethodSpec` (build one
+      with the factories in :mod:`repro.core.baselines`); its static config
+      becomes per-lane *data* in the batched engine, so cells with different
+      specs still share one compiled program.
+    * ``mapping`` — a contiguity-annotated
+      :class:`~repro.core.page_table.Mapping`; get one from a registered
+      scenario (:mod:`repro.scenarios`) or the generators in
+      :mod:`repro.core.mappings`.
+    * ``trace``   — 1-D integer array of VPNs (every entry must be a mapped
+      page of ``mapping``).
+
+    Mappings/traces shared between cells (by object identity) are packed and
+    hashed once, so build each world once and reuse it across specs.
+    """
 
     spec: MethodSpec
     mapping: Mapping
@@ -647,6 +659,13 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
              ) -> str:
     """Stable cache key: spec config + mapping/trace content + code version.
 
+    The key is a SHA-256 over (a) ``repr(spec)`` — every static knob of the
+    method, (b) the *content* of ``mapping.ppn`` and ``trace`` (dtype, shape,
+    bytes — not object identity, so deterministically regenerated worlds hit
+    the cache across processes), and (c) :func:`_code_fingerprint` — git
+    describe plus a hash of the engine sources, so editing the simulation
+    semantics invalidates stale results even in a dirty tree.
+
     ``_digests`` is an id-keyed memo so sweeps that share one mapping/trace
     across many specs hash each array once (valid while the arrays are kept
     alive by the caller, as run_sweep does).
@@ -709,9 +728,31 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
               cache_dir: str = DEFAULT_CACHE_DIR) -> SweepResult:
     """Simulate every cell, batched into one compiled vmapped scan.
 
-    Results are bit-identical to per-cell :func:`run_method` calls.  With
-    ``cache`` enabled, previously simulated cells (same spec, mapping, trace
-    and git version) are loaded from ``cache_dir`` and skipped.
+    Results are bit-identical to per-cell :func:`run_method` calls (enforced
+    by ``tests/test_sweep.py``).  With ``cache`` enabled, previously
+    simulated cells (same spec, mapping/trace *content* and code version —
+    see :func:`cell_key`) are loaded from ``cache_dir`` and skipped; set the
+    ``REPRO_SWEEP_NO_CACHE`` env var or ``cache=False`` to bypass.
+
+    Usage — compare two methods on a workload-derived scenario::
+
+        from repro.core.baselines import base_spec, kaligned_for_mapping
+        from repro.core.sweep import SweepCell, run_sweep
+        from repro.scenarios import get_scenario
+
+        d = get_scenario("kv-churn").materialize(n_pages=1 << 15,
+                                                 trace_len=100_000)
+        specs = [base_spec(), kaligned_for_mapping(d.mapping, psi=3)]
+        sweep = run_sweep([SweepCell(s, d.mapping, d.trace) for s in specs])
+        for r in sweep:                      # SimResult per cell, in order
+            print(r.name, r.misses, r.cpi)
+        print(sweep.stats)                   # n_cells / cache_hits / wall_s
+
+    Lanes are padded onto one array layout (max L2 geometry of the batch,
+    inert ``K=-1`` alignment slots, ``LANE_BUCKET``/``TRACE_BUCKET`` shape
+    buckets), so heterogeneous specs, footprints and trace lengths all reuse
+    one compiled executable per shape bucket — see the module docstring for
+    the padding rules.
     """
     t0 = time.time()
     cache = cache and not os.environ.get("REPRO_SWEEP_NO_CACHE")

@@ -68,7 +68,11 @@ class PagedKVAllocator:
                 if base is None:
                     order -= 1
             if base is None:
-                self.free(seq_id if alloc.pages else seq_id)  # rollback
+                # rollback: the seq is not registered yet, so return its
+                # partial blocks to the buddy directly (self.free would be a
+                # no-op here and leak them)
+                for b, o in alloc.blocks:
+                    self.buddy.free_block(b, o)
                 return None
             take = min(1 << order, need)
             alloc.blocks.append((base, order))

@@ -1,0 +1,19 @@
+"""Scenario registry: every (mapping, trace) source behind one interface.
+
+See :mod:`repro.scenarios.base` for the model and ``docs/scenarios.md`` for
+the catalogue.  Importing this package registers all built-in families:
+synthetic (Table-3 families, demand paging, paper-benchmark analogues),
+workload-derived (KV-cache serving churn, paged-attention gather order,
+training data pipeline, checkpoint shards), and adversarial (compaction,
+THP splitting, NUMA interleave).
+"""
+from . import adversarial, synthetic, workload  # noqa: F401  (registration)
+from .base import (FAMILIES, Scenario, ScenarioData, ScenarioRequest,
+                   clear_materialized_cache, get_scenario, list_scenarios,
+                   register, scenario)
+
+__all__ = [
+    "FAMILIES", "Scenario", "ScenarioData", "ScenarioRequest",
+    "clear_materialized_cache", "get_scenario", "list_scenarios",
+    "register", "scenario",
+]

@@ -1,1 +1,2 @@
 from .engine import EngineConfig, Request, ServingEngine
+from .scheduler import KVScheduler

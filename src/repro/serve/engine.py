@@ -18,7 +18,6 @@ This is where the paper's pieces meet end-to-end:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, Dict, List
 
 import jax
@@ -29,6 +28,7 @@ from ..kernels.paged_attention.ops import build_descriptors, dma_stats
 from ..kvcache.allocator import PagedKVAllocator
 from ..kvcache.block_table import choose_kernel_classes
 from ..models.model import Model, block_period, n_superblocks, _mixer_kind
+from .scheduler import KVScheduler
 
 
 @dataclasses.dataclass
@@ -65,13 +65,10 @@ class ServingEngine:
         self.period = block_period(cfg)
         self.allocator = PagedKVAllocator(ec.num_pages,
                                           alloc_policy=ec.alloc_policy)
+        self.sched = KVScheduler(self.allocator, ec.max_batch)
         self.K: List[int] = []
         self._k_util = 0.0
         self.requests: Dict[int, Request] = {}
-        self.waiting: deque = deque()
-        self.running: List[int] = []
-        self._slots: Dict[int, int] = {}           # rid → stable batch slot
-        self._free_slots: List[int] = list(range(ec.max_batch))
         self._next_id = 0
         self.metrics: Dict[str, float] = {
             "steps": 0, "tokens": 0, "dma_descriptors": 0,
@@ -101,8 +98,18 @@ class ServingEngine:
         rid = self._next_id
         self._next_id += 1
         self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
-        self.waiting.append(rid)
+        self.sched.enqueue(rid)
         return rid
+
+    # scheduling state lives in the model-free KVScheduler core (shared with
+    # the scenario recorder in repro.scenarios.workload)
+    @property
+    def waiting(self):
+        return self.sched.waiting
+
+    @property
+    def running(self) -> List[int]:
+        return self.sched.running
 
     def _maybe_refresh_k(self):
         util = self.allocator.utilization()
@@ -111,44 +118,30 @@ class ServingEngine:
             self.K = choose_kernel_classes(hist, psi=self.ec.psi) or [0]
             self._k_util = util
 
-    def _admit(self):
-        ec = self.ec
-        while self.waiting and len(self.running) < ec.max_batch:
-            rid = self.waiting[0]
-            req = self.requests[rid]
-            need = -(-(len(req.prompt) + req.max_new_tokens) // ec.page_size)
-            if self.allocator.allocate(rid, need) is None:
-                # pool exhausted: preempt the youngest running request
-                # (vLLM-style recompute preemption) if that frees enough
-                if self.running and len(self.running) > 1:
-                    victim = self.running[-1]
-                    self._preempt(victim)
-                    if self.allocator.allocate(rid, need) is None:
-                        break
-                else:
-                    break
-            self.waiting.popleft()
-            req.state = "running"
-            self.running.append(rid)
-            self._slots[rid] = self._free_slots.pop(0)
-            self._prefill(rid)
-
-    def _preempt(self, rid: int) -> None:
-        """Free a running request's pages and requeue it (recompute-style:
-        its generated tokens become part of the prompt on re-admission)."""
+    def _need_pages(self, rid: int) -> int:
         req = self.requests[rid]
-        self.running.remove(rid)
-        self._free_slots.insert(0, self._slots.pop(rid))
-        self.allocator.free(rid)
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.ec.page_size)
+
+    def _admit(self):
+        self.sched.admit(self._need_pages, on_admit=self._on_admit,
+                         on_preempt=self._on_preempt)
+
+    def _on_admit(self, rid: int) -> None:
+        self.requests[rid].state = "running"
+        self._prefill(rid)
+
+    def _on_preempt(self, rid: int) -> None:
+        """Recompute-style preemption bookkeeping: the victim's generated
+        tokens become part of the prompt on re-admission."""
+        req = self.requests[rid]
         req.prompt = req.prompt + req.generated
         req.max_new_tokens -= len(req.generated)
         req.generated = []
         req.state = "preempted"
-        self.waiting.appendleft(rid)
         self.metrics["preemptions"] += 1
 
     def _slot_of(self, rid: int) -> int:
-        return self._slots[rid]
+        return self.sched.slot_of(rid)
 
     def _prefill(self, rid: int):
         """Run the prompt through the model and write KV into the pages."""
@@ -235,9 +228,7 @@ class ServingEngine:
                 req.state = "done"
                 finished.append(rid)
         for rid in finished:
-            self.running.remove(rid)
-            self._free_slots.append(self._slots.pop(rid))
-            self.allocator.free(rid)
+            self.sched.release(rid)
         self.metrics["steps"] += 1
         return bool(self.running or self.waiting)
 
