@@ -54,6 +54,8 @@ BENCHES: List = [
      tlb_suite.bench_scenarios),
     ("tlb_scenario_contiguity", "Scenario contiguity (Figs 2-3 analogue)",
      tlb_suite.bench_scenario_contiguity),
+    ("tlb_dynamic", "Dynamic mapping worlds: mid-trace remaps + shootdowns",
+     tlb_suite.bench_dynamic),
     ("dma_fragmentation", "TPU adaptation: descriptor model",
      paged_kernel.bench_dma_vs_fragmentation),
     ("dma_k_ablation", "TPU adaptation: |K| ablation",
@@ -94,6 +96,14 @@ def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
             return (f"kv-churn:|K|=2 rel={kv.get('|K|=2', '')};"
                     f"mean |K|=2 rel={np.mean(ks):.3f} over {len(rows)}"
                     " scenarios")
+        if name == "tlb_dynamic":
+            rel = [r for r in rows if r["metric"] == "rel_misses"]
+            sd = [r for r in rows if r["metric"] == "shootdowns"]
+            import numpy as np
+            return (f"mean |K|=2 rel={np.mean([r['|K|=2'] for r in rel]):.3f}"
+                    f" over {len(rel)} dynamic scenarios;"
+                    f" total shootdowns |K|=2="
+                    f"{sum(r['|K|=2'] for r in sd)}")
         if name == "engine_end_to_end":
             return f"buddy desc_red={rows[0]['desc_reduction']}"
     except Exception as e:    # derived metrics must never kill the run

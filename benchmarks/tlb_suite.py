@@ -47,6 +47,9 @@ SCENARIO_LANES_QUICK = ("kv-churn", "kv-churn-page", "kv-gather",
                         "train-pipeline", "adv-numa")
 SCENARIO_SEEDS = dict(map_seed=0, trace_seed=8)
 
+# dynamic worlds swept by bench_dynamic (every registered dynamic scenario)
+DYNAMIC_MAX_PAGES = 1 << 16     # per-epoch records are E× the static cost
+
 
 def _scenario_world(name: str, trace_len: int, max_pages: int):
     data = get_scenario(name).materialize(n_pages=max_pages,
@@ -100,7 +103,14 @@ class SweepPlan:
 
 
 def _add_suite(plan: SweepPlan, m, tr, row: str, anchor_grid,
-               psis: Sequence[int] = (2, 3, 4)) -> None:
+               psis: Sequence[int] = (2, 3, 4), k_mapping=None) -> None:
+    """Add the full method suite over world ``m`` (static or dynamic).
+
+    ``k_mapping`` is the static mapping Algorithm 3 reads the contiguity
+    histogram from; defaults to ``m`` (pass the epoch-0 snapshot when ``m``
+    is a :class:`~repro.core.page_table.DynamicMapping`).
+    """
+    k_src = k_mapping if k_mapping is not None else m
     plan.add(base_spec(), m, tr, row, "Base")
     plan.add(thp_spec(), m, tr, row, "THP")
     plan.add(rmm_spec(), m, tr, row, "RMM")
@@ -108,7 +118,7 @@ def _add_suite(plan: SweepPlan, m, tr, row: str, anchor_grid,
     plan.add(cluster_spec(), m, tr, row, "Cluster")
     plan.add_anchor_static(m, tr, row, anchor_grid)
     for psi in psis:
-        spec = kaligned_for_mapping(m, psi=psi,
+        spec = kaligned_for_mapping(k_src, psi=psi,
                                     theta=1.0 if psi > 2 else 0.9)
         plan.add(spec, m, tr, row, f"|K|={psi}")
 
@@ -273,6 +283,39 @@ def bench_scenarios(trace_len=120_000, quick=True,
         rows.append({"scenario": name,
                      **{k: round(v.walks / max(base, 1), 4)
                         for k, v in cols.items()}})
+    return rows
+
+
+def bench_dynamic(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
+    """Dynamic mapping worlds: mid-trace remaps with shootdown-correct TLBs.
+
+    Every registered ``dynamic`` scenario (live event streams instead of
+    frozen snapshots) is swept with the full method suite through ONE
+    ``run_sweep`` call: lanes are epoch-segmented, and each epoch turnover
+    invalidates every cached entry covering a remapped page (translation
+    coherence).  Two rows per scenario: relative misses (Base = 1.0) and
+    the per-method invalidated-entry counts — time-varying reach is where
+    large-reach designs pay for their coverage.
+    """
+    names = tuple(sc.name for sc in list_scenarios("dynamic"))
+    plan = SweepPlan()
+    for name in names:
+        d = _scenario_world(name, trace_len, min(max_pages,
+                                                 DYNAMIC_MAX_PAGES))
+        # K is chosen by Algorithm 3 from the epoch-0 histogram — what the
+        # OS saw at launch; the events then degrade it, which is the point
+        _add_suite(plan, d.world, d.trace, name, ANCHOR_GRID_QUICK,
+                   psis=(2, 3), k_mapping=d.mapping)
+    res = plan.run()
+    rows = []
+    for name in names:
+        cols = res[name]
+        base = cols["Base"].walks
+        rows.append({"scenario": name, "metric": "rel_misses",
+                     **{k: round(v.walks / max(base, 1), 4)
+                        for k, v in cols.items()}})
+        rows.append({"scenario": name, "metric": "shootdowns",
+                     **{k: v.shootdowns for k, v in cols.items()}})
     return rows
 
 

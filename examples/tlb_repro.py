@@ -54,12 +54,18 @@ def run_scenario(name: str, n_pages: int, trace_len: int) -> None:
     print("  contiguity histogram (size×count, by covered pages): "
           + "  ".join(f"{s}×{f}" for s, f in top))
     plan = SweepPlan()
-    _add_suite(plan, data.mapping, data.trace, name, ANCHOR_GRID_QUICK)
+    # dynamic scenarios sweep the live DynamicMapping (epoch-segmented
+    # lanes with shootdowns); K is still chosen from the epoch-0 snapshot
+    _add_suite(plan, data.world, data.trace, name, ANCHOR_GRID_QUICK,
+               k_mapping=data.mapping)
     cols = plan.run()[name]
     base = max(cols["Base"].walks, 1)
+    dynamic = data.dynamic is not None
     print("  relative misses vs Base:")
     for label, r in cols.items():
-        print(f"    {label:14s} {r.walks / base:6.3f}   (cpi {r.cpi:.2f})")
+        extra = f"  shootdowns {r.shootdowns}" if dynamic else ""
+        print(f"    {label:14s} {r.walks / base:6.3f}   "
+              f"(cpi {r.cpi:.2f}){extra}")
 
 
 def main():

@@ -97,7 +97,8 @@ def render_dryrun(final_dir, base_dir=None):
               f"| {c_mp/max(c_sp,1e-12):.2f}× |")
 
 
-SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios")
+SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios",
+                     "tlb_dynamic")
 
 
 def _md_cell(v) -> str:
@@ -150,6 +151,18 @@ def render_tlb(path):
         if sc:
             print("### Relative TLB misses per scenario (Base = 1.0)\n")
             _md_table(sc)
+
+    dyn = sections.get("tlb_dynamic", {}).get("rows")
+    if dyn:
+        print("## Dynamic mapping worlds: mid-trace remaps\n")
+        print("Live event streams (serving churn, incremental compaction,"
+              " progressive THP splitting) instead of frozen snapshots:"
+              " each epoch turnover invalidates every TLB entry covering a"
+              " remapped page (translation coherence) and charges the"
+              " shootdown.  `rel_misses` rows are walks relative to Base;"
+              " `shootdowns` rows count invalidated entries per method —"
+              " see `docs/scenarios.md` for the scenario definitions.\n")
+        _md_table(dyn)
 
 
 def main():

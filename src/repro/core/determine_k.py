@@ -73,10 +73,16 @@ def determine_k(contiguity_histogram: Mapping[int, int] | Iterable[Tuple[int, in
     sum_coverage = 0
     # descending by coverage; ties broken toward larger k (more reach)
     ranked = sorted(alignment_weight.items(), key=lambda kv: (-kv[1], -kv[0]))
+    # Algorithm 3 stops once the selected alignments cover >= theta of the
+    # total contiguity (the paper's "covers more than 90%" is inclusive at
+    # the boundary: reaching exactly theta is enough).  The epsilon keeps
+    # a histogram whose coverage is *exactly* theta from being pushed past
+    # the boundary by the floating-point rounding of ``total * theta``.
+    threshold = total_contiguity * theta * (1.0 - 1e-12)
     for k, coverage in ranked:
         K.append(k)
         sum_coverage += coverage
-        if sum_coverage > total_contiguity * theta:
+        if sum_coverage >= threshold:
             break
         if len(K) >= psi:
             break

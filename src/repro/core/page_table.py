@@ -12,11 +12,23 @@ table:
   PA.  The per-PTE ``contiguity`` field of §3.1 is
   ``run_start[vpn] + run_len[vpn] - vpn``.
 * the contiguity-chunk list and the contiguity histogram used by Algorithm 3.
+
+Mappings are not static: demand paging, compaction, THP promotion/splitting
+and allocation churn — the very mechanisms the paper credits for *producing*
+mixed contiguity — rewrite translations mid-run.  :class:`MappingEvent`
+models one such OS action, and :class:`DynamicMapping` is an epoch sequence:
+``epochs[e]`` is the live mapping for trace steps in
+``[boundaries[e], boundaries[e+1])``, with ``events[e]`` the event batch
+applied on entering epoch ``e``.  Translation coherence (the shootdown
+semantics of Yan et al., "Hardware Translation Coherence for Virtualized
+Systems") is derived from the *snapshot diff*: entering epoch ``e``, every
+vpn in :meth:`DynamicMapping.dirty` lost its old translation, and any TLB
+structure holding an entry that covers a dirty vpn must invalidate it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -115,6 +127,187 @@ def huge_page_backed(m: Mapping) -> np.ndarray:
                               m.run_start[b] + m.run_len[b] - b, 0)
     aligned_pa = (m.ppn[b] & 511) == 0
     return ok & (contig_at_base >= 512) & aligned_pa
+
+
+# ---------------------------------------------------------------------------
+# Dynamic mappings: OS events that rewrite translations mid-trace
+# ---------------------------------------------------------------------------
+
+EVENT_KINDS = ("map", "unmap", "remap", "promote", "split", "compact")
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingEvent:
+    """One OS action on a virtual range ``[vpn, vpn + n)``.
+
+    ``kind`` is a semantic label (all kinds except ``unmap`` are writes of a
+    new backing):
+
+    * ``map``     — demand-fault new pages in (previously unmapped);
+    * ``unmap``   — release pages (``MADV_DONTNEED`` / free);
+    * ``remap``   — migrate pages to new frames (NUMA balancing, swap);
+    * ``promote`` — THP promotion: re-back a 512-window contiguously;
+    * ``split``   — THP split: scatter pages out of a huge run;
+    * ``compact`` — kcompactd migration into a dense region.
+
+    ``ppn`` is the new physical backing: an ``int`` base of a contiguous
+    frame range, an explicit array of ``n`` frames, or ``None`` for
+    ``unmap``.
+    """
+
+    kind: str
+    vpn: int
+    n: int = 1
+    ppn: Union[int, np.ndarray, None] = None
+
+    def __post_init__(self):
+        assert self.kind in EVENT_KINDS, self.kind
+        assert self.n > 0 and self.vpn >= 0
+        if self.kind == "unmap":
+            assert self.ppn is None
+        else:
+            assert self.ppn is not None
+
+    def new_ppns(self) -> np.ndarray:
+        """The ``n`` frames this event installs (-1s for ``unmap``)."""
+        if self.kind == "unmap":
+            return np.full(self.n, UNMAPPED, np.int64)
+        if isinstance(self.ppn, np.ndarray):
+            assert self.ppn.shape[0] == self.n
+            return np.asarray(self.ppn, np.int64)
+        return np.arange(self.ppn, self.ppn + self.n, dtype=np.int64)
+
+
+def apply_event(ppn: np.ndarray, ev: MappingEvent) -> np.ndarray:
+    """Functionally apply one event to a ``ppn`` array (returns a copy)."""
+    out = np.asarray(ppn, np.int64).copy()
+    assert ev.vpn + ev.n <= out.shape[0], "event outside the virtual footprint"
+    out[ev.vpn: ev.vpn + ev.n] = ev.new_ppns()
+    return out
+
+
+def events_from_diff(prev: np.ndarray, cur: np.ndarray
+                     ) -> List[MappingEvent]:
+    """Derive the run-grouped event list that turns ``prev`` into ``cur``.
+
+    Used by recorders that snapshot a live system (the KV-churn driver)
+    instead of logging semantic events: consecutive differing vpns of the
+    same category become one ``map``/``unmap``/``remap`` event.
+    """
+    prev = np.asarray(prev, np.int64)
+    cur = np.asarray(cur, np.int64)
+    assert prev.shape == cur.shape
+    diff = prev != cur
+    cat = np.where(~diff, 0,
+                   np.where(prev == UNMAPPED, 1,           # map
+                            np.where(cur == UNMAPPED, 2,   # unmap
+                                     3)))                  # remap
+    out: List[MappingEvent] = []
+    n = prev.shape[0]
+    boundaries = np.flatnonzero(np.diff(cat) != 0) + 1
+    starts = np.concatenate([[0], boundaries])
+    ends = np.concatenate([boundaries, [n]])
+    kinds = {1: "map", 2: "unmap", 3: "remap"}
+    for s, e in zip(starts, ends):
+        c = int(cat[s])
+        if c == 0:
+            continue
+        if c == 2:
+            out.append(MappingEvent("unmap", int(s), int(e - s)))
+        else:
+            out.append(MappingEvent(kinds[c], int(s), int(e - s),
+                                    ppn=cur[s:e].copy()))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicMapping:
+    """An epoch sequence: ``epochs[e]`` is live for trace steps in
+    ``[boundaries[e], boundaries[e+1])``; ``events[e]`` is the event batch
+    applied on entering epoch ``e`` (``events[0]`` is empty).
+
+    All epochs share one virtual footprint (``n_pages``).  The *dirty set*
+    of epoch ``e`` — vpns whose old translation died — is derived from the
+    snapshot diff, so invalidation correctness never depends on the event
+    log being complete.
+    """
+
+    epochs: Tuple[Mapping, ...]
+    boundaries: Tuple[int, ...]
+    events: Tuple[Tuple[MappingEvent, ...], ...] = ()
+    name: str = "dynamic"
+
+    def __post_init__(self):
+        assert len(self.epochs) >= 1
+        assert len(self.boundaries) == len(self.epochs)
+        assert self.boundaries[0] == 0
+        assert all(a < b for a, b in zip(self.boundaries,
+                                         self.boundaries[1:])), \
+            "epoch boundaries must be strictly ascending"
+        if not self.events:
+            object.__setattr__(
+                self, "events", tuple(() for _ in self.epochs))
+        assert len(self.events) == len(self.epochs)
+        n = self.epochs[0].n_pages
+        assert all(m.n_pages == n for m in self.epochs), \
+            "all epochs must share one virtual footprint"
+
+    @property
+    def n_pages(self) -> int:
+        return self.epochs[0].n_pages
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.epochs)
+
+    def epoch_at(self, t: int) -> int:
+        """Index of the epoch live at trace step ``t``."""
+        return int(np.searchsorted(self.boundaries, t, side="right") - 1)
+
+    def dirty(self, e: int) -> np.ndarray:
+        """bool[n_pages]: vpns whose translation died entering epoch ``e``
+        (previously mapped, now unmapped or re-backed) — the shootdown set."""
+        assert 1 <= e < self.n_epochs
+        prev, cur = self.epochs[e - 1].ppn, self.epochs[e].ppn
+        return (prev != UNMAPPED) & (prev != cur)
+
+    def dirty_count(self, e: int) -> int:
+        return int(self.dirty(e).sum())
+
+
+def build_dynamic_mapping(initial_ppn: np.ndarray,
+                          schedule: Sequence[
+                              Tuple[int, Sequence[MappingEvent]]],
+                          name: str = "dynamic") -> DynamicMapping:
+    """Replay an event schedule into a :class:`DynamicMapping`.
+
+    ``schedule`` is ``[(boundary_t, events), ...]`` with strictly ascending
+    ``boundary_t > 0``: at trace step ``boundary_t`` the events are applied
+    (in order) and a new epoch begins.
+    """
+    ppn = np.asarray(initial_ppn, np.int64)
+    epochs = [make_mapping(ppn, name=f"{name}@0")]
+    boundaries = [0]
+    events: List[Tuple[MappingEvent, ...]] = [()]
+    for t, evs in schedule:
+        cur = epochs[-1].ppn
+        for ev in evs:
+            cur = apply_event(cur, ev)
+        epochs.append(make_mapping(cur, name=f"{name}@{int(t)}"))
+        boundaries.append(int(t))
+        events.append(tuple(evs))
+    return DynamicMapping(tuple(epochs), tuple(boundaries), tuple(events),
+                          name=name)
+
+
+def dynamic_from_snapshots(snaps: Sequence[Mapping],
+                           boundaries: Sequence[int],
+                           name: str = "dynamic") -> DynamicMapping:
+    """Wrap recorded snapshots; events are derived per epoch by diffing."""
+    events = [()] + [tuple(events_from_diff(a.ppn, b.ppn))
+                     for a, b in zip(snaps, snaps[1:])]
+    return DynamicMapping(tuple(snaps), tuple(int(b) for b in boundaries),
+                          tuple(events), name=name)
 
 
 def cluster_bitmap(m: Mapping, cluster_bits: int = 3) -> np.ndarray:

@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import Mapping, cluster_bitmap, huge_page_backed
+from .page_table import (DynamicMapping, Mapping, cluster_bitmap,
+                         huge_page_backed)
 
 REGULAR = -1
 HUGE = 9            # k-class used for 2MB entries (2^9 pages)
@@ -57,6 +58,14 @@ LAT_L2_REG = 7
 LAT_COAL = 8
 LAT_EXTRA_PROBE = 7
 LAT_WALK = 50
+
+# Translation-coherence model (Yan et al., PAPERS.md): entering an epoch
+# whose events dirtied >= 1 previously-mapped page costs one shootdown
+# (IPI receipt + kernel entry), plus a per-entry invalidation port write
+# for every TLB entry — in ANY structure — whose covered range contains a
+# dirty vpn.  Charged once per epoch transition per TLB.
+LAT_SHOOTDOWN = 200
+LAT_INVALIDATE = 8
 
 N_COV_SAMPLES = 64
 
@@ -96,6 +105,7 @@ class SimResult:
     cycles: int
     coverage_mean: float           # Table 5 metric (covered PTEs in L2+side)
     ppn: np.ndarray                # translated PPNs (correctness oracle)
+    shootdowns: int = 0            # entries invalidated by remap coherence
 
     @property
     def misses(self) -> int:       # "TLB misses" as plotted in Figs 1/8/9
@@ -502,3 +512,363 @@ def run_method(spec: MethodSpec, m: Mapping, trace: np.ndarray) -> SimResult:
         coverage_mean=float(np.mean(np.asarray(stF["cov_samples"]))),
         ppn=np.asarray(jax.device_get(ppns)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Epoch-aware pure-python oracle (dynamic mappings)
+# ---------------------------------------------------------------------------
+#
+# ``run_method_dynamic`` is the correctness reference for mid-trace remaps:
+# a plain numpy state machine with the exact semantics of the engine above,
+# plus paper-correct translation coherence — entering an epoch, every
+# structure (L1, 2MB L1, L2, RMM ranges, clustered side-TLB) drops every
+# entry whose covered range contains a vpn whose translation died, and the
+# shootdown cost is charged.  The batched lanes of :mod:`repro.core.sweep`
+# must match it bit for bit (tests/test_dynamic.py); it is deliberately
+# written without JAX so an engine bug cannot hide in shared machinery.
+
+
+_DEBUG_HOOK = None
+
+
+def _as_dynamic(world) -> DynamicMapping:
+    if isinstance(world, DynamicMapping):
+        return world
+    return DynamicMapping((world,), (0,), name=world.name)
+
+
+def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
+                       ) -> SimResult:
+    """Simulate one method over a (possibly dynamic) world, pure python."""
+    from .sweep import _fill_profile, _fill_profile_key  # lazy: no cycle
+
+    dyn = _as_dynamic(world)
+    n_pages = dyn.n_pages
+    E = dyn.n_epochs
+    trace = np.asarray(trace, np.int64)
+    T = int(trace.shape[0])
+    Ks = spec.K
+    k_hat = spec.index_shift
+    set_mask = spec.l2_sets - 1
+    miss_chain = miss_chain_cycles(spec)
+    is_colt = spec.kind == "colt"
+    is_thp = spec.kind == "thp"
+    has_rmm = spec.side == "rmm"
+    has_clus = spec.side == "cluster"
+
+    fkey = _fill_profile_key(spec)
+    fills = [_fill_profile(m, fkey, n_pages) for m in dyn.epochs]
+    clus_maps = ([cluster_bitmap(m) for m in dyn.epochs] if has_clus
+                 else None)
+
+    # -- state ------------------------------------------------------------
+    l1_tag = np.full((L1_SETS, L1_WAYS), -1, np.int64)
+    l1_ppn = np.full((L1_SETS, L1_WAYS), -1, np.int64)
+    l1_lru = np.zeros((L1_SETS, L1_WAYS), np.int64)
+    l1h_tag = np.full((L1H_SETS, L1H_WAYS), -1, np.int64)
+    l1h_ppn = np.full((L1H_SETS, L1H_WAYS), -1, np.int64)
+    l1h_lru = np.zeros((L1H_SETS, L1H_WAYS), np.int64)
+    l2_tag = np.full((spec.l2_sets, spec.l2_ways), -1, np.int64)
+    l2_k = np.full((spec.l2_sets, spec.l2_ways), INVALID, np.int64)
+    l2_contig = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
+    l2_ppn = np.full((spec.l2_sets, spec.l2_ways), -1, np.int64)
+    l2_lru = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
+    rmm_start = np.full(RMM_ENTRIES, -1, np.int64)
+    rmm_len = np.zeros(RMM_ENTRIES, np.int64)
+    rmm_ppn = np.full(RMM_ENTRIES, -1, np.int64)
+    rmm_lru = np.zeros(RMM_ENTRIES, np.int64)
+    cl_tag = np.full((CLUS_SETS, CLUS_WAYS), -1, np.int64)
+    cl_bm = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
+    cl_lru = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
+    pred = int(Ks[0]) if Ks else 0
+
+    n_l1 = n_reg = n_coal = n_walk = n_probe = n_pred = 0
+    cycles = cov = n_shoot = 0
+    sample_every = max(T // N_COV_SAMPLES, 1)
+    cov_samples = np.zeros(N_COV_SAMPLES, np.int64)
+    out = np.empty(T, np.int64)
+    epoch = 0
+
+    def shootdown(e: int):
+        """Invalidate every entry covering a dirty vpn; charge the cost."""
+        nonlocal n_shoot, cycles, cov
+        dirty = dyn.dirty(e)
+        if not dirty.any():
+            return
+        dcum = np.concatenate([[0], np.cumsum(dirty)])
+
+        def rng_dirty(lo, ln):
+            lo_ = np.clip(lo, 0, n_pages)
+            hi_ = np.clip(lo + ln, 0, n_pages)
+            return (dcum[hi_] - dcum[lo_]) > 0
+
+        n_inv = 0
+        cov_loss = 0
+        valid2 = l2_k != INVALID
+        # k == HUGE means "2MB entry, tag is vpn >> 9" only on THP lanes;
+        # for K-bit Aligned, k = 9 is an ordinary alignment class whose tag
+        # is the window base vpn.
+        huge2 = is_thp & (l2_k == HUGE)
+        lo2 = np.where(huge2, l2_tag << 9, l2_tag)
+        ln2 = np.where(huge2, 512,
+                       np.where(l2_k == REGULAR, 1,
+                                np.maximum(l2_contig, 1)))
+        stale2 = valid2 & rng_dirty(np.maximum(lo2, 0), ln2)
+        n_inv += int(stale2.sum())
+        cov_loss += int(l2_contig[stale2].sum())
+        l2_k[stale2] = INVALID
+
+        v1 = l1_tag >= 0
+        stale1 = v1 & rng_dirty(np.maximum(l1_tag, 0), 1)
+        n_inv += int(stale1.sum())
+        l1_tag[stale1] = -1
+
+        vh = l1h_tag >= 0
+        staleh = vh & rng_dirty(np.maximum(l1h_tag, 0) << 9, 512)
+        n_inv += int(staleh.sum())
+        l1h_tag[staleh] = -1
+
+        vr = rmm_len > 0
+        staler = vr & rng_dirty(np.maximum(rmm_start, 0), rmm_len)
+        n_inv += int(staler.sum())
+        cov_loss += int(rmm_len[staler].sum())
+        rmm_start[staler] = -1
+        rmm_len[staler] = 0
+        rmm_ppn[staler] = -1
+
+        vc = cl_bm != 0
+        stalec = vc & rng_dirty(np.maximum(cl_tag, 0) << 3, 8)
+        n_inv += int(stalec.sum())
+        cl_bm[stalec] = 0
+
+        n_shoot += n_inv
+        cycles += LAT_SHOOTDOWN + LAT_INVALIDATE * n_inv
+        cov -= cov_loss
+
+    for t in range(T):
+        while epoch + 1 < E and t == dyn.boundaries[epoch + 1]:
+            epoch += 1
+            shootdown(epoch)
+        m = dyn.epochs[epoch]
+        vpn = int(trace[t])
+        ppn_true = int(m.ppn[vpn])
+        frec = fills[epoch][vpn]
+        fill_tag, fill_k, fill_contig, fill_ppn = (int(frec[0]), int(frec[1]),
+                                                   int(frec[2]), int(frec[3]))
+
+        # ---------------- L1 ---------------------------------------------
+        s1 = vpn & (L1_SETS - 1)
+        hits1 = l1_tag[s1] == vpn
+        l1_hit = bool(hits1.any())
+        l1_way = int(np.argmax(hits1))
+        hv = vpn >> 9
+        s1h = hv & (L1H_SETS - 1)
+        hitsh = l1h_tag[s1h] == hv
+        l1h_hit = is_thp and bool(hitsh.any())
+        l1h_way = int(np.argmax(hitsh))
+        l1_served = l1_hit or l1h_hit
+        l1_out = (int(l1_ppn[s1, l1_way]) if l1_hit
+                  else int(l1h_ppn[s1h, l1h_way]) + (vpn & 511))
+
+        # ---------------- L2 probes --------------------------------------
+        s2 = (vpn >> k_hat) & set_mask
+        tags = l2_tag[s2]
+        kcls = l2_k[s2]
+        contig = l2_contig[s2]
+        pbase = l2_ppn[s2]
+        valid = kcls != INVALID
+        probes_used = 0
+        pred_ok = 0
+        hit_k = -1
+        coal_hit = False
+        coal_ppn = -1
+        s2h = hv & set_mask
+        if is_colt:
+            diff = vpn - tags
+            cover = valid & (diff >= 0) & (diff < contig)
+            l2h = bool(cover.any())
+            way = int(np.argmax(cover))
+            reg_hit = l2h and int(contig[way]) == 1
+            coal_hit = l2h and int(contig[way]) > 1
+            l2_ppn_val = int(pbase[way]) + (vpn - int(tags[way]))
+            touch_set, tw = s2, way
+        elif is_thp:
+            huge_ways = (l2_k[s2h] == HUGE) & (l2_tag[s2h] == hv)
+            reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
+            huge_hit = bool(huge_ways.any())
+            hw = int(np.argmax(huge_ways))
+            rw = int(np.argmax(reg_ways))
+            any_reg = bool(reg_ways.any())
+            reg_hit = any_reg or huge_hit
+            l2h = reg_hit
+            l2_ppn_val = (int(pbase[rw]) if any_reg
+                          else int(l2_ppn[s2h, hw]) + (vpn - (hv << 9)))
+            touch_set = s2 if any_reg else s2h
+            tw = rw if any_reg else hw
+        else:
+            reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
+            reg_hit = bool(reg_ways.any())
+            rw = int(np.argmax(reg_ways))
+            if Ks:
+                if spec.use_predictor:
+                    order = [pred] + [k for k in Ks if k != pred]
+                else:
+                    order = list(Ks)
+            else:
+                order = []
+            first_probe_k = order[0] if order else -1
+            coal_way = 0
+            for k_val in order:
+                if not reg_hit and not coal_hit:
+                    probes_used += 1
+                    vk = vpn & ~((1 << k_val) - 1)
+                    m_ways = ((kcls == k_val) & (tags == vk) & valid
+                              & (contig > (vpn - vk)))
+                    if bool(m_ways.any()):
+                        coal_way = int(np.argmax(m_ways))
+                        coal_ppn = int(pbase[coal_way]) + (vpn - vk)
+                        hit_k = k_val
+                        coal_hit = True
+            l2h = reg_hit or coal_hit
+            l2_ppn_val = int(pbase[rw]) if reg_hit else coal_ppn
+            if spec.use_predictor and coal_hit and hit_k == first_probe_k:
+                pred_ok = 1
+            touch_set = s2
+            tw = rw if reg_hit else coal_way
+
+        # ---------------- side structures --------------------------------
+        side_hit = False
+        side_ppn = -1
+        if has_rmm:
+            d_r = vpn - rmm_start
+            in_rng = (d_r >= 0) & (d_r < rmm_len)
+            if bool(in_rng.any()):
+                side_hit = True
+                sw = int(np.argmax(in_rng))
+                side_ppn = int(rmm_ppn[sw]) + int(d_r[sw])
+        cwd = vpn >> 3
+        sc = cwd & (CLUS_SETS - 1)
+        if has_clus:
+            bit = (cl_bm[sc] >> (vpn & 7)) & 1
+            c_ways = (cl_tag[sc] == cwd) & (bit == 1)
+            if bool(c_ways.any()):
+                side_hit = True
+                side_ppn = ppn_true
+
+        walk = not (l1_served or l2h or side_hit)
+
+        # ---------------- latency ----------------------------------------
+        if l1_served:
+            cyc = 0
+        elif reg_hit:
+            cyc = LAT_L2_REG
+        elif coal_hit:
+            cyc = LAT_COAL + LAT_EXTRA_PROBE * max(probes_used - 1, 0)
+        elif side_hit:
+            cyc = LAT_COAL
+        else:
+            cyc = miss_chain + LAT_WALK
+
+        # ---------------- L2 fill ----------------------------------------
+        served_huge = is_thp and fill_k == HUGE
+        if walk:
+            fill_set = s2h if served_huge else s2
+            valid_row = l2_k[fill_set] != INVALID
+            score = np.where(valid_row, l2_lru[fill_set], NEG)
+            victim = int(np.argmin(score))
+            evicted = int(l2_contig[fill_set, victim]) \
+                if valid_row[victim] else 0
+            l2_tag[fill_set, victim] = fill_tag
+            l2_k[fill_set, victim] = fill_k
+            l2_contig[fill_set, victim] = fill_contig
+            l2_ppn[fill_set, victim] = fill_ppn
+            l2_lru[fill_set, victim] = t
+            cov += fill_contig - evicted
+        elif l2h and not l1_served:
+            l2_lru[touch_set, tw] = t
+
+        # ---------------- side fills -------------------------------------
+        if has_rmm:
+            rs_v = int(m.run_start[vpn])
+            rl_v = int(m.run_len[vpn])
+            if walk:
+                vrm = rmm_len > 0
+                victim_r = int(np.argmin(np.where(vrm, rmm_lru, NEG)))
+                ev_len = int(rmm_len[victim_r]) if vrm[victim_r] else 0
+                rmm_start[victim_r] = rs_v
+                rmm_len[victim_r] = rl_v
+                rmm_ppn[victim_r] = int(
+                    m.ppn[min(max(rs_v, 0), n_pages - 1)])
+                rmm_lru[victim_r] = t
+                cov += rl_v - ev_len
+            elif side_hit:
+                rmm_lru[sw] = t
+        if has_clus:
+            bm = int(clus_maps[epoch][vpn])
+            if walk and bm != (1 << (vpn & 7)):
+                vrow = cl_bm[sc] != 0
+                victim_c = int(np.argmin(np.where(vrow, cl_lru[sc], NEG)))
+                cl_tag[sc, victim_c] = cwd
+                cl_bm[sc, victim_c] = bm
+                cl_lru[sc, victim_c] = t
+            elif side_hit:
+                hit_cway = int(np.argmax(cl_tag[sc] == cwd))
+                cl_lru[sc, hit_cway] = t
+
+        # ---------------- L1 fills ---------------------------------------
+        if is_thp:
+            if not l1_served and served_huge:
+                vrh = l1h_tag[s1h] >= 0
+                vich = int(np.argmin(np.where(vrh, l1h_lru[s1h], NEG)))
+                l1h_tag[s1h, vich] = hv
+                l1h_ppn[s1h, vich] = fill_ppn
+                l1h_lru[s1h, vich] = t
+            if l1_served and bool(hitsh.any()) and not l1_hit:
+                l1h_lru[s1h, l1h_way] = t
+            do1 = not l1_served and not served_huge
+        else:
+            do1 = not l1_served
+        if do1:
+            vr1 = l1_tag[s1] >= 0
+            vic1 = int(np.argmin(np.where(vr1, l1_lru[s1], NEG)))
+            l1_tag[s1, vic1] = vpn
+            l1_ppn[s1, vic1] = ppn_true
+            l1_lru[s1, vic1] = t
+        if l1_hit:
+            l1_lru[s1, l1_way] = t
+
+        # ---------------- predictor update -------------------------------
+        if spec.use_predictor and Ks:
+            if coal_hit:
+                pred = hit_k
+            elif walk and fill_k >= 0:
+                pred = fill_k
+
+        # ---------------- accounting -------------------------------------
+        n_l1 += l1_served
+        n_reg += reg_hit and not l1_served
+        n_coal += (coal_hit or side_hit) and not reg_hit and not l1_served
+        n_walk += walk
+        if coal_hit and not l1_served:
+            n_probe += probes_used
+        if not l1_served:
+            n_pred += pred_ok
+        cycles += cyc
+        slot = min(t // sample_every, N_COV_SAMPLES - 1)
+        if t % sample_every == sample_every - 1:
+            cov_samples[slot] = cov
+
+        out[t] = (l1_out if l1_served
+                  else l2_ppn_val if l2h
+                  else side_ppn if side_hit
+                  else ppn_true)
+        if _DEBUG_HOOK is not None:
+            _DEBUG_HOOK(t, locals())
+
+    return SimResult(
+        name=spec.name, accesses=T, l1_hits=int(n_l1),
+        l2_regular_hits=int(n_reg), l2_coalesced_hits=int(n_coal),
+        walks=int(n_walk), aligned_probes=int(n_probe),
+        pred_correct=int(n_pred), cycles=int(cycles),
+        coverage_mean=float(np.mean(cov_samples)), ppn=out,
+        shootdowns=int(n_shoot))

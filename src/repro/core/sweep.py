@@ -35,6 +35,18 @@ vmapped point-scatter is a per-lane loop):
   only on ``(mapping, fill policy, vpn)`` — it is precomputed *outside* the
   scan as a per-vpn record and becomes one gather inside the step.
 
+Dynamic worlds (:class:`~repro.core.page_table.DynamicMapping`) run as
+**epoch-segmented lanes** of the same program: map/fill/cluster records are
+precomputed per ``(world, epoch)``, the scan is split at the static union
+of all lanes' epoch boundaries, and between segments a vectorized shootdown
+pass — gated per lane by whether its epoch turned over — invalidates every
+entry (in L1, the 2MB L1, L2, the RMM range TLB and the clustered side-TLB)
+whose covered vpn range contains a page whose translation died, via a range
+query against the epoch's dirty-bitmap prefix sums.  Static cells are
+1-epoch worlds, so mixed sweeps still compile once; every dynamic lane is
+bit-exact against the pure-python epoch-aware oracle
+:func:`repro.core.simulator.run_method_dynamic`.
+
 When JAX exposes several (virtual) host devices, lanes are additionally
 sharded across them with ``pmap`` — ``benchmarks/_env.py`` turns that on for
 benchmark runs.
@@ -52,18 +64,19 @@ import hashlib
 import os
 import subprocess
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import (Mapping, cluster_bitmap, huge_page_backed,
-                         next_pow2 as _next_pow2)
+from .page_table import (DynamicMapping, Mapping, cluster_bitmap,
+                         huge_page_backed, next_pow2 as _next_pow2)
 from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
                         L1H_SETS, L1H_WAYS, LAT_COAL, LAT_EXTRA_PROBE,
-                        LAT_L2_REG, LAT_WALK, N_COV_SAMPLES, NEG, REGULAR,
-                        RMM_ENTRIES, MethodSpec, SimResult, miss_chain_cycles)
+                        LAT_INVALIDATE, LAT_L2_REG, LAT_SHOOTDOWN, LAT_WALK,
+                        N_COV_SAMPLES, NEG, REGULAR, RMM_ENTRIES, MethodSpec,
+                        SimResult, miss_chain_cycles)
 
 BIG = 2**30  # victim score for padded ways: never evictable
 
@@ -77,12 +90,14 @@ TAG, KCLS, CONTIG, PPN, LRU = 0, 1, 2, 3, 4          # L2: [S, W, 5]
 # L1/L1H: [sets, ways, 3] = tag, ppn, lru
 # RMM:    [32, 4]         = start, len, ppn, lru
 # CLUS:   [64, 5, 3]      = tag, bitmap, lru
-# fill record: [P, 4]     = tag, k, contig, ppn
-# map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]
+# fill record: [P, 4]     = tag, k, contig, ppn      (one per world epoch)
+# map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]  (ditto)
+# dirty record: [P+1]     = prefix sum of the epoch's dirty-vpn bitmap
 # counters: [9] = l1_hits, reg_hits, coal_hits, walks, probes, pred_correct,
-#                 cycles, cov, (spare)
+#                 cycles, cov, shootdowns
 N_COUNTERS = 9
-(C_L1, C_REG, C_COAL, C_WALK, C_PROBE, C_PRED, C_CYC, C_COV) = range(8)
+(C_L1, C_REG, C_COAL, C_WALK, C_PROBE, C_PRED, C_CYC, C_COV,
+ C_SHOOT) = range(9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,22 +109,41 @@ class SweepCell:
       becomes per-lane *data* in the batched engine, so cells with different
       specs still share one compiled program.
     * ``mapping`` — a contiguity-annotated
-      :class:`~repro.core.page_table.Mapping`; get one from a registered
-      scenario (:mod:`repro.scenarios`) or the generators in
+      :class:`~repro.core.page_table.Mapping`, **or** a
+      :class:`~repro.core.page_table.DynamicMapping` whose epoch boundaries
+      segment the trace (mid-trace remaps with shootdown-correct
+      invalidation); get one from a registered scenario
+      (:mod:`repro.scenarios`) or the generators in
       :mod:`repro.core.mappings`.
     * ``trace``   — 1-D integer array of VPNs (every entry must be a mapped
-      page of ``mapping``).
+      page of the epoch live at that step).
 
     Mappings/traces shared between cells (by object identity) are packed and
     hashed once, so build each world once and reuse it across specs.
     """
 
     spec: MethodSpec
-    mapping: Mapping
+    mapping: "Mapping | DynamicMapping"
     trace: np.ndarray
 
     def __post_init__(self):
         assert self.trace.ndim == 1
+        if isinstance(self.mapping, DynamicMapping):
+            assert all(0 < b < self.trace.shape[0]
+                       for b in self.mapping.boundaries[1:]), \
+                "epoch boundaries must fall inside the trace"
+
+    @property
+    def epochs(self) -> Tuple[Mapping, ...]:
+        if isinstance(self.mapping, DynamicMapping):
+            return self.mapping.epochs
+        return (self.mapping,)
+
+    @property
+    def boundaries(self) -> Tuple[int, ...]:
+        if isinstance(self.mapping, DynamicMapping):
+            return self.mapping.boundaries
+        return (0,)
 
 
 @dataclasses.dataclass
@@ -208,40 +242,97 @@ def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
 
 
 def _pack_lanes(cells: Sequence[SweepCell]):
-    """Dedup mappings/traces/fill-profiles; pack per-lane params to arrays."""
-    maps: List[Mapping] = []
-    map_index: Dict[int, int] = {}
+    """Dedup worlds/traces/fill-profiles; pack per-lane params to arrays.
+
+    Every world is an epoch *sequence* (a static ``Mapping`` is one epoch);
+    map/fill/cluster records are built per ``(world, epoch)`` and lanes carry
+    a per-segment record index, so dynamic and static lanes share one
+    compiled program.  The segment grid — the sorted union of every lane's
+    epoch boundaries — is returned as a static tuple; between segments the
+    engine runs the shootdown pass for lanes whose epoch turned over.
+    """
+    worlds: List = []
+    world_index: Dict[int, int] = {}
     traces: List[np.ndarray] = []
     trace_index: Dict[int, int] = {}
-    fill_keys: List = []
-    fill_index: Dict = {}
     for c in cells:
-        if id(c.mapping) not in map_index:
-            map_index[id(c.mapping)] = len(maps)
-            maps.append(c.mapping)
+        if id(c.mapping) not in world_index:
+            world_index[id(c.mapping)] = len(worlds)
+            worlds.append(c.mapping)
         if id(c.trace) not in trace_index:
             trace_index[id(c.trace)] = len(traces)
             traces.append(c.trace)
-        fk = (map_index[id(c.mapping)], _fill_profile_key(c.spec))
-        if fk not in fill_index:
-            fill_index[fk] = len(fill_keys)
-            fill_keys.append(fk)
 
-    P = _next_pow2(max(m.n_pages for m in maps))
+    all_epochs: Dict[int, Tuple[Mapping, ...]] = {
+        w: (m.epochs if isinstance(m, DynamicMapping) else (m,))
+        for w, m in enumerate(worlds)}
+    all_bounds: Dict[int, Tuple[int, ...]] = {
+        w: (m.boundaries if isinstance(m, DynamicMapping) else (0,))
+        for w, m in enumerate(worlds)}
+
+    P = _next_pow2(max(m.n_pages for ms in all_epochs.values() for m in ms))
     T = -(-max(t.shape[0] for t in traces) // TRACE_BUCKET) * TRACE_BUCKET
 
-    need_clus = any(c.spec.side == "cluster" for c in cells)
+    # map records: one per (world, epoch)
+    map_recs: List[np.ndarray] = []
+    map_rec_id: Dict[Tuple[int, int], int] = {}
+    for w, ms in all_epochs.items():
+        for e, m in enumerate(ms):
+            map_rec_id[(w, e)] = len(map_recs)
+            map_recs.append(_map_record(m, P))
 
-    map_stack = np.stack([_map_record(m, P) for m in maps])
-    fill_stack = np.stack([_fill_profile(maps[mi], key, P)
-                           for mi, key in fill_keys])
-    clus_stack = np.zeros((len(maps), P if need_clus else 1), np.int32)
+    # fill records: one per (world, epoch, fill profile)
+    fill_recs: List[np.ndarray] = []
+    fill_rec_id: Dict[Tuple[int, int, tuple], int] = {}
+    for c in cells:
+        w = world_index[id(c.mapping)]
+        key = _fill_profile_key(c.spec)
+        for e, m in enumerate(all_epochs[w]):
+            fk = (w, e, key)
+            if fk not in fill_rec_id:
+                fill_rec_id[fk] = len(fill_recs)
+                fill_recs.append(_fill_profile(m, key, P))
+
+    # cluster bitmaps: one per (world, epoch), only if any lane needs them
+    need_clus = any(c.spec.side == "cluster" for c in cells)
+    clus_recs: List[np.ndarray] = [np.zeros(P if need_clus else 1, np.int32)]
+    clus_rec_id: Dict[Tuple[int, int], int] = {}
     if need_clus:
-        for i, m in enumerate(maps):
-            clus_stack[i, : m.n_pages] = cluster_bitmap(m)
+        for c in cells:
+            if c.spec.side != "cluster":
+                continue
+            w = world_index[id(c.mapping)]
+            for e, m in enumerate(all_epochs[w]):
+                if (w, e) not in clus_rec_id:
+                    rec = np.zeros(P, np.int32)
+                    rec[: m.n_pages] = cluster_bitmap(m)
+                    clus_rec_id[(w, e)] = len(clus_recs)
+                    clus_recs.append(rec)
+
+    # dirty records (prefix sums): one per (world, epoch >= 1) with >=1 dirty
+    dirty_recs: List[np.ndarray] = [np.zeros(P + 1, np.int32)]
+    dirty_rec_id: Dict[Tuple[int, int], int] = {}
+    for w, m in enumerate(worlds):
+        if not isinstance(m, DynamicMapping):
+            continue
+        for e in range(1, m.n_epochs):
+            if m.dirty_count(e) == 0:
+                continue
+            dc = np.zeros(P + 1, np.int32)
+            np.cumsum(m.dirty(e), out=dc[1: m.n_pages + 1])
+            dc[m.n_pages + 1:] = dc[m.n_pages]
+            dirty_rec_id[(w, e)] = len(dirty_recs)
+            dirty_recs.append(dc)
+
     trace_stack = np.zeros((len(traces), T), np.int32)
     for i, t in enumerate(traces):
         trace_stack[i, : t.shape[0]] = t
+
+    # segment grid: union of all epoch boundaries, static per compile
+    grid = sorted({int(b) for w in range(len(worlds))
+                   for b in all_bounds[w][1:]})
+    seg_bounds = tuple([0] + grid + [T])
+    n_segs = len(seg_bounds) - 1
 
     L = -(-len(cells) // LANE_BUCKET) * LANE_BUCKET
     max_sets = max(c.spec.l2_sets for c in cells)
@@ -255,14 +346,20 @@ def _pack_lanes(cells: Sequence[SweepCell]):
         kvals=np.full((L, maxk), -1, np.int32),
         set_mask=np.zeros(L, np.int32), n_ways=np.ones(L, np.int32),
         k_hat=np.zeros(L, np.int32), miss_chain=np.zeros(L, np.int32),
-        pred0=np.zeros(L, np.int32), map_id=np.zeros(L, np.int32),
-        fill_id=np.zeros(L, np.int32),
+        pred0=np.zeros(L, np.int32),
+        seg_map=np.zeros((L, n_segs), np.int32),
+        seg_fill=np.zeros((L, n_segs), np.int32),
+        seg_clus=np.zeros((L, n_segs), np.int32),
+        seg_shoot=np.zeros((L, n_segs), bool),
+        seg_dirty=np.zeros((L, n_segs), np.int32),
         trace_id=np.zeros(L, np.int32), t_real=np.zeros(L, np.int32),
         sample_every=np.ones(L, np.int32),
     )
     for i, c in enumerate(cells):
         s = c.spec
-        mi = map_index[id(c.mapping)]
+        w = world_index[id(c.mapping)]
+        bounds = all_bounds[w]
+        key = _fill_profile_key(s)
         lanes["is_colt"][i] = s.kind == "colt"
         lanes["is_thp"][i] = s.kind == "thp"
         lanes["has_rmm"][i] = s.side == "rmm"
@@ -274,14 +371,23 @@ def _pack_lanes(cells: Sequence[SweepCell]):
         lanes["k_hat"][i] = s.index_shift
         lanes["miss_chain"][i] = miss_chain_cycles(s)
         lanes["pred0"][i] = s.K[0] if s.K else 0
-        lanes["map_id"][i] = mi
-        lanes["fill_id"][i] = fill_index[(mi, _fill_profile_key(s))]
         lanes["trace_id"][i] = trace_index[id(c.trace)]
         lanes["t_real"][i] = c.trace.shape[0]
         lanes["sample_every"][i] = max(c.trace.shape[0] // N_COV_SAMPLES, 1)
-    stacks = dict(maps=map_stack, fills=fill_stack, clus=clus_stack,
+        for seg in range(n_segs):
+            lo = seg_bounds[seg]
+            e = int(np.searchsorted(bounds, lo, side="right") - 1)
+            lanes["seg_map"][i, seg] = map_rec_id[(w, e)]
+            lanes["seg_fill"][i, seg] = fill_rec_id[(w, e, key)]
+            lanes["seg_clus"][i, seg] = clus_rec_id.get((w, e), 0)
+            turned = seg > 0 and e >= 1 and lo == bounds[e]
+            if turned and (w, e) in dirty_rec_id:
+                lanes["seg_shoot"][i, seg] = True
+                lanes["seg_dirty"][i, seg] = dirty_rec_id[(w, e)]
+    stacks = dict(maps=np.stack(map_recs), fills=np.stack(fill_recs),
+                  clus=np.stack(clus_recs), dirty=np.stack(dirty_recs),
                   trace=trace_stack)
-    return lanes, stacks, (L, max_sets, max_ways)
+    return lanes, stacks, (L, max_sets, max_ways), seg_bounds
 
 
 def _init_batched_state(L: int, max_sets: int, max_ways: int, pred0):
@@ -318,19 +424,18 @@ def _cond_set(arr, idx, value, pred):
 # ---------------------------------------------------------------------------
 
 
-def _run_lanes_impl(lanes, stacks, st0):
+def _run_lanes_impl(lanes, stacks, st0, seg_bounds):
     map_stack = stacks["maps"]
     fill_stack = stacks["fills"]
     clus_map = stacks["clus"]
+    dirty_stack = stacks["dirty"]
     trace_stack = stacks["trace"]
-    T = trace_stack.shape[1]
     maxk = lanes["kvals"].shape[1]
     n_ways_total = st0["l2"].shape[2]
     way_idx = jnp.arange(n_ways_total, dtype=jnp.int32)
+    Pn = dirty_stack.shape[1] - 1
 
     def one_lane(lane, st_init):
-        mid = lane["map_id"]
-        fid = lane["fill_id"]
         set_mask = lane["set_mask"]
         k_hat = lane["k_hat"]
         kvals = lane["kvals"]
@@ -353,7 +458,14 @@ def _run_lanes_impl(lanes, stacks, st0):
                 order.append(jnp.where(use_pred, spec_k, kvals[pos]))
             return order
 
-        def step(st, t_idx):
+        def make_step(mid, fid, cid):
+            """Step closure for one segment: record ids are per-lane traced
+            scalars selecting the live epoch's map/fill/cluster records."""
+            def step(st, t_idx):
+                return _step(st, t_idx, mid, fid, cid)
+            return step
+
+        def _step(st, t_idx, mid, fid, cid):
             t = st["t"]
             vpn = trace_stack[lane["trace_id"], t_idx]
             active = t_idx < lane["t_real"]
@@ -516,7 +628,7 @@ def _run_lanes_impl(lanes, stacks, st0):
             new["rmm"] = _cond_set(rmmn, (sw, 3), t, rmm_hit & active)
             cov_delta = cov_delta + jnp.where(rmm_wr, rl_v - ev_len, 0)
 
-            bm = clus_map[mid, jnp.clip(vpn, 0, clus_map.shape[1] - 1)]
+            bm = clus_map[cid, jnp.clip(vpn, 0, clus_map.shape[1] - 1)]
             clusterable = bm != (jnp.int32(1) << (vpn & 7))
             fill_c = wr & clusterable & has_cluster
             vrow = crow[:, 1] != 0
@@ -579,31 +691,106 @@ def _run_lanes_impl(lanes, stacks, st0):
                           jnp.where(side_hit, side_ppn, ppn_true)))
             return new, out_ppn
 
-        return jax.lax.scan(step, st_init, jnp.arange(T, dtype=jnp.int32))
+        def shoot(st, seg):
+            """Translation coherence on epoch turnover (gated per lane):
+            drop every entry — in every structure — whose covered vpn range
+            contains a dirty vpn of the entered epoch, charge one shootdown
+            plus a per-entry invalidation, and release the dropped reach."""
+            do = lane["seg_shoot"][seg]
+            dc = dirty_stack[lane["seg_dirty"][seg]]     # [P+1] prefix sums
+
+            def rng_dirty(lo, ln):
+                lo_ = jnp.clip(lo, 0, Pn)
+                hi_ = jnp.clip(lo + ln, 0, Pn)
+                return (dc[hi_] - dc[lo_]) > 0
+
+            new = dict(st)
+            l2 = st["l2"]
+            tagv, kv, cgv = l2[..., TAG], l2[..., KCLS], l2[..., CONTIG]
+            # k == HUGE is a 2MB entry (tag = vpn >> 9) only on THP lanes;
+            # K-bit Aligned lanes use k = 9 as a plain alignment class.
+            huge2 = is_thp & (kv == HUGE)
+            stale2 = (kv != INVALID) & do & rng_dirty(
+                jnp.maximum(jnp.where(huge2, tagv << 9, tagv), 0),
+                jnp.where(huge2, 512,
+                          jnp.where(kv == REGULAR, 1, jnp.maximum(cgv, 1))))
+            new["l2"] = l2.at[..., KCLS].set(jnp.where(stale2, INVALID, kv))
+            n_inv = stale2.sum(dtype=jnp.int32)
+            cov_loss = jnp.where(stale2, cgv, 0).sum(dtype=jnp.int32)
+
+            l1 = st["l1"]
+            t1 = l1[..., 0]
+            stale1 = (t1 >= 0) & do & rng_dirty(jnp.maximum(t1, 0), 1)
+            new["l1"] = l1.at[..., 0].set(jnp.where(stale1, -1, t1))
+            n_inv = n_inv + stale1.sum(dtype=jnp.int32)
+
+            l1h = st["l1h"]
+            th = l1h[..., 0]
+            staleh = (th >= 0) & do & rng_dirty(jnp.maximum(th, 0) << 9, 512)
+            new["l1h"] = l1h.at[..., 0].set(jnp.where(staleh, -1, th))
+            n_inv = n_inv + staleh.sum(dtype=jnp.int32)
+
+            rmm = st["rmm"]
+            rs0, rl0 = rmm[:, 0], rmm[:, 1]
+            staler = (rl0 > 0) & do & rng_dirty(jnp.maximum(rs0, 0), rl0)
+            rmm2 = rmm.at[:, 0].set(jnp.where(staler, -1, rs0))
+            rmm2 = rmm2.at[:, 1].set(jnp.where(staler, 0, rl0))
+            new["rmm"] = rmm2.at[:, 2].set(jnp.where(staler, -1, rmm[:, 2]))
+            n_inv = n_inv + staler.sum(dtype=jnp.int32)
+            cov_loss = cov_loss + jnp.where(staler, rl0, 0).sum(
+                dtype=jnp.int32)
+
+            cl = st["clus"]
+            ct, cb = cl[..., 0], cl[..., 1]
+            stalec = (cb != 0) & do & rng_dirty(jnp.maximum(ct, 0) << 3, 8)
+            new["clus"] = cl.at[..., 1].set(jnp.where(stalec, 0, cb))
+            n_inv = n_inv + stalec.sum(dtype=jnp.int32)
+
+            cnt = st["counters"]
+            add = (jnp.zeros_like(cnt)
+                   .at[C_SHOOT].set(n_inv)
+                   .at[C_CYC].set(jnp.where(do, LAT_SHOOTDOWN, 0)
+                                  + n_inv * LAT_INVALIDATE)
+                   .at[C_COV].set(-cov_loss))
+            new["counters"] = cnt + add
+            return new
+
+        st = st_init
+        outs = []
+        for seg, (lo, hi) in enumerate(zip(seg_bounds, seg_bounds[1:])):
+            if seg > 0:
+                st = shoot(st, seg)
+            step = make_step(lane["seg_map"][seg], lane["seg_fill"][seg],
+                             lane["seg_clus"][seg])
+            st, pp = jax.lax.scan(step, st,
+                                  jnp.arange(lo, hi, dtype=jnp.int32))
+            outs.append(pp)
+        return st, (outs[0] if len(outs) == 1 else jnp.concatenate(outs))
 
     return jax.vmap(one_lane)(lanes, st0)
 
 
-_run_lanes_jit = jax.jit(_run_lanes_impl)
-_run_lanes_pmap = jax.pmap(_run_lanes_impl, in_axes=(0, None, 0))
+_run_lanes_jit = jax.jit(_run_lanes_impl, static_argnums=(3,))
+_run_lanes_pmap = jax.pmap(_run_lanes_impl, in_axes=(0, None, 0),
+                           static_broadcasted_argnums=(3,))
 
 
-def _simulate_lanes(lanes, stacks, st0):
+def _simulate_lanes(lanes, stacks, st0, seg_bounds):
     """Dispatch to pmap over virtual host devices when available (lanes are
     sharded across devices), else a single jitted vmap."""
     dev = jax.local_device_count()
-    L = lanes["map_id"].shape[0]
+    L = lanes["t_real"].shape[0]
     if dev > 1 and L % dev == 0:
         def shard(x):
             return x.reshape((dev, L // dev) + x.shape[1:])
 
         stF, ppns = _run_lanes_pmap(
             {k: shard(v) for k, v in lanes.items()}, stacks,
-            {k: shard(v) for k, v in st0.items()})
+            {k: shard(v) for k, v in st0.items()}, seg_bounds)
         unshard = lambda x: np.asarray(x).reshape((L,) + x.shape[2:])  # noqa: E731
         return ({k: unshard(v) for k, v in jax.device_get(stF).items()},
                 unshard(jax.device_get(ppns)))
-    stF, ppns = _run_lanes_jit(lanes, stacks, st0)
+    stF, ppns = _run_lanes_jit(lanes, stacks, st0, seg_bounds)
     return jax.device_get(stF), np.asarray(jax.device_get(ppns))
 
 
@@ -657,14 +844,18 @@ def _array_digest(a: np.ndarray) -> str:
 
 def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
              ) -> str:
-    """Stable cache key: spec config + mapping/trace content + code version.
+    """Stable cache key: spec config + world/trace content + code version.
 
     The key is a SHA-256 over (a) ``repr(spec)`` — every static knob of the
-    method, (b) the *content* of ``mapping.ppn`` and ``trace`` (dtype, shape,
+    method, (b) the *content* of the world and ``trace`` (dtype, shape,
     bytes — not object identity, so deterministically regenerated worlds hit
     the cache across processes), and (c) :func:`_code_fingerprint` — git
     describe plus a hash of the engine sources, so editing the simulation
-    semantics invalidates stale results even in a dirty tree.
+    semantics invalidates stale results even in a dirty tree.  For a
+    :class:`~repro.core.page_table.DynamicMapping` world, (b) folds in the
+    event stream: every epoch snapshot's ``ppn`` plus the boundary
+    positions, so two worlds differing only in when (or what) they remap
+    never collide.
 
     ``_digests`` is an id-keyed memo so sweeps that share one mapping/trace
     across many specs hash each array once (valid while the arrays are kept
@@ -680,7 +871,12 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
 
     h = hashlib.sha256()
     h.update(repr(cell.spec).encode())
-    h.update(digest(cell.mapping.ppn).encode())
+    if isinstance(cell.mapping, DynamicMapping):
+        h.update(repr(tuple(cell.mapping.boundaries)).encode())
+        for m in cell.mapping.epochs:
+            h.update(digest(m.ppn).encode())
+    else:
+        h.update(digest(cell.mapping.ppn).encode())
     h.update(digest(cell.trace).encode())
     h.update(_code_fingerprint().encode())
     return h.hexdigest()[:32]
@@ -688,7 +884,7 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
 
 _COUNTER_FIELDS = ("accesses", "l1_hits", "l2_regular_hits",
                    "l2_coalesced_hits", "walks", "aligned_probes",
-                   "pred_correct", "cycles")
+                   "pred_correct", "cycles", "shootdowns")
 
 
 def _cache_load(path: str) -> Optional[SimResult]:
@@ -703,7 +899,7 @@ def _cache_load(path: str) -> Optional[SimResult]:
                 coverage_mean=float(z["coverage_mean"]),
                 ppn=z["ppn"],
             )
-    except (OSError, KeyError, ValueError):
+    except (OSError, KeyError, ValueError, IndexError):
         return None
 
 
@@ -773,12 +969,12 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
 
     if todo:
         sub = [cells[i] for i in todo]
-        lanes, stacks, (L, max_sets, max_ways) = _pack_lanes(sub)
+        lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(sub)
         st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"])
         stF, ppns = _simulate_lanes(
             {k: jnp.asarray(v) for k, v in lanes.items()},
             {k: jnp.asarray(v) for k, v in stacks.items()},
-            {k: jnp.asarray(v) for k, v in st0.items()})
+            {k: jnp.asarray(v) for k, v in st0.items()}, seg_bounds)
         counters = np.asarray(stF["counters"])
         cov_samples = np.asarray(stF["cov_samples"])
         for j, i in enumerate(todo):
@@ -796,6 +992,7 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
                 cycles=int(cnt[C_CYC]),
                 coverage_mean=float(np.mean(cov_samples[j])),
                 ppn=ppns[j, :t_real],
+                shootdowns=int(cnt[C_SHOOT]),
             )
             results[i] = r
             if cache:

@@ -570,13 +570,21 @@ class Model:
         bidx = jnp.arange(B)
         page_of = bt[bidx, kv_len // page_size]
         off_of = kv_len % page_size
+        # inactive batch slots carry all -1 block tables; a raw scatter at
+        # page -1 would wrap to the LAST pool page and corrupt whichever
+        # live sequence owns it.  Route them to an out-of-range page and
+        # drop: a clamped index would collide with an active lane writing
+        # the same cell, and duplicate-index scatter order is unspecified.
+        lane_ok = page_of >= 0
 
         def paged_attn(p, h, st):
             q, k, v = L.attention_qkv(cfg, p, h, positions)
-            pk = st["pool_k"].at[page_of, off_of].set(
-                k[:, 0].astype(st["pool_k"].dtype))
-            pv = st["pool_v"].at[page_of, off_of].set(
-                v[:, 0].astype(st["pool_v"].dtype))
+            n_pool = st["pool_k"].shape[0]
+            drop_page = jnp.where(lane_ok, page_of, n_pool)
+            pk = st["pool_k"].at[drop_page, off_of].set(
+                k[:, 0].astype(st["pool_k"].dtype), mode="drop")
+            pv = st["pool_v"].at[drop_page, off_of].set(
+                v[:, 0].astype(st["pool_v"].dtype), mode="drop")
             o = _paged_attention_jit(
                 q[:, 0], pk, pv, kv_len + 1, tuple(desc_flat),
                 page_size=page_size, classes=classes, interpret=interpret)

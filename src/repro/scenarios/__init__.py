@@ -7,7 +7,7 @@ workload-derived (KV-cache serving churn, paged-attention gather order,
 training data pipeline, checkpoint shards), and adversarial (compaction,
 THP splitting, NUMA interleave).
 """
-from . import adversarial, synthetic, workload  # noqa: F401  (registration)
+from . import adversarial, dynamic, synthetic, workload  # noqa: F401  (registration)
 from .base import (FAMILIES, Scenario, ScenarioData, ScenarioRequest,
                    clear_materialized_cache, get_scenario, list_scenarios,
                    register, scenario)

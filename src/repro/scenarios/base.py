@@ -38,9 +38,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.page_table import Mapping
+from ..core.page_table import DynamicMapping, Mapping
 
-FAMILIES = ("synthetic", "workload", "adversarial")
+FAMILIES = ("synthetic", "workload", "adversarial", "dynamic")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +66,26 @@ class ScenarioData:
     :meth:`Scenario.materialize` memoizes and returns ONE shared instance
     per parameter set (with a read-only trace array), so consumers must
     treat it — including ``meta`` — as immutable.
+
+    ``dynamic`` scenarios additionally carry the full
+    :class:`~repro.core.page_table.DynamicMapping` (epoch snapshots, event
+    stream, trace-position boundaries); for them ``mapping`` is the
+    epoch-0 snapshot (what the OS saw when it chose K), and each trace
+    entry must be mapped in the epoch live at that step.  Sweep dynamic
+    worlds by passing ``data.world`` (the dynamic mapping when present,
+    else the static one) to :class:`repro.core.sweep.SweepCell`.
     """
 
     scenario: str
     mapping: Mapping
     trace: np.ndarray
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    dynamic: Optional[DynamicMapping] = None
+
+    @property
+    def world(self):
+        """What to simulate: the dynamic world when present, else static."""
+        return self.dynamic if self.dynamic is not None else self.mapping
 
 
 @dataclasses.dataclass(frozen=True)

@@ -131,27 +131,31 @@ class ServingEngine:
         self._prefill(rid)
 
     def _on_preempt(self, rid: int) -> None:
-        """Recompute-style preemption bookkeeping: the victim's generated
-        tokens become part of the prompt on re-admission."""
-        req = self.requests[rid]
-        req.prompt = req.prompt + req.generated
-        req.max_new_tokens -= len(req.generated)
-        req.generated = []
-        req.state = "preempted"
+        """Recompute-style preemption bookkeeping.
+
+        The victim keeps its ``generated`` list (the user must receive every
+        token produced); on re-admission :meth:`_prefill` recomputes the KV
+        for ``prompt + generated`` and decoding continues from there.  (An
+        earlier version folded the generated tokens into ``prompt`` and
+        cleared the list, silently dropping them from the final output.)
+        """
+        self.requests[rid].state = "preempted"
         self.metrics["preemptions"] += 1
 
     def _slot_of(self, rid: int) -> int:
         return self.sched.slot_of(rid)
 
     def _prefill(self, rid: int):
-        """Run the prompt through the model and write KV into the pages."""
+        """Run prompt (+ any recompute-preempted generation) through the
+        model and write KV into the pages."""
         req = self.requests[rid]
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        toks_list = req.prompt + req.generated
+        toks = jnp.asarray(toks_list, jnp.int32)[None]
         logits, states = jax.jit(self.model.prefill, static_argnames=())(
             self.params, toks)
         bt = self.allocator.block_table(rid, self.max_pages)
         T = self.ec.page_size
-        S = len(req.prompt)
+        S = len(toks_list)
         n_full = -(-S // T)
         slot = self._slot_of(rid)
         for j in range(self.period):
@@ -186,10 +190,21 @@ class ServingEngine:
     def max_pages(self) -> int:
         return self.ec.max_seq // self.ec.page_size
 
+    def _reap_finished(self) -> None:
+        """Release running requests that hit their token budget (a
+        re-admitted preemption victim may reach it at prefill, before any
+        decode step — decoding it again would append an extra token)."""
+        for rid in list(self.running):
+            req = self.requests[rid]
+            if len(req.generated) >= req.max_new_tokens:
+                req.state = "done"
+                self.sched.release(rid)
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One engine iteration: admit, decode one token for all running."""
         self._admit()
+        self._reap_finished()
         if not self.running:
             return bool(self.waiting)
         self._maybe_refresh_k()

@@ -39,7 +39,8 @@ class KVScheduler:
     works for both token-level engines and page-level scenario drivers.
     """
 
-    def __init__(self, allocator: PagedKVAllocator, max_batch: int):
+    def __init__(self, allocator: PagedKVAllocator, max_batch: int,
+                 event_tap: Optional[Callable[[str, int], None]] = None):
         self.allocator = allocator
         self.max_batch = max_batch
         self.waiting: Deque[int] = deque()
@@ -47,6 +48,17 @@ class KVScheduler:
         self.slots: Dict[int, int] = {}            # rid → stable batch slot
         self._free_slots: List[int] = list(range(max_batch))
         self.preemptions = 0
+        #: optional ``tap(kind, rid)`` observer fired on every scheduling
+        #: action that changes the KV mapping ("admit" — after the slot is
+        #: assigned and pages are held; "preempt"/"release" — after the
+        #: pages are freed).  The dynamic-scenario recorder uses it to turn
+        #: serving churn into a :class:`repro.core.page_table.MappingEvent`
+        #: stream; the real engine runs untapped by default.
+        self.event_tap = event_tap
+
+    def _tap(self, kind: str, rid: int) -> None:
+        if self.event_tap is not None:
+            self.event_tap(kind, rid)
 
     # ------------------------------------------------------------------
     def enqueue(self, rid: int, front: bool = False) -> None:
@@ -91,6 +103,7 @@ class KVScheduler:
             self.running.append(rid)
             self.slots[rid] = self._free_slots.pop(0)
             admitted.append(rid)
+            self._tap("admit", rid)
             if on_admit is not None:
                 on_admit(rid)
         return admitted
@@ -104,12 +117,14 @@ class KVScheduler:
         self.allocator.free(rid)
         self.preemptions += 1
         self.waiting.appendleft(rid)
+        self._tap("preempt", rid)
 
     def release(self, rid: int) -> None:
         """A finished request: recycle its slot and pages."""
         self.running.remove(rid)
         self._free_slots.append(self.slots.pop(rid))
         self.allocator.free(rid)
+        self._tap("release", rid)
 
     # ------------------------------------------------------------------
     def slot_of(self, rid: int) -> int:

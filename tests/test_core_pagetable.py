@@ -83,6 +83,17 @@ class TestDetermineK:
         hist = {16: 1000, 64: 1}   # k=4 alone covers ~99.6%
         assert determine_k(hist, theta=0.9) == [4]
 
+    def test_theta_exact_boundary_inclusive(self):
+        """Algorithm 3 stops at coverage >= theta, not strictly greater: a
+        histogram whose best class covers EXACTLY theta of the total must
+        stop after that class (regression: the break used strict >)."""
+        # k=4 covers 2*16=32, k=6 covers 32: exact half; coverage tie is
+        # broken toward the larger k, which then meets theta=0.5 alone
+        assert determine_k({16: 2, 32: 1}, theta=0.5, psi=4) == [6]
+        # k=4 covers 18*16=288 of 320 == 0.9 exactly (float-representable
+        # via the epsilon guard): must stop at [4], not append k=6
+        assert determine_k({16: 18, 32: 1}, theta=0.9, psi=4) == [4]
+
     def test_psi_bound(self):
         hist = {2: 100, 32: 100, 100: 120, 200: 90, 400: 70, 600: 60}
         assert len(determine_k(hist, theta=1.0, psi=4)) <= 4

@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -39,9 +41,7 @@ def test_sharding_rules_resolve_and_divide():
     """))
 
 
-def test_train_step_spmd_equals_single_device():
-    """The sharded train step computes the same loss as 1-device execution."""
-    out = run_with_devices("""
+SPMD_LOSS_TMPL = """
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
         from repro.configs import get_config
@@ -60,7 +60,7 @@ def test_train_step_spmd_equals_single_device():
             cfg, PipelineConfig(batch=8, seq=32), 0).items()}
 
         losses = {}
-        for meshspec in (None, (2, 4), (4, 2), (8, 1)):
+        for meshspec in (None, %(meshes)s):
             model = Model(cfg, rc)
             params = model.init(0)
             opt = init_opt(oc, params)
@@ -85,7 +85,21 @@ def test_train_step_spmd_equals_single_device():
         vals = list(losses.values())
         assert max(vals) - min(vals) < 2e-2, losses
         print("SPMD-LOSS-OK", losses)
-    """)
+    """
+
+
+@pytest.mark.slow
+def test_train_step_spmd_equals_single_device():
+    """The sharded train step computes the same loss as 1-device execution,
+    over every mesh factorization (full grid; CI `-m slow` lane)."""
+    out = run_with_devices(SPMD_LOSS_TMPL % {
+        "meshes": "(2, 4), (4, 2), (8, 1)"})
+    assert "SPMD-LOSS-OK" in out
+
+
+def test_train_step_spmd_small_mesh():
+    """Default-tier coverage of the same property on one 2x4 mesh."""
+    out = run_with_devices(SPMD_LOSS_TMPL % {"meshes": "(2, 4)"})
     assert "SPMD-LOSS-OK" in out
 
 

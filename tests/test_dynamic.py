@@ -1,0 +1,326 @@
+"""Dynamic mapping worlds: epoch-aware oracle parity, shootdown correctness
+(no structure may ever translate a stale vpn -> old ppn pair), cache keys."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import demand_mapping, generate_trace
+from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
+                                  colt_spec, kaligned_spec, rmm_spec,
+                                  thp_spec)
+from repro.core.page_table import (DynamicMapping, MappingEvent, apply_event,
+                                   build_dynamic_mapping,
+                                   dynamic_from_snapshots, events_from_diff,
+                                   make_mapping)
+from repro.core.simulator import run_method, run_method_dynamic
+from repro.core.sweep import SweepCell, cell_key, run_sweep
+from repro.scenarios import clear_materialized_cache, get_scenario, \
+    list_scenarios
+
+COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
+            "walks", "aligned_probes", "pred_correct", "cycles",
+            "coverage_mean", "shootdowns")
+
+ALL_KINDS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
+             anchor_spec(6), kaligned_spec([9, 6, 4]),
+             kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+
+
+def _epoch_bounds(world, trace_len):
+    b = world.boundaries if isinstance(world, DynamicMapping) else (0,)
+    return list(b) + [trace_len]
+
+
+def _assert_no_stale(world, trace, result):
+    """Every access must translate to the ppn of the epoch live at that
+    step — the shootdown-correctness property."""
+    epochs = world.epochs if isinstance(world, DynamicMapping) else (world,)
+    bounds = _epoch_bounds(world, len(trace))
+    for e, m in enumerate(epochs):
+        lo, hi = bounds[e], bounds[e + 1]
+        np.testing.assert_array_equal(
+            result.ppn[lo:hi], np.asarray(m.ppn)[trace[lo:hi]],
+            err_msg=f"stale translation in epoch {e}")
+
+
+# ---------------------------------------------------------------------------
+# Worlds
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hot_world():
+    """Remaps that overlap the working set: every structure must shoot."""
+    n = 1 << 12
+    ppn0 = np.arange(n, dtype=np.int64) + 7      # contiguous: huge runs
+    ev1 = [MappingEvent("remap", 0, 512, ppn=100_000)]
+    ev2 = [MappingEvent("split", 512, 256,
+                        ppn=np.arange(200_000, 200_000 + 256 * 3, 3)),
+           MappingEvent("unmap", 3072, 64)]
+    dyn = build_dynamic_mapping(ppn0, [(700, ev1), (1400, ev2)], name="hot")
+    rng = np.random.default_rng(3)
+    trace = rng.integers(0, 1024, size=2100).astype(np.int64)
+    return dyn, trace
+
+
+@pytest.fixture(scope="module")
+def churn_world():
+    d = get_scenario("dyn-kv-churn").materialize(n_pages=1 << 12,
+                                                 trace_len=1800, trace_seed=8)
+    return d.dynamic, np.asarray(d.trace)
+
+
+@pytest.fixture(scope="module")
+def hot_sweep(hot_world, churn_world):
+    """One batched run over BOTH dynamic worlds plus one static lane —
+    heterogeneous epochs/boundaries share one compiled program."""
+    dyn, trace = hot_world
+    cdyn, ctrace = churn_world
+    m_static = demand_mapping(1 << 11, seed=5)
+    tr_static = generate_trace("zipf", 0, 1500, seed=9, mapping=m_static)
+    cells = [SweepCell(s, dyn, trace) for s in ALL_KINDS]
+    cells += [SweepCell(s, cdyn, ctrace) for s in ALL_KINDS]
+    cells += [SweepCell(base_spec(), m_static, tr_static),
+              SweepCell(kaligned_spec([8, 6, 4]), m_static, tr_static)]
+    return cells, run_sweep(cells, cache=False)
+
+
+@pytest.mark.parametrize("i", range(len(ALL_KINDS)),
+                         ids=lambda i: ALL_KINDS[i].name)
+def test_lane_matches_oracle_hot_world(hot_sweep, hot_world, i):
+    """Bit-exact parity of the epoch-segmented lane vs the pure-python
+    epoch-aware oracle, every counter including shootdowns."""
+    dyn, trace = hot_world
+    _, sweep = hot_sweep
+    got = sweep.results[i]
+    want = run_method_dynamic(ALL_KINDS[i], dyn, trace)
+    for f in COUNTERS:
+        assert getattr(got, f) == getattr(want, f), f
+    np.testing.assert_array_equal(got.ppn, want.ppn)
+
+
+@pytest.mark.parametrize("i", range(len(ALL_KINDS)),
+                         ids=lambda i: ALL_KINDS[i].name)
+def test_lane_matches_oracle_churn_world(hot_sweep, churn_world, i):
+    """Same parity over a recorded serving-churn world (snapshot-diff
+    events, uneven dirty sets)."""
+    cdyn, ctrace = churn_world
+    _, sweep = hot_sweep
+    got = sweep.results[len(ALL_KINDS) + i]
+    want = run_method_dynamic(ALL_KINDS[i], cdyn, ctrace)
+    for f in COUNTERS:
+        assert getattr(got, f) == getattr(want, f), f
+    np.testing.assert_array_equal(got.ppn, want.ppn)
+
+
+def test_no_stale_translations_all_methods(hot_sweep, hot_world, churn_world):
+    """THE dynamic-correctness property: after shootdown, no method ever
+    returns a dead translation, in either engine."""
+    dyn, trace = hot_world
+    cdyn, ctrace = churn_world
+    cells, sweep = hot_sweep
+    for i, spec in enumerate(ALL_KINDS):
+        _assert_no_stale(dyn, trace, sweep.results[i])
+        _assert_no_stale(cdyn, ctrace, sweep.results[len(ALL_KINDS) + i])
+
+
+def test_shootdowns_fire_and_cost_cycles(hot_sweep):
+    """Remaps overlapping the working set must invalidate entries in every
+    method (the hot world touches L1, L2, THP, RMM and cluster reach)."""
+    _, sweep = hot_sweep
+    for i, spec in enumerate(ALL_KINDS):
+        r = sweep.results[i]
+        assert r.shootdowns > 0, spec.name
+    # static lanes never shoot
+    assert sweep.results[-1].shootdowns == 0
+    assert sweep.results[-2].shootdowns == 0
+
+
+def test_static_lane_in_mixed_sweep_matches_run_method(hot_sweep):
+    """Static cells riding in a dynamic sweep stay bit-exact vs the static
+    oracle (the 1-epoch path is the old engine)."""
+    cells, sweep = hot_sweep
+    for idx in (-2, -1):
+        c = cells[idx]
+        want = run_method(c.spec, c.mapping, c.trace)
+        got = sweep.results[idx]
+        for f in COUNTERS[:-1]:
+            assert getattr(got, f) == getattr(want, f), f
+        np.testing.assert_array_equal(got.ppn, want.ppn)
+
+
+# ---------------------------------------------------------------------------
+# Property test: random event streams never leak a stale pair
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3),
+       st.sampled_from(["remap", "unmap", "promote", "split", "compact"]))
+@settings(max_examples=5, deadline=None)
+def test_random_event_streams_no_stale(seed, n_epochs, bias):
+    """After ANY event stream, lane == oracle and no stale translation, for
+    all seven method kinds (small world so the python oracle stays cheap)."""
+    n = 1 << 10
+    rng = np.random.default_rng(seed)
+    m0 = demand_mapping(n, seed=seed % 1000)
+    seg = 250
+    schedule = []
+    fresh = int(m0.ppn.max()) + 2
+    for e in range(1, n_epochs + 1):
+        evs = []
+        for _ in range(int(rng.integers(1, 4))):
+            kind = bias if rng.random() < 0.5 else \
+                str(rng.choice(["remap", "unmap", "map"]))
+            start = int(rng.integers(0, n - 64))
+            ln = int(rng.integers(1, 64))
+            if kind == "unmap":
+                evs.append(MappingEvent("unmap", start, ln))
+            else:
+                evs.append(MappingEvent(kind, start, ln, ppn=fresh))
+                fresh += ln + 1
+        schedule.append((e * seg, evs))
+    dyn = build_dynamic_mapping(m0.ppn, schedule, name=f"rand{seed}")
+    parts = []
+    bounds = list(dyn.boundaries) + [(n_epochs + 1) * seg]
+    for e in range(dyn.n_epochs):
+        mv = np.flatnonzero(dyn.epochs[e].ppn >= 0)
+        if mv.size == 0:
+            return          # degenerate: everything unmapped
+        idx = rng.integers(0, mv.size, size=bounds[e + 1] - bounds[e])
+        parts.append(mv[idx])
+    trace = np.concatenate(parts).astype(np.int64)
+    specs = [base_spec(), thp_spec(), colt_spec(), cluster_spec(),
+             rmm_spec(), anchor_spec(4), kaligned_spec([6, 4])]
+    sweep = run_sweep([SweepCell(s, dyn, trace) for s in specs], cache=False)
+    for s, got in zip(specs, sweep.results):
+        _assert_no_stale(dyn, trace, got)
+        want = run_method_dynamic(s, dyn, trace)
+        for f in COUNTERS:
+            assert getattr(got, f) == getattr(want, f), (s.name, f)
+        np.testing.assert_array_equal(got.ppn, want.ppn)
+
+
+# ---------------------------------------------------------------------------
+# Event / DynamicMapping plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_events_from_diff_roundtrip():
+    rng = np.random.default_rng(0)
+    a = np.where(rng.random(512) < 0.8,
+                 rng.integers(0, 10_000, 512), -1).astype(np.int64)
+    b = a.copy()
+    b[40:80] = np.arange(40) + 20_000       # remap
+    b[100:110] = -1                         # unmap
+    b[200:220] = np.arange(20) + 30_000     # part map / part remap
+    evs = events_from_diff(a, b)
+    cur = a
+    for ev in evs:
+        cur = apply_event(cur, ev)
+    np.testing.assert_array_equal(cur, b)
+    assert {e.kind for e in evs} <= {"map", "unmap", "remap"}
+
+
+def test_dynamic_mapping_dirty_and_epoch_at():
+    n = 256
+    ppn0 = np.arange(n, dtype=np.int64)
+    dyn = build_dynamic_mapping(
+        ppn0, [(10, [MappingEvent("remap", 0, 8, ppn=1000)])])
+    assert dyn.n_epochs == 2
+    assert dyn.epoch_at(0) == 0 and dyn.epoch_at(9) == 0
+    assert dyn.epoch_at(10) == 1 and dyn.epoch_at(99) == 1
+    assert dyn.dirty_count(1) == 8
+    # newly mapped pages are NOT dirty (no stale translation existed)
+    ppn1 = np.full(n, -1, np.int64)
+    ppn1[:8] = 5
+    m1 = make_mapping(ppn1)
+    ppn2 = ppn1.copy()
+    ppn2[8:16] = 77                          # map fresh pages only
+    dyn2 = dynamic_from_snapshots([m1, make_mapping(ppn2)], [0, 5])
+    assert dyn2.dirty_count(1) == 0
+    assert dyn2.events[1][0].kind == "map"
+
+
+def test_dynamic_cell_key_sensitive_to_events():
+    """The sweep cache key must fold in the event stream: same epoch-0
+    mapping + same trace but different events/boundaries -> different key."""
+    n = 1 << 10
+    ppn0 = np.arange(n, dtype=np.int64)
+    tr = np.arange(500, dtype=np.int64) % n
+    ev = [MappingEvent("remap", 0, 32, ppn=5000)]
+    d1 = build_dynamic_mapping(ppn0, [(100, ev)])
+    d2 = build_dynamic_mapping(ppn0, [(200, ev)])                # when
+    d3 = build_dynamic_mapping(ppn0, [(100, [MappingEvent(
+        "remap", 0, 32, ppn=6000)])])                            # what
+    m_static = make_mapping(ppn0)
+    keys = {cell_key(SweepCell(base_spec(), w, tr))
+            for w in (d1, d2, d3, m_static)}
+    assert len(keys) == 4
+    assert cell_key(SweepCell(base_spec(), d1, tr)) == \
+        cell_key(SweepCell(base_spec(),
+                           build_dynamic_mapping(ppn0, [(100, ev)]), tr))
+
+
+def test_dynamic_cache_roundtrip(tmp_path, hot_world):
+    dyn, trace = hot_world
+    cells = [SweepCell(base_spec(), dyn, trace),
+             SweepCell(kaligned_spec([6, 4]), dyn, trace)]
+    cdir = str(tmp_path / "cache")
+    first = run_sweep(cells, cache=True, cache_dir=cdir)
+    assert first.stats["simulated"] == 2
+    second = run_sweep(cells, cache=True, cache_dir=cdir)
+    assert second.stats["cache_hits"] == 2
+    for a, b in zip(first.results, second.results):
+        for f in COUNTERS:
+            assert getattr(a, f) == getattr(b, f), f
+        np.testing.assert_array_equal(a.ppn, b.ppn)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_scenarios_registered():
+    names = {sc.name for sc in list_scenarios("dynamic")}
+    assert {"dyn-kv-churn", "dyn-compaction", "dyn-thp-split"} <= names
+
+
+@pytest.mark.parametrize("name", [sc.name for sc in list_scenarios("dynamic")])
+def test_dynamic_scenario_valid_per_epoch(name):
+    """Every trace entry must be mapped in the epoch live at that step, and
+    the static `mapping` is the epoch-0 snapshot."""
+    d = get_scenario(name).materialize(n_pages=1 << 12, trace_len=2000,
+                                       trace_seed=8)
+    dyn = d.dynamic
+    assert dyn is not None and d.world is dyn
+    assert dyn.n_epochs >= 2, "dynamic scenario produced a static world"
+    np.testing.assert_array_equal(d.mapping.ppn, dyn.epochs[0].ppn)
+    bounds = _epoch_bounds(dyn, len(d.trace))
+    for e in range(dyn.n_epochs):
+        seg = d.trace[bounds[e]: bounds[e + 1]]
+        assert (dyn.epochs[e].ppn[seg] >= 0).all(), f"epoch {e}"
+    assert sum(dyn.dirty_count(e) for e in range(1, dyn.n_epochs)) > 0, \
+        "no translation ever died: the world is effectively static"
+
+
+@pytest.mark.parametrize("name", [sc.name for sc in list_scenarios("dynamic")])
+def test_dynamic_scenario_deterministic(name):
+    a = get_scenario(name).materialize(n_pages=1 << 12, trace_len=1500,
+                                       map_seed=5)
+    clear_materialized_cache()
+    b = get_scenario(name).materialize(n_pages=1 << 12, trace_len=1500,
+                                       map_seed=5)
+    np.testing.assert_array_equal(a.trace, b.trace)
+    assert a.dynamic.boundaries == b.dynamic.boundaries
+    for ma, mb in zip(a.dynamic.epochs, b.dynamic.epochs):
+        np.testing.assert_array_equal(ma.ppn, mb.ppn)
+
+
+def test_dyn_kv_churn_tapped_real_scheduling():
+    d = get_scenario("dyn-kv-churn").materialize(n_pages=1 << 12,
+                                                 trace_len=1500, trace_seed=8)
+    assert d.meta["sched_events"].get("admit", 0) > 0
+    assert d.meta["events"], "no mapping events recorded"
+    assert d.meta["preemptions"] > 0 or d.meta["completions"] > 0

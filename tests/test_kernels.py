@@ -147,6 +147,7 @@ def test_flash_attention(rng, B, S, H, KVH, D, causal, bq, bk):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
 
 
+@pytest.mark.slow
 @given(s=st.integers(8, 160), bq=st.sampled_from([8, 32, 64]),
        bk=st.sampled_from([8, 32, 64]), seed=st.integers(0, 999))
 @settings(max_examples=10, deadline=None)

@@ -36,12 +36,21 @@ def test_registry_families_populated():
 @pytest.mark.parametrize("name", [sc.name for sc in list_scenarios()])
 def test_every_scenario_materializes_valid_world(name):
     """Every registered scenario yields a simulator-ready world: an int64
-    VPN trace that only touches mapped pages of its mapping."""
+    VPN trace that only touches mapped pages of its mapping (for dynamic
+    scenarios: mapped in the epoch live at that step)."""
     d = get_scenario(name).materialize(n_pages=N, trace_len=L, trace_seed=8)
     assert d.trace.dtype == np.int64 and d.trace.ndim == 1
     assert 0 < d.trace.shape[0] <= L
     assert d.trace.min() >= 0 and d.trace.max() < d.mapping.n_pages
-    assert (d.mapping.ppn[d.trace] >= 0).all(), "trace hit an unmapped vpn"
+    if d.dynamic is not None:
+        bounds = list(d.dynamic.boundaries) + [d.trace.shape[0]]
+        for e, m in enumerate(d.dynamic.epochs):
+            seg = d.trace[bounds[e]: bounds[e + 1]]
+            assert (m.ppn[seg] >= 0).all(), \
+                f"trace hit a vpn unmapped in epoch {e}"
+    else:
+        assert (d.mapping.ppn[d.trace] >= 0).all(), \
+            "trace hit an unmapped vpn"
     assert mapped_vpns(d.mapping).shape[0] > 0
 
 

@@ -121,6 +121,20 @@ def _make_trainer(d, total, fail_at=None):
     return Trainer(model, oc, tc, pipe, failure_hook=hook)
 
 
+def test_crash_restart_smoke():
+    """Default-tier resume coverage at the smallest useful size: one
+    checkpoint cycle, crash, restart from it."""
+    with tempfile.TemporaryDirectory() as d:
+        t1 = _make_trainer(d, total=5, fail_at=4)
+        with pytest.raises(SimulatedFailure):
+            t1.run()
+        t1.ckpt.wait()
+        out = _make_trainer(d, total=5).run()
+        steps = [m["step"] for m in out["metrics"]]
+        assert steps[0] == 3 and steps[-1] == 4
+
+
+@pytest.mark.slow
 def test_crash_restart_resumes_training():
     with tempfile.TemporaryDirectory() as d:
         t1 = _make_trainer(d, total=9, fail_at=7)
@@ -135,6 +149,7 @@ def test_crash_restart_resumes_training():
         assert steps[-1] == 8
 
 
+@pytest.mark.slow
 def test_restart_is_deterministic_continuation():
     """Run-through losses == crash+resume losses (same data, same steps)."""
     with tempfile.TemporaryDirectory() as d1, \
