@@ -24,6 +24,7 @@ from typing import Any, Dict, List
 
 from . import _env  # noqa: F401  (must precede jax-importing modules)
 from . import paged_kernel, roofline_summary, tlb_suite
+from repro.core.sweep import resolve_backend
 from repro.scenarios import clear_materialized_cache
 
 SMOKE_TRACE_LEN = 4096
@@ -123,6 +124,11 @@ def main(argv=None) -> None:
                     help="exit non-zero if total wall-clock exceeds this")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the on-disk sweep cache")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "xla", "pallas"),
+                    help="sweep execution backend (results are bit-exact "
+                         "across backends; 'auto' = pallas on TPU, xla "
+                         "elsewhere)")
     args = ap.parse_args(argv)
 
     if args.no_cache:
@@ -140,6 +146,8 @@ def main(argv=None) -> None:
         varnames = fn.__code__.co_varnames[:fn.__code__.co_argcount]
         if "quick" in varnames:
             kwargs["quick"] = not args.full
+        if "backend" in varnames:
+            kwargs["backend"] = args.backend
         if args.smoke:
             if "trace_len" in varnames:
                 kwargs["trace_len"] = SMOKE_TRACE_LEN
@@ -150,8 +158,11 @@ def main(argv=None) -> None:
         dt = time.time() - t0
         # worlds are memoized per-process so one bench builds each once;
         # drop them between benches or --full retains every mapping+trace
-        # (hundreds of MB) until exit
-        clear_materialized_cache()
+        # (hundreds of MB) until exit.  Smoke worlds are tiny — keep them,
+        # so benches sharing scenarios (tlb_scenarios /
+        # tlb_scenario_contiguity) build each world once per process.
+        if not args.smoke:
+            clear_materialized_cache()
         results[name] = {"artifact": artifact, "rows": rows,
                          "wall_s": round(dt, 1)}
         n_calls = max(len(rows), 1)
@@ -166,8 +177,10 @@ def main(argv=None) -> None:
         print(line)
     os.makedirs("results", exist_ok=True)
     tier_name = "smoke" if args.smoke else ("full" if args.full else "quick")
-    payload = {"tier": tier_name, "total_wall_s": round(total, 1),
-               "sections": results}
+    payload = {"tier": tier_name,
+               # record what actually ran ('auto' resolves per platform)
+               "backend": resolve_backend(args.backend),
+               "total_wall_s": round(total, 1), "sections": results}
     with open("results/benchmarks.json", "w") as f:
         json.dump(payload, f, indent=1)
     print(f"\nwrote results/benchmarks.json  (tier={tier_name}, "

@@ -71,6 +71,8 @@ class SweepPlan:
 
     ``group="anchor"`` cells are reduced to the best (fewest walks) result
     per (row, label) — the Anchor-Static exhaustive-grid policy of §4.1.
+    ``backend`` selects the sweep execution backend (``auto``/``xla``/
+    ``pallas``); results are bit-exact across backends.
     """
 
     def __init__(self):
@@ -89,8 +91,9 @@ class SweepPlan:
             self.add(anchor_spec(d), mapping, trace, row, label,
                      group="anchor")
 
-    def run(self, cache: bool = True) -> Dict[str, Dict[str, SimResult]]:
-        sweep = run_sweep(self.cells, cache=cache)
+    def run(self, cache: bool = True, backend: str = "auto"
+            ) -> Dict[str, Dict[str, SimResult]]:
+        sweep = run_sweep(self.cells, cache=cache, backend=backend)
         out: Dict[str, Dict[str, SimResult]] = {}
         for (row, label, group), r in zip(self.tags, sweep.results):
             cols = out.setdefault(row, {})
@@ -124,7 +127,7 @@ def _add_suite(plan: SweepPlan, m, tr, row: str, anchor_grid,
 
 
 def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
-                    max_pages=MAX_PAGES_DEFAULT):
+                    max_pages=MAX_PAGES_DEFAULT, backend="auto"):
     """Table 4 synthetic-mapping rows."""
     n_pages = min(n_pages, max_pages)
     plan = SweepPlan()
@@ -134,7 +137,7 @@ def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
             n_pages=n_pages, trace_len=trace_len, map_seed=1, trace_seed=2)
         _add_suite(plan, d.mapping, d.trace, kind, ANCHOR_GRID_QUICK)
         order.append(kind)
-    res = plan.run()
+    res = plan.run(backend=backend)
     rows = []
     for kind in order:
         cols = res[kind]
@@ -145,7 +148,8 @@ def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
     return rows
 
 
-def bench_demand(trace_len=150_000, quick=True, max_pages=None):
+def bench_demand(trace_len=150_000, quick=True, max_pages=None,
+                 backend="auto"):
     """Figure 8: per-benchmark relative misses on the demand mapping.
 
     Footprints are only capped in quick/smoke tiers; ``--full`` runs the
@@ -158,7 +162,7 @@ def bench_demand(trace_len=150_000, quick=True, max_pages=None):
     for name in benches:
         m, tr = _paper_world(name, trace_len, cap, trace_seed=3)
         _add_suite(plan, m, tr, name, ANCHOR_GRID_QUICK, psis=(2,))
-    res = plan.run()
+    res = plan.run(backend=backend)
     rows = []
     for name in benches:
         cols = res[name]
@@ -170,7 +174,7 @@ def bench_demand(trace_len=150_000, quick=True, max_pages=None):
 
 
 def bench_coverage(trace_len=120_000, quick=True,
-                   max_pages=MAX_PAGES_DEFAULT):
+                   max_pages=MAX_PAGES_DEFAULT, backend="auto"):
     """Table 5: relative TLB translation coverage (covered PTEs / 1024)."""
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
@@ -180,7 +184,7 @@ def bench_coverage(trace_len=120_000, quick=True,
         plan.add(colt_spec(), m, tr, name, "COLT")
         plan.add_anchor_static(m, tr, name, grid=(6, 8, 10))
         plan.add(kaligned_for_mapping(m, psi=2), m, tr, name, "|K|=2")
-    res = plan.run()
+    res = plan.run(backend=backend)
     rows = []
     for name in benches:
         cols = res[name]
@@ -192,7 +196,7 @@ def bench_coverage(trace_len=120_000, quick=True,
 
 
 def bench_predictor(trace_len=120_000, quick=True,
-                    max_pages=MAX_PAGES_DEFAULT):
+                    max_pages=MAX_PAGES_DEFAULT, backend="auto"):
     """Table 6: predictor accuracy per benchmark for |K| = 2, 3, 4."""
     benches = QUICK_BENCHES[:6] if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
@@ -201,7 +205,7 @@ def bench_predictor(trace_len=120_000, quick=True,
         for psi in (2, 3, 4):
             plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
                      name, f"|K|={psi}")
-    res = plan.run()
+    res = plan.run(backend=backend)
     return [{"benchmark": name,
              **{k: round(v.predictor_accuracy, 3)
                 for k, v in res[name].items()}}
@@ -209,7 +213,7 @@ def bench_predictor(trace_len=120_000, quick=True,
 
 
 def bench_k_sweep(trace_len=150_000, n_pages=1 << 19,
-                  max_pages=MAX_PAGES_DEFAULT):
+                  max_pages=MAX_PAGES_DEFAULT, backend="auto"):
     """Figure 9: misses of |K| modes relative to Anchor-Static (mixed)."""
     d = get_scenario("synth-mixed").materialize(
         n_pages=min(n_pages, max_pages), trace_len=trace_len,
@@ -220,7 +224,7 @@ def bench_k_sweep(trace_len=150_000, n_pages=1 << 19,
     for psi in (1, 2, 3, 4):
         plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
                  "mixed", f"|K|={psi}")
-    res = plan.run()["mixed"]
+    res = plan.run(backend=backend)["mixed"]
     anch = res["Anchor-Static"]
     return [{"|K|": psi,
              "rel_misses_vs_anchor": round(
@@ -228,7 +232,8 @@ def bench_k_sweep(trace_len=150_000, n_pages=1 << 19,
             for psi in (1, 2, 3, 4)]
 
 
-def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
+def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT,
+              backend="auto"):
     """Figures 10/11: translation cycles per access."""
     benches = ("gups", "mcf", "graph500") if quick else tuple(BENCHMARKS)
     plan = SweepPlan()
@@ -241,7 +246,7 @@ def bench_cpi(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
         for psi in (2, 3):
             plan.add(kaligned_for_mapping(m, psi=psi, theta=1.0), m, tr,
                      name, f"|K|={psi}")
-    res = plan.run()
+    res = plan.run(backend=backend)
     return [{"benchmark": name,
              **{k: round(v.cpi, 3) for k, v in res[name].items()}}
             for name in benches]
@@ -262,7 +267,7 @@ def _scenario_names(quick: bool) -> Tuple[str, ...]:
 
 
 def bench_scenarios(trace_len=120_000, quick=True,
-                    max_pages=MAX_PAGES_DEFAULT):
+                    max_pages=MAX_PAGES_DEFAULT, backend="auto"):
     """Per-scenario relative misses, full method suite through run_sweep.
 
     Each row is one registered scenario (workload-derived or adversarial):
@@ -275,7 +280,7 @@ def bench_scenarios(trace_len=120_000, quick=True,
         d = _scenario_world(name, trace_len, max_pages)
         _add_suite(plan, d.mapping, d.trace, name, ANCHOR_GRID_QUICK,
                    psis=(2, 3))
-    res = plan.run()
+    res = plan.run(backend=backend)
     rows = []
     for name in names:
         cols = res[name]
@@ -286,7 +291,8 @@ def bench_scenarios(trace_len=120_000, quick=True,
     return rows
 
 
-def bench_dynamic(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
+def bench_dynamic(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT,
+                  backend="auto"):
     """Dynamic mapping worlds: mid-trace remaps with shootdown-correct TLBs.
 
     Every registered ``dynamic`` scenario (live event streams instead of
@@ -306,7 +312,7 @@ def bench_dynamic(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT):
         # OS saw at launch; the events then degrade it, which is the point
         _add_suite(plan, d.world, d.trace, name, ANCHOR_GRID_QUICK,
                    psis=(2, 3), k_mapping=d.mapping)
-    res = plan.run()
+    res = plan.run(backend=backend)
     rows = []
     for name in names:
         cols = res[name]

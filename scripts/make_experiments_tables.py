@@ -126,7 +126,10 @@ def render_tlb(path):
     sections = payload.get("sections", payload)
     tier = payload.get("tier", "?")
     total = payload.get("total_wall_s", "?")
-    print(f"## TLB sweep results  (tier={tier}, total {total}s)\n")
+    # pre-backend-knob runs did not record the engine backend
+    backend = payload.get("backend", "auto")
+    print(f"## TLB sweep results  (tier={tier}, backend={backend}, "
+          f"total {total}s)\n")
     for name, sec in sections.items():
         if not name.startswith("tlb_") or name in SCENARIO_SECTIONS:
             continue

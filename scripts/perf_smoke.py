@@ -1,0 +1,235 @@
+"""Perf-smoke: time the smoke-tier sweep per backend, track the trajectory.
+
+For every requested backend this script runs the smoke benchmark suite
+twice in a scratch directory — once with an empty sweep cache (``cold_s``:
+world materialization + compile + simulate + cache store) and once again
+over the populated cache (``cached_s``: the content-hash cache-hit path) —
+and appends one entry per backend to the repo-root ``BENCH_sweep.json``
+trajectory::
+
+    {"git_sha": ..., "tier": ..., "backend": ..., "cold_s": ..., "cached_s": ...}
+
+Scopes per backend:
+
+* ``xla`` — the full smoke TLB suite (``python -m benchmarks.run --smoke``),
+  tier ``smoke``; this is the default-backend number the CI regression gate
+  watches.
+* ``pallas`` — a micro sweep (tier ``smoke-micro``): all 8 method kinds ×
+  one static + one dynamic world at test scale, through the same
+  ``run_sweep`` path.  Off-TPU the kernel runs in *interpret* mode, where
+  smoke-scale record blocks make wall time pure interpreter overhead — so
+  this lane sizes the worlds down to keep the Pallas path exercised
+  end-to-end (cold compile + simulate + cache, then the cached path) with
+  a trajectory that is comparable run-over-run.
+
+``--check`` compares each backend's fresh ``cold_s`` against the **last
+committed entry** (read from ``git show HEAD:BENCH_sweep.json``, so local
+appends never ratchet the baseline) of the same (tier, backend, host) in
+``BENCH_sweep.json`` and exits non-zero past ``--threshold`` (default
+1.3×) — the sweep engine must not quietly regress.  Entries carry a
+``host`` signature (platform + cpu count): wall-clock only compares within
+one machine class, so a CI runner is gated by CI-measured baselines, not
+by numbers committed from a developer laptop — until a matching baseline
+exists, the check reports "no baseline" and passes.
+
+Usage::
+
+    python scripts/perf_smoke.py [--backends xla,pallas] [--check]
+                                 [--no-append] [--threshold 1.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_FILE = os.path.join(REPO, "BENCH_sweep.json")
+
+TIERS = {"xla": "smoke", "pallas": "smoke-micro"}
+
+_MICRO_SWEEP = r"""
+import numpy as np
+from repro.core import demand_mapping, generate_trace
+from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
+                                  colt_spec, kaligned_spec, rmm_spec,
+                                  thp_spec)
+from repro.core.page_table import MappingEvent, build_dynamic_mapping
+from repro.core.sweep import SweepCell, run_sweep
+
+m = demand_mapping(1 << 10, seed=11)
+tr = generate_trace("multiscale", 0, 256, seed=4, mapping=m)
+dyn = build_dynamic_mapping(
+    np.arange(1 << 10, dtype=np.int64) + 7,
+    [(80, [MappingEvent("remap", 0, 128, ppn=100_000)]),
+     (150, [MappingEvent("unmap", 768, 32)])], name="perf-dyn")
+dtr = np.random.default_rng(3).integers(0, 512, size=256).astype(np.int64)
+specs = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
+         anchor_spec(6), kaligned_spec([9, 6, 4]),
+         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+cells = [SweepCell(s, m, tr) for s in specs]
+cells += [SweepCell(s, dyn, dtr) for s in specs]
+sweep = run_sweep(cells, backend="pallas")
+assert all(r is not None for r in sweep.results)
+print("micro sweep ok", sweep.stats)
+"""
+
+
+def _run_cmd(backend: str):
+    if backend == "pallas":
+        return [sys.executable, "-c", _MICRO_SWEEP]
+    return [sys.executable, "-m", "benchmarks.run", "--smoke",
+            "--backend", backend]
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "describe", "--always", "--dirty"],
+                              capture_output=True, text=True, cwd=REPO,
+                              timeout=10).stdout.strip() or "nogit"
+    except (OSError, subprocess.SubprocessError):
+        return "nogit"
+
+
+def _host_sig() -> str:
+    """Machine-class signature: wall-clock baselines only compare within
+    one class (a 2-core dev container and a GitHub runner are different
+    machines; comparing across them measures hardware, not the engine)."""
+    return f"{platform.system().lower()}-{platform.machine()}-" \
+           f"{os.cpu_count()}cpu"
+
+
+def _run_once(backend: str, cwd: str) -> float:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), REPO,
+                    env.get("PYTHONPATH")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    t0 = time.time()
+    r = subprocess.run(_run_cmd(backend), cwd=cwd, env=env,
+                       capture_output=True, text=True)
+    dt = time.time() - t0
+    if r.returncode != 0:
+        sys.stderr.write(r.stdout[-2000:] + r.stderr[-4000:])
+        raise SystemExit(f"perf-smoke run failed for backend={backend}")
+    return dt
+
+
+def measure(backend: str) -> dict:
+    # a scratch cwd gives a fresh results/sweep_cache: run 1 is the cold
+    # path (materialize + compile + simulate + store), run 2 the cached one
+    with tempfile.TemporaryDirectory(prefix=f"perf_smoke_{backend}_") as tmp:
+        cold = _run_once(backend, tmp)
+        cached = _run_once(backend, tmp)
+    return {"git_sha": _git_sha(), "tier": TIERS[backend],
+            "backend": backend, "host": _host_sig(),
+            "cold_s": round(cold, 1), "cached_s": round(cached, 1)}
+
+
+def load_trajectory() -> list:
+    if not os.path.exists(BENCH_FILE):
+        return []
+    with open(BENCH_FILE) as f:
+        data = json.load(f)
+    assert isinstance(data, list), "BENCH_sweep.json must hold a list"
+    return data
+
+
+def committed_trajectory() -> list:
+    """The trajectory as of HEAD — the regression baseline.  Local
+    (uncommitted) appends must never ratchet the gate: inside a git
+    checkout where the file is absent from HEAD the baseline is empty, and
+    only outside a git checkout (no HEAD to ask) does the working-tree
+    file stand in."""
+    try:
+        r = subprocess.run(["git", "show", "HEAD:BENCH_sweep.json"],
+                           capture_output=True, text=True, cwd=REPO,
+                           timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return load_trajectory()
+    if r.returncode != 0:
+        in_repo = subprocess.run(
+            ["git", "rev-parse", "--is-inside-work-tree"],
+            capture_output=True, text=True, cwd=REPO, timeout=10)
+        return [] if in_repo.returncode == 0 else load_trajectory()
+    data = json.loads(r.stdout)
+    assert isinstance(data, list)
+    return data
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default="xla,pallas",
+                    help="comma list of backends to measure")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on cold-time regression vs the committed "
+                         "baseline")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="max allowed cold_s ratio vs baseline (default "
+                         "1.3x)")
+    ap.add_argument("--no-append", action="store_true",
+                    help="measure and check only; leave BENCH_sweep.json "
+                         "untouched")
+    args = ap.parse_args(argv)
+
+    trajectory = load_trajectory()
+    committed = committed_trajectory()
+    failures = []
+    for backend in [b for b in args.backends.split(",") if b]:
+        if backend not in TIERS:
+            raise SystemExit(f"unknown backend {backend!r}")
+        entry = measure(backend)
+        baseline = next(
+            (e for e in reversed(committed)
+             if e.get("tier") == entry["tier"]
+             and e.get("backend") == backend
+             and e.get("host") == entry["host"]), None)
+        status = "no baseline"
+        if baseline is None and args.check:
+            # the gate is inert until a baseline measured on THIS machine
+            # class is committed — say so loudly and print the ready-to-
+            # commit entry, so a green run can't be mistaken for a passed
+            # regression check (e.g. a fresh CI runner class)
+            print(f"NOTE: no committed baseline for "
+                  f"(tier={entry['tier']}, backend={backend}, "
+                  f"host={entry['host']}) — the regression gate did NOT "
+                  f"run.  Commit this entry to BENCH_sweep.json to arm "
+                  f"it:\n  {json.dumps(entry)}", file=sys.stderr)
+            if os.environ.get("GITHUB_ACTIONS"):
+                # surface it as an annotation: a green job with an unarmed
+                # gate must be visible on the PR, not buried in the log
+                print(f"::warning file=BENCH_sweep.json::perf-smoke gate "
+                      f"not armed for {backend}@{entry['host']} — commit "
+                      f"a baseline entry measured on this runner class "
+                      f"(see the job log for the ready-to-commit JSON)")
+        if baseline:
+            ratio = entry["cold_s"] / max(baseline["cold_s"], 1e-9)
+            status = (f"{ratio:.2f}x vs baseline "
+                      f"{baseline['cold_s']}s@{baseline['git_sha']}")
+            if args.check and ratio > args.threshold:
+                failures.append(f"{backend}: cold {entry['cold_s']}s is "
+                                f"{ratio:.2f}x baseline "
+                                f"{baseline['cold_s']}s "
+                                f"(> {args.threshold}x)")
+        print(f"{backend:7s} tier={entry['tier']:15s} "
+              f"cold={entry['cold_s']:7.1f}s cached={entry['cached_s']:6.1f}s "
+              f"[{status}]")
+        trajectory.append(entry)
+
+    if not args.no_append:
+        with open(BENCH_FILE, "w") as f:
+            json.dump(trajectory, f, indent=1)
+            f.write("\n")
+        print(f"appended to {os.path.relpath(BENCH_FILE)}")
+    for msg in failures:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

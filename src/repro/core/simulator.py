@@ -540,7 +540,7 @@ def _as_dynamic(world) -> DynamicMapping:
 def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
                        ) -> SimResult:
     """Simulate one method over a (possibly dynamic) world, pure python."""
-    from .sweep import _fill_profile, _fill_profile_key  # lazy: no cycle
+    from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
 
     dyn = _as_dynamic(world)
     n_pages = dyn.n_pages

@@ -1,61 +1,58 @@
-"""Batched sweep engine: every method × trace as one vmapped simulation.
+"""Batched sweep engine: every method × trace as one compiled program.
 
 :func:`repro.core.simulator.run_method` simulates one ``(spec, mapping,
 trace)`` triple per call and re-compiles for every distinct ``MethodSpec``
 and every distinct array shape.  A paper-scale sweep (7+ methods × 16
 benchmarks × several |K| / seed settings) pays that compile cost hundreds of
 times.  This module instead *pads every method onto one common array layout*
-so that all of ``base/thp/colt/cluster/rmm/anchor/kaligned`` run as rows of a
-single ``jax.vmap``-ed set-associative scan, compiled once per shape bucket
-and reused across traces and seeds:
+so that all of ``base/thp/colt/cluster/rmm/anchor/kaligned`` run as lanes of
+a single program, compiled once per shape bucket and reused across traces
+and seeds.  The per-lane program itself — packing rules, the union step
+datapath, the shootdown pass, the time-blocked execution plan — lives in
+:mod:`repro.core.lane_program`; this module executes it and orchestrates
+caching.  Two backends consume that one definition:
 
-* L2 arrays are padded to the max ``(l2_sets, l2_ways)`` of the batch; padded
-  ways carry ``INVALID`` k-classes and a ``+BIG`` victim score so they can
-  neither hit nor be chosen for fill.
-* ``K`` is padded to the max ``|K|`` with inert ``-1`` alignment classes
-  whose probes are masked out.
-* The THP 2MB L1 array, the RMM range TLB, and the clustered side TLB are
-  always present in the carried state but gated per lane by ``has_*`` flags
-  (they are tiny next to L2, so inert lanes cost almost nothing).
-* Traces are stacked and padded to a common length; padded steps are fully
-  masked (no state writes, no counter increments), which keeps every lane
-  bit-exact with its per-call :func:`run_method` equivalent.
+* ``backend='xla'`` (the CPU/GPU fast path): one ``jax.lax.scan`` whose
+  carry is the packed state of ALL lanes and whose body advances every lane
+  by a **block** of ``TB`` trace steps — the per-step map/fill/cluster/trace
+  gathers are hoisted into one bulk gather per block and the intra-block
+  dependency chain is unrolled, so a block costs a handful of fused memory
+  ops instead of ``TB × (~10 gathers + ~5 scatters)`` of vmapped
+  point-scatter dispatches.  Epoch-turnover shootdowns run under a
+  ``lax.cond`` on the (static-timeline) segment-entry blocks, so static
+  batches never pay them.
+* ``backend='pallas'`` (:mod:`repro.kernels.tlb_sweep`): a Pallas kernel
+  whose grid maps lanes to program instances, keeps all TLB state in
+  scratch for the whole trace, and streams trace blocks in — eliminating
+  the HBM state round-trip per step on real accelerators (``interpret=True``
+  on CPU).
 
-Every per-method *static* attribute of the specialized engine (kind, side,
-predictor, miss-chain latency, set mask, index shift) becomes per-lane
-*data*, so one compiled program serves the whole sweep.
-
-Two structural optimizations make the batched step fast on CPU (where each
-vmapped point-scatter is a per-lane loop):
-
-* each TLB structure lives in ONE packed array with a trailing field axis
-  (L2 is ``[sets, ways, 5]`` = tag/k/contig/ppn/lru), so a fill is a single
-  row scatter instead of five;
-* fill selection (Algorithm 1, the COLT window clip, THP promotion) depends
-  only on ``(mapping, fill policy, vpn)`` — it is precomputed *outside* the
-  scan as a per-vpn record and becomes one gather inside the step.
+``backend='auto'`` picks ``pallas`` on TPU and ``xla`` elsewhere.  Both
+backends are bit-exact against the pure-python oracles
+:func:`~repro.core.simulator.run_method` /
+:func:`~repro.core.simulator.run_method_dynamic` for every block size
+(``tests/test_backends.py``), so results and cache entries never depend on
+the execution strategy.
 
 Dynamic worlds (:class:`~repro.core.page_table.DynamicMapping`) run as
-**epoch-segmented lanes** of the same program: map/fill/cluster records are
-precomputed per ``(world, epoch)``, the scan is split at the static union
-of all lanes' epoch boundaries, and between segments a vectorized shootdown
-pass — gated per lane by whether its epoch turned over — invalidates every
-entry (in L1, the 2MB L1, L2, the RMM range TLB and the clustered side-TLB)
-whose covered vpn range contains a page whose translation died, via a range
-query against the epoch's dirty-bitmap prefix sums.  Static cells are
-1-epoch worlds, so mixed sweeps still compile once; every dynamic lane is
-bit-exact against the pure-python epoch-aware oracle
-:func:`repro.core.simulator.run_method_dynamic`.
+**epoch-segmented lanes**: records are precomputed per ``(world, epoch)``,
+the block timeline is split at the static union of all lanes' epoch
+boundaries, and the first block of every segment runs a vectorized
+shootdown pass — gated per lane by whether its epoch turned over — that
+invalidates every entry whose covered vpn range contains a page whose
+translation died.  ``run_sweep`` partitions each batch so purely-static
+cells never ride a multi-segment timeline.
 
-When JAX exposes several (virtual) host devices, lanes are additionally
-sharded across them with ``pmap`` — ``benchmarks/_env.py`` turns that on for
-benchmark runs.
+When JAX exposes several (virtual) host devices, lanes are sharded across
+them with ``pmap`` — lane batches are padded to a device multiple so every
+run shards (``benchmarks/_env.py`` turns the devices on for benchmarks).
 
 :func:`run_sweep` is the orchestrator: it dedups mappings/traces, packs
 lanes, consults an on-disk result cache under ``results/sweep_cache`` keyed
-by ``(spec, mapping hash, trace hash, git describe)``, simulates only the
-missing cells, and returns per-cell :class:`~repro.core.simulator.SimResult`
-objects bit-identical to the per-call oracle.
+by ``(spec, mapping hash, trace hash, code fingerprint)``, simulates only
+the missing cells, and returns per-cell
+:class:`~repro.core.simulator.SimResult` objects bit-identical to the
+per-call oracle.
 """
 from __future__ import annotations
 
@@ -70,34 +67,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import (DynamicMapping, Mapping, cluster_bitmap,
-                         huge_page_backed, next_pow2 as _next_pow2)
-from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
-                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_EXTRA_PROBE,
-                        LAT_INVALIDATE, LAT_L2_REG, LAT_SHOOTDOWN, LAT_WALK,
-                        N_COV_SAMPLES, NEG, REGULAR, RMM_ENTRIES, MethodSpec,
-                        SimResult, miss_chain_cycles)
+from .lane_program import (
+    C_COAL, C_CYC, C_L1, C_PRED, C_PROBE, C_REG, C_SHOOT, C_WALK,
+    LANE_SHARE_MAX, STEP_KEYS, build_block_plan,
+    init_batched_state as _init_batched_state, pack_lanes as _pack_lanes,
+    shoot_lane, step_access)
+from .page_table import DynamicMapping, Mapping
+from .simulator import MethodSpec, SimResult
 
-BIG = 2**30  # victim score for padded ways: never evictable
+# Default trace-steps-per-block of the time-blocked XLA backend.  Override
+# per call with ``run_sweep(..., block_size=...)`` or globally with the
+# ``REPRO_SWEEP_BLOCK`` env var.  Measured on CPU: run time keeps improving
+# up to ~32 steps per block (the per-block record gathers amortize), while
+# the inner-scan block body keeps compile time flat in the block size.
+DEFAULT_BLOCK = 32
 
-# Shape buckets: pad so repeated sweeps of similar size reuse the same
-# compiled executable instead of specializing on exact lane/trace/page counts.
-LANE_BUCKET = 8
-TRACE_BUCKET = 4096
 
-# packed-field indices
-TAG, KCLS, CONTIG, PPN, LRU = 0, 1, 2, 3, 4          # L2: [S, W, 5]
-# L1/L1H: [sets, ways, 3] = tag, ppn, lru
-# RMM:    [32, 4]         = start, len, ppn, lru
-# CLUS:   [64, 5, 3]      = tag, bitmap, lru
-# fill record: [P, 4]     = tag, k, contig, ppn      (one per world epoch)
-# map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]  (ditto)
-# dirty record: [P+1]     = prefix sum of the epoch's dirty-vpn bitmap
-# counters: [9] = l1_hits, reg_hits, coal_hits, walks, probes, pred_correct,
-#                 cycles, cov, shootdowns
-N_COUNTERS = 9
-(C_L1, C_REG, C_COAL, C_WALK, C_PROBE, C_PRED, C_CYC, C_COV,
- C_SHOOT) = range(9)
+def _block_size(block_size: Optional[int]) -> int:
+    if block_size is None:
+        block_size = int(os.environ.get("REPRO_SWEEP_BLOCK", DEFAULT_BLOCK))
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    return block_size
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """Resolve the ``backend`` knob to the backend that actually runs:
+    ``'auto'``/``None`` picks ``pallas`` on TPU and ``xla`` elsewhere.
+    Public so harnesses recording what ran (``benchmarks/run.py``) resolve
+    it the same way ``run_sweep`` does."""
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown sweep backend {backend!r} "
+                         "(want 'auto', 'xla' or 'pallas')")
+    return backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +149,11 @@ class SweepCell:
             return self.mapping.boundaries
         return (0,)
 
+    @property
+    def is_dynamic(self) -> bool:
+        """True when the world actually changes mid-trace (>= 2 epochs)."""
+        return len(self.boundaries) > 1
+
 
 @dataclasses.dataclass
 class SweepResult:
@@ -161,623 +170,90 @@ class SweepResult:
 
 
 # ---------------------------------------------------------------------------
-# Precomputed per-vpn records (fill policy is trace-independent)
+# The XLA backend: one scan over TB-step blocks, body vmapped over lanes
 # ---------------------------------------------------------------------------
 
+def _run_lanes_impl(lanes, stacks, st0, seg_bounds, tb):
+    """Time-blocked batched simulation of every lane.
 
-def _map_record(m: Mapping, P: int) -> np.ndarray:
-    """[P, 4] int32: ppn, run_start, run_len, ppn[run_start] (RMM fill)."""
-    n = m.n_pages
-    rec = np.zeros((P, 4), np.int32)
-    rec[:, 0] = -1
-    rec[:n, 0] = m.ppn
-    rec[:n, 1] = m.run_start
-    rec[:n, 2] = m.run_len
-    rec[:n, 3] = m.ppn[np.clip(m.run_start, 0, n - 1)]
-    return rec
-
-
-def _fill_profile_key(spec: MethodSpec):
-    if spec.kind in ("kaligned", "anchor"):
-        return ("ka", spec.K)
-    if spec.kind in ("colt", "thp"):
-        return (spec.kind,)
-    return ("reg",)
-
-
-def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
-    """[P, 4] int32 fill record (tag, k, contig, ppn): what Algorithm 1 /
-    COLT / THP / the regular policy would install on a walk at each vpn."""
-    n = m.n_pages
-    vpn = np.arange(n, dtype=np.int64)
-    ppn = m.ppn
-    rs, rl = m.run_start, m.run_len
-
-    def contig_at(v):
-        v = np.clip(v, 0, n - 1)
-        return np.where(ppn[v] >= 0, rs[v] + rl[v] - v, 0)
-
-    tag = vpn.copy()
-    kcls = np.full(n, REGULAR, np.int64)
-    contig = np.ones(n, np.int64)
-    fppn = ppn.copy()
-    if key[0] == "ka":
-        chosen = np.zeros(n, bool)
-        for k in key[1]:                    # descending; first cover wins
-            vk = vpn & ~((1 << k) - 1)
-            sc = np.minimum(contig_at(vk), 1 << k)
-            take = (sc > (vpn - vk)) & ~chosen
-            tag = np.where(take, vk, tag)
-            kcls = np.where(take, k, kcls)
-            contig = np.where(take, sc, contig)
-            fppn = np.where(take, ppn[np.clip(vk, 0, n - 1)], fppn)
-            chosen |= take
-    elif key[0] == "colt":
-        w8 = vpn & ~np.int64(7)
-        re = rs + rl
-        tag = np.maximum(rs, w8)
-        contig = np.maximum(np.minimum(re, w8 + 8) - tag, 1)
-        kcls = np.where(contig > 1, 3, REGULAR)
-        fppn = ppn[np.clip(tag, 0, n - 1)]
-    elif key[0] == "thp":
-        huge = huge_page_backed(m)
-        hv = vpn >> 9
-        tag = np.where(huge, hv, vpn)
-        kcls = np.where(huge, HUGE, REGULAR)
-        contig = np.where(huge, 512, 1)
-        fppn = ppn[np.clip(np.where(huge, hv << 9, vpn), 0, n - 1)]
-
-    rec = np.zeros((P, 4), np.int32)
-    rec[:n, 0] = tag
-    rec[:n, 1] = kcls
-    rec[:n, 2] = contig
-    rec[:n, 3] = fppn
-    rec[n:, 1] = REGULAR
-    return rec
-
-
-# ---------------------------------------------------------------------------
-# Lane packing
-# ---------------------------------------------------------------------------
-
-
-def _pack_lanes(cells: Sequence[SweepCell]):
-    """Dedup worlds/traces/fill-profiles; pack per-lane params to arrays.
-
-    Every world is an epoch *sequence* (a static ``Mapping`` is one epoch);
-    map/fill/cluster records are built per ``(world, epoch)`` and lanes carry
-    a per-segment record index, so dynamic and static lanes share one
-    compiled program.  The segment grid — the sorted union of every lane's
-    epoch boundaries — is returned as a static tuple; between segments the
-    engine runs the shootdown pass for lanes whose epoch turned over.
-    """
-    worlds: List = []
-    world_index: Dict[int, int] = {}
-    traces: List[np.ndarray] = []
-    trace_index: Dict[int, int] = {}
-    for c in cells:
-        if id(c.mapping) not in world_index:
-            world_index[id(c.mapping)] = len(worlds)
-            worlds.append(c.mapping)
-        if id(c.trace) not in trace_index:
-            trace_index[id(c.trace)] = len(traces)
-            traces.append(c.trace)
-
-    all_epochs: Dict[int, Tuple[Mapping, ...]] = {
-        w: (m.epochs if isinstance(m, DynamicMapping) else (m,))
-        for w, m in enumerate(worlds)}
-    all_bounds: Dict[int, Tuple[int, ...]] = {
-        w: (m.boundaries if isinstance(m, DynamicMapping) else (0,))
-        for w, m in enumerate(worlds)}
-
-    P = _next_pow2(max(m.n_pages for ms in all_epochs.values() for m in ms))
-    T = -(-max(t.shape[0] for t in traces) // TRACE_BUCKET) * TRACE_BUCKET
-
-    # map records: one per (world, epoch)
-    map_recs: List[np.ndarray] = []
-    map_rec_id: Dict[Tuple[int, int], int] = {}
-    for w, ms in all_epochs.items():
-        for e, m in enumerate(ms):
-            map_rec_id[(w, e)] = len(map_recs)
-            map_recs.append(_map_record(m, P))
-
-    # fill records: one per (world, epoch, fill profile)
-    fill_recs: List[np.ndarray] = []
-    fill_rec_id: Dict[Tuple[int, int, tuple], int] = {}
-    for c in cells:
-        w = world_index[id(c.mapping)]
-        key = _fill_profile_key(c.spec)
-        for e, m in enumerate(all_epochs[w]):
-            fk = (w, e, key)
-            if fk not in fill_rec_id:
-                fill_rec_id[fk] = len(fill_recs)
-                fill_recs.append(_fill_profile(m, key, P))
-
-    # cluster bitmaps: one per (world, epoch), only if any lane needs them
-    need_clus = any(c.spec.side == "cluster" for c in cells)
-    clus_recs: List[np.ndarray] = [np.zeros(P if need_clus else 1, np.int32)]
-    clus_rec_id: Dict[Tuple[int, int], int] = {}
-    if need_clus:
-        for c in cells:
-            if c.spec.side != "cluster":
-                continue
-            w = world_index[id(c.mapping)]
-            for e, m in enumerate(all_epochs[w]):
-                if (w, e) not in clus_rec_id:
-                    rec = np.zeros(P, np.int32)
-                    rec[: m.n_pages] = cluster_bitmap(m)
-                    clus_rec_id[(w, e)] = len(clus_recs)
-                    clus_recs.append(rec)
-
-    # dirty records (prefix sums): one per (world, epoch >= 1) with >=1 dirty
-    dirty_recs: List[np.ndarray] = [np.zeros(P + 1, np.int32)]
-    dirty_rec_id: Dict[Tuple[int, int], int] = {}
-    for w, m in enumerate(worlds):
-        if not isinstance(m, DynamicMapping):
-            continue
-        for e in range(1, m.n_epochs):
-            if m.dirty_count(e) == 0:
-                continue
-            dc = np.zeros(P + 1, np.int32)
-            np.cumsum(m.dirty(e), out=dc[1: m.n_pages + 1])
-            dc[m.n_pages + 1:] = dc[m.n_pages]
-            dirty_rec_id[(w, e)] = len(dirty_recs)
-            dirty_recs.append(dc)
-
-    trace_stack = np.zeros((len(traces), T), np.int32)
-    for i, t in enumerate(traces):
-        trace_stack[i, : t.shape[0]] = t
-
-    # segment grid: union of all epoch boundaries, static per compile
-    grid = sorted({int(b) for w in range(len(worlds))
-                   for b in all_bounds[w][1:]})
-    seg_bounds = tuple([0] + grid + [T])
-    n_segs = len(seg_bounds) - 1
-
-    L = -(-len(cells) // LANE_BUCKET) * LANE_BUCKET
-    max_sets = max(c.spec.l2_sets for c in cells)
-    max_ways = max(c.spec.l2_ways for c in cells)
-    maxk = max([len(c.spec.K) for c in cells] + [1])
-
-    lanes = dict(
-        is_colt=np.zeros(L, bool), is_thp=np.zeros(L, bool),
-        has_rmm=np.zeros(L, bool),
-        has_cluster=np.zeros(L, bool), use_pred=np.zeros(L, bool),
-        kvals=np.full((L, maxk), -1, np.int32),
-        set_mask=np.zeros(L, np.int32), n_ways=np.ones(L, np.int32),
-        k_hat=np.zeros(L, np.int32), miss_chain=np.zeros(L, np.int32),
-        pred0=np.zeros(L, np.int32),
-        seg_map=np.zeros((L, n_segs), np.int32),
-        seg_fill=np.zeros((L, n_segs), np.int32),
-        seg_clus=np.zeros((L, n_segs), np.int32),
-        seg_shoot=np.zeros((L, n_segs), bool),
-        seg_dirty=np.zeros((L, n_segs), np.int32),
-        trace_id=np.zeros(L, np.int32), t_real=np.zeros(L, np.int32),
-        sample_every=np.ones(L, np.int32),
-    )
-    for i, c in enumerate(cells):
-        s = c.spec
-        w = world_index[id(c.mapping)]
-        bounds = all_bounds[w]
-        key = _fill_profile_key(s)
-        lanes["is_colt"][i] = s.kind == "colt"
-        lanes["is_thp"][i] = s.kind == "thp"
-        lanes["has_rmm"][i] = s.side == "rmm"
-        lanes["has_cluster"][i] = s.side == "cluster"
-        lanes["use_pred"][i] = s.use_predictor
-        lanes["kvals"][i, : len(s.K)] = s.K
-        lanes["set_mask"][i] = s.l2_sets - 1
-        lanes["n_ways"][i] = s.l2_ways
-        lanes["k_hat"][i] = s.index_shift
-        lanes["miss_chain"][i] = miss_chain_cycles(s)
-        lanes["pred0"][i] = s.K[0] if s.K else 0
-        lanes["trace_id"][i] = trace_index[id(c.trace)]
-        lanes["t_real"][i] = c.trace.shape[0]
-        lanes["sample_every"][i] = max(c.trace.shape[0] // N_COV_SAMPLES, 1)
-        for seg in range(n_segs):
-            lo = seg_bounds[seg]
-            e = int(np.searchsorted(bounds, lo, side="right") - 1)
-            lanes["seg_map"][i, seg] = map_rec_id[(w, e)]
-            lanes["seg_fill"][i, seg] = fill_rec_id[(w, e, key)]
-            lanes["seg_clus"][i, seg] = clus_rec_id.get((w, e), 0)
-            turned = seg > 0 and e >= 1 and lo == bounds[e]
-            if turned and (w, e) in dirty_rec_id:
-                lanes["seg_shoot"][i, seg] = True
-                lanes["seg_dirty"][i, seg] = dirty_rec_id[(w, e)]
-    stacks = dict(maps=np.stack(map_recs), fills=np.stack(fill_recs),
-                  clus=np.stack(clus_recs), dirty=np.stack(dirty_recs),
-                  trace=trace_stack)
-    return lanes, stacks, (L, max_sets, max_ways), seg_bounds
-
-
-def _init_batched_state(L: int, max_sets: int, max_ways: int, pred0):
-    def packed(shape, init_tag):
-        a = np.zeros(shape, np.int32)
-        a[..., 0] = init_tag
-        return a
-
-    l2 = np.zeros((L, max_sets, max_ways, 5), np.int32)
-    l2[..., TAG] = -1
-    l2[..., KCLS] = INVALID
-    l2[..., PPN] = -1
-    return dict(
-        t=np.zeros(L, np.int32),
-        l1=packed((L, L1_SETS, L1_WAYS, 3), -1),
-        l1h=packed((L, L1H_SETS, L1H_WAYS, 3), -1),
-        l2=l2,
-        rmm=packed((L, RMM_ENTRIES, 4), -1),
-        clus=packed((L, CLUS_SETS, CLUS_WAYS, 3), -1),
-        pred=np.asarray(pred0, np.int32).copy(),
-        counters=np.zeros((L, N_COUNTERS), np.int32),
-        cov_samples=np.zeros((L, N_COV_SAMPLES), np.int32),
-    )
-
-
-def _cond_set(arr, idx, value, pred):
-    """In-place conditional point/row write (same trick as the oracle)."""
-    old = arr[idx]
-    return arr.at[idx].set(jnp.where(pred, value, old))
-
-
-# ---------------------------------------------------------------------------
-# The batched step: the union of every kind's datapath, selected per lane
-# ---------------------------------------------------------------------------
-
-
-def _run_lanes_impl(lanes, stacks, st0, seg_bounds):
+    One ``lax.scan`` over the :class:`~repro.core.lane_program.BlockPlan`
+    timeline: the body gathers the block's trace/map/fill/cluster records
+    for ALL lanes in bulk, then advances the ``tb`` sequentially-dependent
+    accesses with the shared :func:`~repro.core.lane_program.step_access`.
+    Segment-entry blocks run the vectorized shootdown under ``lax.cond`` —
+    skipped entirely at runtime on non-boundary blocks (and absent from the
+    timeline of static batches)."""
+    plan = build_block_plan(seg_bounds, tb)
     map_stack = stacks["maps"]
     fill_stack = stacks["fills"]
     clus_map = stacks["clus"]
     dirty_stack = stacks["dirty"]
     trace_stack = stacks["trace"]
-    maxk = lanes["kvals"].shape[1]
-    n_ways_total = st0["l2"].shape[2]
-    way_idx = jnp.arange(n_ways_total, dtype=jnp.int32)
-    Pn = dirty_stack.shape[1] - 1
+    Pc = clus_map.shape[1]
+    NB = plan.n_blocks
+    L = lanes["t_real"].shape[0]
+    lane_params = {k: lanes[k] for k in STEP_KEYS}
 
-    def one_lane(lane, st_init):
-        set_mask = lane["set_mask"]
-        k_hat = lane["k_hat"]
-        kvals = lane["kvals"]
-        is_colt, is_thp = lane["is_colt"], lane["is_thp"]
-        is_generic = ~is_colt & ~is_thp
-        has_rmm, has_cluster = lane["has_rmm"], lane["has_cluster"]
-        use_pred = lane["use_pred"]
-        way_ok = way_idx < lane["n_ways"]
+    xs = dict(tt=jnp.asarray(plan.tpos.reshape(NB, tb)),
+              seg=jnp.asarray(plan.blk_seg),
+              shoot=jnp.asarray(plan.blk_shoot),
+              hi=jnp.asarray(plan.blk_hi))
 
-        def probe_order(pred_k):
-            """[pred_k, remaining K desc] when predicting, else K as packed
-            (padded positions stay -1 and probe inertly)."""
-            order = [jnp.where(use_pred, pred_k, kvals[0])]
-            not_pred = kvals != pred_k
-            csum = jnp.cumsum(not_pred.astype(jnp.int32))
-            for pos in range(1, maxk):
-                sel = not_pred & (csum == pos)
-                spec_k = jnp.where(sel.any(), kvals[jnp.argmax(sel)],
-                                   jnp.int32(-1))
-                order.append(jnp.where(use_pred, spec_k, kvals[pos]))
-            return order
+    def lane_blk(lane, st, vpn_b, mrec_b, frec_b, bm_b, act_b):
+        # the tb accesses are a sequential dependency chain over the
+        # pre-gathered records; an inner scan keeps the compiled body one
+        # step wide (unrolling it multiplies compile time for no run-time
+        # gain on XLA — the win is the hoisted per-block gathers)
+        def inner(st, x):
+            return step_access(lane, st, *x)
 
-        def make_step(mid, fid, cid):
-            """Step closure for one segment: record ids are per-lane traced
-            scalars selecting the live epoch's map/fill/cluster records."""
-            def step(st, t_idx):
-                return _step(st, t_idx, mid, fid, cid)
-            return step
+        return jax.lax.scan(inner, st, (vpn_b, mrec_b, frec_b, bm_b, act_b))
 
-        def _step(st, t_idx, mid, fid, cid):
-            t = st["t"]
-            vpn = trace_stack[lane["trace_id"], t_idx]
-            active = t_idx < lane["t_real"]
-            mrec = map_stack[mid, vpn]          # ppn, rs, rl, ppn[rs]
-            ppn_true, rs_v, rl_v, rmm_fill_ppn = (mrec[0], mrec[1], mrec[2],
-                                                  mrec[3])
-            frec = fill_stack[fid, vpn]         # tag, k, contig, ppn
-            fill_tag, fill_k, fill_contig, fill_ppn = (frec[0], frec[1],
-                                                       frec[2], frec[3])
-            new = dict(st)
+    def blk_body(st_all, x):
+        seg = x["seg"]
 
-            # ---------------- L1 (regular + gated 2MB array) ----------------
-            s1 = vpn & jnp.int32(L1_SETS - 1)
-            l1row = st["l1"][s1]
-            l1_ways_hit = l1row[:, 0] == vpn
-            l1_hit = l1_ways_hit.any()
-            l1_way = jnp.argmax(l1_ways_hit)
-            hv = vpn >> 9
-            s1h = hv & jnp.int32(L1H_SETS - 1)
-            l1hrow = st["l1h"][s1h]
-            h_ways_hit = l1hrow[:, 0] == hv
-            l1h_hit = is_thp & h_ways_hit.any()
-            l1h_way = jnp.argmax(h_ways_hit)
-            l1_served = l1_hit | l1h_hit
-            l1_out_ppn = jnp.where(l1_hit, l1row[l1_way, 1],
-                                   l1hrow[l1h_way, 1] + (vpn & 511))
+        def do_shoot(s):
+            do = lanes["seg_shoot"][:, seg]
+            dcs = dirty_stack[lanes["seg_dirty"][:, seg]]
+            return jax.vmap(shoot_lane)(lane_params, s, dcs, do)
 
-            # ---------------- L2 probes (all kinds, selected) ---------------
-            s2 = (vpn >> k_hat) & set_mask
-            row = st["l2"][s2]                  # [W, 5]
-            tags, kcls, contig, pbase = (row[:, TAG], row[:, KCLS],
-                                         row[:, CONTIG], row[:, PPN])
-            valid = kcls != INVALID
+        st_all = jax.lax.cond(x["shoot"], do_shoot, lambda s: s, st_all)
 
-            # colt branch
-            diff = vpn - tags
-            cover = valid & (diff >= 0) & (diff < contig)
-            colt_hit = cover.any()
-            colt_way = jnp.argmax(cover)
-            colt_reg = colt_hit & (contig[colt_way] == 1)
-            colt_coal = colt_hit & (contig[colt_way] > 1)
-            colt_ppn = pbase[colt_way] + (vpn - tags[colt_way])
+        vpns = trace_stack[lanes["trace_id"][:, None], x["tt"][None, :]]
+        mrecs = map_stack[lanes["seg_map"][:, seg, None], vpns]
+        frecs = fill_stack[lanes["seg_fill"][:, seg, None], vpns]
+        bms = clus_map[lanes["seg_clus"][:, seg, None],
+                       jnp.clip(vpns, 0, Pc - 1)]
+        act = (x["tt"][None, :] < x["hi"]) & \
+              (x["tt"][None, :] < lanes["t_real"][:, None])
+        return jax.vmap(lane_blk)(lane_params, st_all, vpns, mrecs, frecs,
+                                  bms, act)
 
-            # thp branch (dual-set probe on the same packed array)
-            s2h = hv & set_mask
-            row_h = st["l2"][s2h]
-            huge_ways = (row_h[:, KCLS] == HUGE) & (row_h[:, TAG] == hv)
-            reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
-            huge_hit = huge_ways.any()
-            hw = jnp.argmax(huge_ways)
-            rw = jnp.argmax(reg_ways)
-            thp_reg = reg_ways.any() | huge_hit
-            thp_ppn = jnp.where(reg_ways.any(), pbase[rw],
-                                row_h[hw, PPN] + (vpn - (hv << 9)))
-            thp_touch_ways = jnp.where(reg_ways.any(), reg_ways, huge_ways)
-            thp_touch_set = jnp.where(reg_ways.any(), s2, s2h)
-
-            # generic branch: regular probe + padded aligned-probe chain
-            gen_reg = reg_ways.any()
-            probes_used = jnp.int32(0)
-            hit_k = jnp.int32(-1)
-            gen_coal = jnp.bool_(False)
-            coal_ppn = jnp.int32(-1)
-            coal_way = jnp.int32(0)
-            first_probe_k = jnp.int32(-1)
-            for pos, k_val in enumerate(probe_order(st["pred"])):
-                sh = jnp.maximum(k_val, 0)
-                vk = jnp.where(k_val >= 0,
-                               vpn & ~((jnp.int32(1) << sh) - 1),
-                               jnp.int32(-10))
-                m_ways = (kcls == k_val) & (tags == vk) & valid & \
-                         (contig > (vpn - vk))
-                m_hit = m_ways.any() & (k_val >= 0) & ~gen_reg & ~gen_coal
-                probes_used = probes_used + jnp.where(
-                    ~gen_reg & ~gen_coal & (k_val >= 0), 1, 0)
-                coal_ppn = jnp.where(m_hit, pbase[jnp.argmax(m_ways)]
-                                     + (vpn - vk), coal_ppn)
-                coal_way = jnp.where(m_hit, jnp.argmax(m_ways), coal_way)
-                hit_k = jnp.where(m_hit, k_val, hit_k)
-                if pos == 0:
-                    first_probe_k = k_val
-                gen_coal = gen_coal | m_hit
-
-            # per-lane branch selection
-            reg_hit = jnp.where(is_colt, colt_reg,
-                                jnp.where(is_thp, thp_reg, gen_reg))
-            coal_hit = jnp.where(is_generic, gen_coal, colt_coal & is_colt)
-            l2_hit = reg_hit | coal_hit
-            l2_ppn_val = jnp.where(
-                is_colt, colt_ppn,
-                jnp.where(is_thp, thp_ppn,
-                          jnp.where(gen_reg, pbase[rw], coal_ppn)))
-            pred_ok = jnp.where(use_pred & gen_coal
-                                & (hit_k == first_probe_k), 1, 0)
-            touch_set = jnp.where(is_thp, thp_touch_set, s2)
-            tw = jnp.where(
-                is_colt, colt_way,
-                jnp.where(is_thp, jnp.argmax(thp_touch_ways),
-                          jnp.where(gen_reg, rw, coal_way)))
-            probes_used = jnp.where(is_generic, probes_used, 0)
-
-            # ---------------- side structures (gated) -----------------------
-            d_r = vpn - st["rmm"][:, 0]
-            in_rng = (d_r >= 0) & (d_r < st["rmm"][:, 1])
-            rmm_hit = has_rmm & in_rng.any()
-            sw = jnp.argmax(in_rng)
-            rmm_ppn_val = st["rmm"][sw, 2] + d_r[sw]
-
-            cwd = vpn >> 3
-            sc = cwd & jnp.int32(CLUS_SETS - 1)
-            crow = st["clus"][sc]               # [5, 3]
-            bit = (crow[:, 1] >> (vpn & 7)) & 1
-            c_ways = (crow[:, 0] == cwd) & (bit == 1)
-            cl_hit = has_cluster & c_ways.any()
-
-            side_hit = rmm_hit | cl_hit
-            side_ppn = jnp.where(rmm_hit, rmm_ppn_val, ppn_true)
-
-            hit_any = l1_served | l2_hit | side_hit
-            walk = ~hit_any
-            wr = walk & active  # gate for every state write below
-
-            # ---------------- latency (per-lane miss chain) -----------------
-            cyc = jnp.where(
-                l1_served, 0,
-                jnp.where(reg_hit, LAT_L2_REG,
-                          jnp.where(coal_hit,
-                                    LAT_COAL + LAT_EXTRA_PROBE *
-                                    jnp.maximum(probes_used - 1, 0),
-                                    jnp.where(side_hit, LAT_COAL,
-                                              lane["miss_chain"]
-                                              + LAT_WALK))))
-
-            # ---------------- L2 fill (precomputed record; LRU victim) ------
-            served_huge = is_thp & (fill_k == HUGE)
-            fill_set = jnp.where(served_huge, s2h, s2)
-            frow = st["l2"][fill_set]
-            valid_row = frow[:, KCLS] != INVALID
-            score = jnp.where(way_ok,
-                              jnp.where(valid_row, frow[:, LRU],
-                                        jnp.int32(NEG)),
-                              jnp.int32(BIG))
-            victim = jnp.argmin(score)
-            evicted_contig = jnp.where(valid_row[victim],
-                                       frow[victim, CONTIG], 0)
-            fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t])
-            l2n = _cond_set(st["l2"], (fill_set, victim), fill_vec, wr)
-            new["l2"] = _cond_set(l2n, (touch_set, tw, LRU), t,
-                                  l2_hit & ~walk & ~l1_served & active)
-            cov_delta = jnp.where(wr, fill_contig - evicted_contig, 0)
-
-            # ---------------- side fills (gated) ----------------------------
-            rmm_len = st["rmm"][:, 1]
-            victim_r = jnp.argmin(jnp.where(rmm_len > 0, st["rmm"][:, 3],
-                                            jnp.int32(NEG)))
-            ev_len = jnp.where(rmm_len[victim_r] > 0, rmm_len[victim_r], 0)
-            rmm_wr = wr & has_rmm
-            rmm_vec = jnp.stack([rs_v, rl_v, rmm_fill_ppn, t])
-            rmmn = _cond_set(st["rmm"], victim_r, rmm_vec, rmm_wr)
-            new["rmm"] = _cond_set(rmmn, (sw, 3), t, rmm_hit & active)
-            cov_delta = cov_delta + jnp.where(rmm_wr, rl_v - ev_len, 0)
-
-            bm = clus_map[cid, jnp.clip(vpn, 0, clus_map.shape[1] - 1)]
-            clusterable = bm != (jnp.int32(1) << (vpn & 7))
-            fill_c = wr & clusterable & has_cluster
-            vrow = crow[:, 1] != 0
-            victim_c = jnp.argmin(jnp.where(vrow, crow[:, 2],
-                                            jnp.int32(NEG)))
-            cl_vec = jnp.stack([cwd, bm, t])
-            cln = _cond_set(st["clus"], (sc, victim_c), cl_vec, fill_c)
-            hit_cway = jnp.argmax(crow[:, 0] == cwd)
-            new["clus"] = _cond_set(cln, (sc, hit_cway, 2), t,
-                                    cl_hit & active)
-
-            # ---------------- L1 fills --------------------------------------
-            do1h = ~l1_served & served_huge & active
-            vrh = l1hrow[:, 0] >= 0
-            vich = jnp.argmin(jnp.where(vrh, l1hrow[:, 2], jnp.int32(NEG)))
-            l1h_vec = jnp.stack([hv, fill_ppn, t])
-            l1hn = _cond_set(st["l1h"], (s1h, vich), l1h_vec, do1h)
-            new["l1h"] = _cond_set(
-                l1hn, (s1h, l1h_way, 2), t,
-                is_thp & l1_served & h_ways_hit.any() & ~l1_hit & active)
-
-            do1 = ~l1_served & ~served_huge & active
-            vr1 = l1row[:, 0] >= 0
-            vic1 = jnp.argmin(jnp.where(vr1, l1row[:, 2], jnp.int32(NEG)))
-            l1_vec = jnp.stack([vpn, ppn_true, t])
-            l1n = _cond_set(st["l1"], (s1, vic1), l1_vec, do1)
-            new["l1"] = _cond_set(l1n, (s1, l1_way, 2), t, l1_hit & active)
-
-            # ---------------- predictor update (gated) ----------------------
-            upd = use_pred & active
-            new["pred"] = jnp.where(
-                upd & gen_coal, hit_k,
-                jnp.where(upd & walk & (fill_k >= 0), fill_k, st["pred"]))
-
-            # ---------------- accounting (one packed add) -------------------
-            act = active
-            delta = jnp.stack([
-                (l1_served & act).astype(jnp.int32),
-                (reg_hit & ~l1_served & act).astype(jnp.int32),
-                ((coal_hit | side_hit) & ~reg_hit & ~l1_served
-                 & act).astype(jnp.int32),
-                (walk & act).astype(jnp.int32),
-                jnp.where(coal_hit & ~l1_served & act, probes_used, 0),
-                jnp.where(~l1_served & act, pred_ok, 0),
-                jnp.where(act, cyc, 0),
-                cov_delta,
-                jnp.int32(0),
-            ])
-            new["counters"] = st["counters"] + delta
-            new["t"] = t + act.astype(jnp.int32)
-            se = lane["sample_every"]
-            slot = jnp.minimum(t // se, N_COV_SAMPLES - 1)
-            new["cov_samples"] = _cond_set(st["cov_samples"], slot,
-                                           new["counters"][C_COV],
-                                           (t % se == se - 1) & active)
-
-            out_ppn = jnp.where(
-                l1_served, l1_out_ppn,
-                jnp.where(l2_hit, l2_ppn_val,
-                          jnp.where(side_hit, side_ppn, ppn_true)))
-            return new, out_ppn
-
-        def shoot(st, seg):
-            """Translation coherence on epoch turnover (gated per lane):
-            drop every entry — in every structure — whose covered vpn range
-            contains a dirty vpn of the entered epoch, charge one shootdown
-            plus a per-entry invalidation, and release the dropped reach."""
-            do = lane["seg_shoot"][seg]
-            dc = dirty_stack[lane["seg_dirty"][seg]]     # [P+1] prefix sums
-
-            def rng_dirty(lo, ln):
-                lo_ = jnp.clip(lo, 0, Pn)
-                hi_ = jnp.clip(lo + ln, 0, Pn)
-                return (dc[hi_] - dc[lo_]) > 0
-
-            new = dict(st)
-            l2 = st["l2"]
-            tagv, kv, cgv = l2[..., TAG], l2[..., KCLS], l2[..., CONTIG]
-            # k == HUGE is a 2MB entry (tag = vpn >> 9) only on THP lanes;
-            # K-bit Aligned lanes use k = 9 as a plain alignment class.
-            huge2 = is_thp & (kv == HUGE)
-            stale2 = (kv != INVALID) & do & rng_dirty(
-                jnp.maximum(jnp.where(huge2, tagv << 9, tagv), 0),
-                jnp.where(huge2, 512,
-                          jnp.where(kv == REGULAR, 1, jnp.maximum(cgv, 1))))
-            new["l2"] = l2.at[..., KCLS].set(jnp.where(stale2, INVALID, kv))
-            n_inv = stale2.sum(dtype=jnp.int32)
-            cov_loss = jnp.where(stale2, cgv, 0).sum(dtype=jnp.int32)
-
-            l1 = st["l1"]
-            t1 = l1[..., 0]
-            stale1 = (t1 >= 0) & do & rng_dirty(jnp.maximum(t1, 0), 1)
-            new["l1"] = l1.at[..., 0].set(jnp.where(stale1, -1, t1))
-            n_inv = n_inv + stale1.sum(dtype=jnp.int32)
-
-            l1h = st["l1h"]
-            th = l1h[..., 0]
-            staleh = (th >= 0) & do & rng_dirty(jnp.maximum(th, 0) << 9, 512)
-            new["l1h"] = l1h.at[..., 0].set(jnp.where(staleh, -1, th))
-            n_inv = n_inv + staleh.sum(dtype=jnp.int32)
-
-            rmm = st["rmm"]
-            rs0, rl0 = rmm[:, 0], rmm[:, 1]
-            staler = (rl0 > 0) & do & rng_dirty(jnp.maximum(rs0, 0), rl0)
-            rmm2 = rmm.at[:, 0].set(jnp.where(staler, -1, rs0))
-            rmm2 = rmm2.at[:, 1].set(jnp.where(staler, 0, rl0))
-            new["rmm"] = rmm2.at[:, 2].set(jnp.where(staler, -1, rmm[:, 2]))
-            n_inv = n_inv + staler.sum(dtype=jnp.int32)
-            cov_loss = cov_loss + jnp.where(staler, rl0, 0).sum(
-                dtype=jnp.int32)
-
-            cl = st["clus"]
-            ct, cb = cl[..., 0], cl[..., 1]
-            stalec = (cb != 0) & do & rng_dirty(jnp.maximum(ct, 0) << 3, 8)
-            new["clus"] = cl.at[..., 1].set(jnp.where(stalec, 0, cb))
-            n_inv = n_inv + stalec.sum(dtype=jnp.int32)
-
-            cnt = st["counters"]
-            add = (jnp.zeros_like(cnt)
-                   .at[C_SHOOT].set(n_inv)
-                   .at[C_CYC].set(jnp.where(do, LAT_SHOOTDOWN, 0)
-                                  + n_inv * LAT_INVALIDATE)
-                   .at[C_COV].set(-cov_loss))
-            new["counters"] = cnt + add
-            return new
-
-        st = st_init
-        outs = []
-        for seg, (lo, hi) in enumerate(zip(seg_bounds, seg_bounds[1:])):
-            if seg > 0:
-                st = shoot(st, seg)
-            step = make_step(lane["seg_map"][seg], lane["seg_fill"][seg],
-                             lane["seg_clus"][seg])
-            st, pp = jax.lax.scan(step, st,
-                                  jnp.arange(lo, hi, dtype=jnp.int32))
-            outs.append(pp)
-        return st, (outs[0] if len(outs) == 1 else jnp.concatenate(outs))
-
-    return jax.vmap(one_lane)(lanes, st0)
+    stF, pp = jax.lax.scan(blk_body, st0, xs)        # pp: [NB, L, tb]
+    pp = jnp.moveaxis(pp, 1, 0).reshape(L, NB * tb)
+    return stF, pp[:, plan.slot_of_t]
 
 
-_run_lanes_jit = jax.jit(_run_lanes_impl, static_argnums=(3,))
+_run_lanes_jit = jax.jit(_run_lanes_impl, static_argnums=(3, 4))
 _run_lanes_pmap = jax.pmap(_run_lanes_impl, in_axes=(0, None, 0),
-                           static_broadcasted_argnums=(3,))
+                           static_broadcasted_argnums=(3, 4))
 
 
-def _simulate_lanes(lanes, stacks, st0, seg_bounds):
-    """Dispatch to pmap over virtual host devices when available (lanes are
-    sharded across devices), else a single jitted vmap."""
+def _simulate_lanes(lanes, stacks, st0, seg_bounds, backend="xla",
+                    tb=DEFAULT_BLOCK):
+    """Run one packed batch on the selected backend.
+
+    ``xla``: dispatch to ``pmap`` over virtual host devices when available
+    (lane batches are padded to a device multiple by
+    :func:`~repro.core.lane_program.bucket_lane_count`, so benchmark runs
+    always shard), else a single jitted scan.  ``pallas``: the
+    :mod:`repro.kernels.tlb_sweep` kernel (interpret mode off-TPU).
+    Returns ``(final_state, ppns)`` with at least ``counters`` and
+    ``cov_samples`` in the state dict."""
+    if backend == "pallas":
+        from ..kernels.tlb_sweep import run_lanes_pallas
+        stF, ppns = run_lanes_pallas(lanes, stacks, st0, seg_bounds, tb)
+        return jax.device_get(stF), np.asarray(jax.device_get(ppns))
     dev = jax.local_device_count()
     L = lanes["t_real"].shape[0]
     if dev > 1 and L % dev == 0:
@@ -786,11 +262,11 @@ def _simulate_lanes(lanes, stacks, st0, seg_bounds):
 
         stF, ppns = _run_lanes_pmap(
             {k: shard(v) for k, v in lanes.items()}, stacks,
-            {k: shard(v) for k, v in st0.items()}, seg_bounds)
+            {k: shard(v) for k, v in st0.items()}, seg_bounds, tb)
         unshard = lambda x: np.asarray(x).reshape((L,) + x.shape[2:])  # noqa: E731
         return ({k: unshard(v) for k, v in jax.device_get(stF).items()},
                 unshard(jax.device_get(ppns)))
-    stF, ppns = _run_lanes_jit(lanes, stacks, st0, seg_bounds)
+    stF, ppns = _run_lanes_jit(lanes, stacks, st0, seg_bounds, tb)
     return jax.device_get(stF), np.asarray(jax.device_get(ppns))
 
 
@@ -800,6 +276,17 @@ def _simulate_lanes(lanes, stacks, st0, seg_bounds):
 
 _GIT_DESCRIBE: Optional[str] = None
 _CODE_FINGERPRINT: Optional[str] = None
+
+# Everything that defines the simulation semantics: the engine sources AND
+# both backend implementations.  Paths are relative to src/repro/.
+_FINGERPRINT_SOURCES = (
+    "core/simulator.py",
+    "core/sweep.py",
+    "core/lane_program.py",
+    "core/page_table.py",
+    "kernels/tlb_sweep/tlb_sweep.py",
+    "kernels/tlb_sweep/ops.py",
+)
 
 
 def _git_describe() -> str:
@@ -817,16 +304,17 @@ def _git_describe() -> str:
 
 
 def _code_fingerprint() -> str:
-    """git describe + a content hash of the engine sources, so uncommitted
-    edits to the simulation semantics invalidate the cache too (a dirty
-    tree always yields the same '<sha>-dirty' describe string)."""
+    """git describe + a content hash of the engine AND kernel sources, so
+    uncommitted edits to the simulation semantics — including the Pallas
+    TLB-sweep kernel — invalidate the cache too (a dirty tree always yields
+    the same '<sha>-dirty' describe string)."""
     global _CODE_FINGERPRINT
     if _CODE_FINGERPRINT is None:
         h = hashlib.sha256(_git_describe().encode())
-        here = os.path.dirname(os.path.abspath(__file__))
-        for fname in ("simulator.py", "sweep.py", "page_table.py"):
+        pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        for fname in _FINGERPRINT_SOURCES:
             try:
-                with open(os.path.join(here, fname), "rb") as f:
+                with open(os.path.join(pkg, fname), "rb") as f:
                     h.update(f.read())
             except OSError:
                 h.update(b"?")
@@ -855,7 +343,9 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
     :class:`~repro.core.page_table.DynamicMapping` world, (b) folds in the
     event stream: every epoch snapshot's ``ppn`` plus the boundary
     positions, so two worlds differing only in when (or what) they remap
-    never collide.
+    never collide.  Execution knobs (backend, block size, lane/trace
+    padding) are deliberately NOT part of the key: results are bit-exact
+    across all of them, so any backend may serve any cached cell.
 
     ``_digests`` is an id-keyed memo so sweeps that share one mapping/trace
     across many specs hash each array once (valid while the arrays are kept
@@ -921,14 +411,25 @@ DEFAULT_CACHE_DIR = os.path.join("results", "sweep_cache")
 
 
 def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
-              cache_dir: str = DEFAULT_CACHE_DIR) -> SweepResult:
-    """Simulate every cell, batched into one compiled vmapped scan.
+              cache_dir: str = DEFAULT_CACHE_DIR,
+              backend: str = "auto",
+              block_size: Optional[int] = None) -> SweepResult:
+    """Simulate every cell, batched into one compiled time-blocked program.
 
-    Results are bit-identical to per-cell :func:`run_method` calls (enforced
-    by ``tests/test_sweep.py``).  With ``cache`` enabled, previously
-    simulated cells (same spec, mapping/trace *content* and code version —
-    see :func:`cell_key`) are loaded from ``cache_dir`` and skipped; set the
+    Results are bit-identical to per-cell :func:`run_method` /
+    :func:`run_method_dynamic` calls (enforced by ``tests/test_sweep.py``
+    and ``tests/test_backends.py``) regardless of ``backend`` and
+    ``block_size``.  With ``cache`` enabled, previously simulated cells
+    (same spec, mapping/trace *content* and code version — see
+    :func:`cell_key`) are loaded from ``cache_dir`` and skipped; set the
     ``REPRO_SWEEP_NO_CACHE`` env var or ``cache=False`` to bypass.
+
+    * ``backend`` — ``'auto'`` (pallas on TPU, xla elsewhere), ``'xla'``
+      (time-blocked vmapped scan; the CPU fast path), or ``'pallas'``
+      (the :mod:`repro.kernels.tlb_sweep` kernel; interpret mode off-TPU).
+    * ``block_size`` — trace steps per block (default ``DEFAULT_BLOCK``,
+      or the ``REPRO_SWEEP_BLOCK`` env var).  Execution detail only: block
+      boundaries never change results.
 
     Usage — compare two methods on a workload-derived scenario::
 
@@ -945,12 +446,16 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
         print(sweep.stats)                   # n_cells / cache_hits / wall_s
 
     Lanes are padded onto one array layout (max L2 geometry of the batch,
-    inert ``K=-1`` alignment slots, ``LANE_BUCKET``/``TRACE_BUCKET`` shape
-    buckets), so heterogeneous specs, footprints and trace lengths all reuse
-    one compiled executable per shape bucket — see the module docstring for
-    the padding rules.
+    inert ``K=-1`` alignment slots, power-of-two lane/trace shape buckets),
+    so heterogeneous specs, footprints and trace lengths all reuse one
+    compiled executable per shape bucket — see
+    :mod:`repro.core.lane_program` for the padding rules.  Batches mixing
+    static and dynamic worlds are partitioned so purely-static cells never
+    execute the epoch-segmented machinery.
     """
     t0 = time.time()
+    backend = resolve_backend(backend)
+    tb = _block_size(block_size)
     cache = cache and not os.environ.get("REPRO_SWEEP_NO_CACHE")
     cells = list(cells)
     results: List[Optional[SimResult]] = [None] * len(cells)
@@ -967,17 +472,27 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
                 continue
         todo.append(i)
 
-    if todo:
-        sub = [cells[i] for i in todo]
-        lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(sub)
+    # Partition: static cells never ride a multi-segment timeline installed
+    # by dynamic cells sharing the sweep (and vice versa the dynamic batch
+    # stays small).  Groups larger than the lane-sharing bucket are chunked
+    # at its size, so a 5-row and an 8-row suite execute the SAME compiled
+    # programs instead of specializing on their exact lane counts.  Each
+    # chunk is one packed batch.
+    groups = [[i for i in todo if not cells[i].is_dynamic],
+              [i for i in todo if cells[i].is_dynamic]]
+    batches = [g[k: k + LANE_SHARE_MAX]
+               for g in groups if g
+               for k in range(0, len(g), LANE_SHARE_MAX)]
+    for group in batches:
+        sub = [cells[i] for i in group]
+        lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(
+            sub, device_count=jax.local_device_count())
         st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"])
-        stF, ppns = _simulate_lanes(
-            {k: jnp.asarray(v) for k, v in lanes.items()},
-            {k: jnp.asarray(v) for k, v in stacks.items()},
-            {k: jnp.asarray(v) for k, v in st0.items()}, seg_bounds)
+        stF, ppns = _simulate_lanes(lanes, stacks, st0, seg_bounds,
+                                    backend=backend, tb=tb)
         counters = np.asarray(stF["counters"])
         cov_samples = np.asarray(stF["cov_samples"])
-        for j, i in enumerate(todo):
+        for j, i in enumerate(group):
             c = cells[i]
             t_real = c.trace.shape[0]
             cnt = counters[j]
@@ -998,6 +513,14 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
             if cache:
                 _cache_store(os.path.join(cache_dir, keys[i] + ".npz"), r)
 
+    tb_eff = tb
+    if backend == "pallas":
+        # the kernel caps its own block size (its body is unrolled); report
+        # what actually ran, not what was requested
+        from ..kernels.tlb_sweep.ops import effective_block
+        tb_eff = effective_block(tb)
     stats = dict(n_cells=len(cells), cache_hits=hits,
-                 simulated=len(todo), wall_s=round(time.time() - t0, 3))
+                 simulated=len(todo), n_batches=len(batches),
+                 backend=backend, block=tb_eff,
+                 wall_s=round(time.time() - t0, 3))
     return SweepResult(results=results, stats=stats)  # type: ignore[arg-type]

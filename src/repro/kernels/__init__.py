@@ -4,4 +4,7 @@
   coalesced superblock DMA over the paged KV pool (ops.paged_attention).
 * ``flash_attention`` — tiled causal online-softmax forward for
   prefill/serving (ops.flash_attention_gqa).
+* ``tlb_sweep`` — the sweep engine's Pallas backend: one lane per grid
+  row, all TLB state resident in scratch for the whole trace
+  (ops.run_lanes_pallas; select with ``run_sweep(backend='pallas')``).
 """

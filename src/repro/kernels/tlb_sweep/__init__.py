@@ -1,0 +1,8 @@
+"""Pallas TLB-sweep backend: lanes → program instances, state in scratch.
+
+The second execution backend of the batched sweep engine
+(:mod:`repro.core.sweep`): the same per-lane program definition
+(:mod:`repro.core.lane_program`) run as a Pallas kernel instead of an XLA
+scan.  Select it with ``run_sweep(..., backend='pallas')``.
+"""
+from .ops import run_lanes_pallas  # noqa: F401

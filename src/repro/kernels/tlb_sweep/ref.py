@@ -1,0 +1,59 @@
+"""Pure-JAX oracle for the TLB-sweep kernel.
+
+A deliberately simple execution of the shared lane program: one vmapped
+``lax.scan`` advancing every lane by ONE trace step per iteration (no time
+blocking, no block plan), with a python loop over the epoch segments and
+the shootdown pass between them — the PR-3 engine structure, now expressed
+through :func:`repro.core.lane_program.step_access` /
+:func:`~repro.core.lane_program.shoot_lane`.
+
+Both real backends must match this bit-for-bit (and it in turn must match
+the pure-python oracles ``run_method`` / ``run_method_dynamic`` — enforced
+together in ``tests/test_backends.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.lane_program import STEP_KEYS, shoot_lane, step_access
+
+
+def run_lanes_ref(lanes, stacks, st0, seg_bounds):
+    """Step-at-a-time reference with the same packed-batch contract."""
+    map_stack = jnp.asarray(stacks["maps"])
+    fill_stack = jnp.asarray(stacks["fills"])
+    clus_map = jnp.asarray(stacks["clus"])
+    dirty_stack = jnp.asarray(stacks["dirty"])
+    trace_stack = jnp.asarray(stacks["trace"])
+    Pc = clus_map.shape[1]
+    lanes = {k: jnp.asarray(v) for k, v in lanes.items()}
+    st0 = {k: jnp.asarray(v) for k, v in st0.items()}
+
+    def one_lane(lane, st):
+        params = {k: lane[k] for k in STEP_KEYS}
+
+        def make_step(seg):
+            def step(st, t_idx):
+                vpn = trace_stack[lane["trace_id"], t_idx]
+                mrec = map_stack[lane["seg_map"][seg], vpn]
+                frec = fill_stack[lane["seg_fill"][seg], vpn]
+                bm = clus_map[lane["seg_clus"][seg],
+                              jnp.clip(vpn, 0, Pc - 1)]
+                active = t_idx < lane["t_real"]
+                return step_access(params, st, vpn, mrec, frec, bm, active)
+            return step
+
+        outs = []
+        for seg, (lo, hi) in enumerate(zip(seg_bounds, seg_bounds[1:])):
+            if seg > 0:
+                st = shoot_lane(params, st,
+                                dirty_stack[lane["seg_dirty"][seg]],
+                                lane["seg_shoot"][seg])
+            st, pp = jax.lax.scan(make_step(seg), st,
+                                  jnp.arange(lo, hi, dtype=jnp.int32))
+            outs.append(pp)
+        return st, (outs[0] if len(outs) == 1 else jnp.concatenate(outs))
+
+    stF, ppns = jax.jit(jax.vmap(one_lane))(lanes, st0)
+    return jax.device_get(stF), jax.device_get(ppns)

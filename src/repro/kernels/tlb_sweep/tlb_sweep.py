@@ -1,0 +1,219 @@
+"""TLB-sweep Pallas kernel: one lane per grid row, state resident in scratch.
+
+The XLA backend of :mod:`repro.core.sweep` carries the packed TLB state of
+every lane through a ``lax.scan`` — on a real accelerator that means the
+whole state round-trips through HBM every block.  This kernel removes that
+round-trip: the grid is ``(lanes, blocks)``, each lane's L1/L1H/L2/RMM/CLUS
+arrays live in **scratch (VMEM)** for the entire trace, and only the trace
+blocks and per-segment records stream in.
+
+The structure mirrors ``kernels/paged_attention``: scalar-prefetched
+per-lane record ids drive the ``BlockSpec`` index maps, so every grid step
+receives exactly the live epoch's map/fill/cluster/dirty records for its
+lane — the analogue of the window-descriptor indirection there.  The
+timeline is the shared :class:`~repro.core.lane_program.BlockPlan`: blocks
+never straddle an epoch-segment boundary, and the first block of every
+segment runs the shootdown pass (``@pl.when``-gated per lane) before its
+accesses.
+
+The per-access datapath is **the same function** the XLA backend unrolls —
+:func:`repro.core.lane_program.step_access` /
+:func:`~repro.core.lane_program.shoot_lane` — applied to a state dict read
+from scratch at block entry and written back at block exit.  Bit-exactness
+vs the pure-python oracles is enforced by ``tests/test_backends.py``.
+
+Off-TPU the kernel runs with ``interpret=True`` (the repo-wide convention
+for Pallas kernels); the grid iterates blocks innermost, so scratch state
+carries correctly from block to block within a lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
+                                  L1_WAYS, L1H_SETS, L1H_WAYS, N_COUNTERS,
+                                  N_COV_SAMPLES, PPN, RMM_ENTRIES, TAG,
+                                  shoot_lane, step_access)
+
+# params row layout (int32): one row per lane, packed by ops.pack_params
+# from PARAM_KEYS — the F_* indices and PARAM_KEYS are the same ordering
+# by construction (see the zip below), so a new lane scalar is added in
+# exactly one place.
+PARAM_KEYS = ("is_colt", "is_thp", "has_rmm", "has_cluster", "use_pred",
+              "set_mask", "n_ways", "k_hat", "miss_chain", "pred0",
+              "t_real", "sample_every")
+(F_IS_COLT, F_IS_THP, F_HAS_RMM, F_HAS_CLUSTER, F_USE_PRED, F_SET_MASK,
+ F_N_WAYS, F_K_HAT, F_MISS_CHAIN, F_PRED0, F_T_REAL, F_SAMPLE_EVERY,
+ ) = range(len(PARAM_KEYS))
+N_PARAM_FIELDS = len(PARAM_KEYS)
+
+
+def _lane_dict(p, kvals):
+    """Per-lane scalar dict consumed by step_access/shoot_lane."""
+    return dict(
+        is_colt=p[F_IS_COLT] == 1, is_thp=p[F_IS_THP] == 1,
+        has_rmm=p[F_HAS_RMM] == 1, has_cluster=p[F_HAS_CLUSTER] == 1,
+        use_pred=p[F_USE_PRED] == 1, set_mask=p[F_SET_MASK],
+        n_ways=p[F_N_WAYS], k_hat=p[F_K_HAT], miss_chain=p[F_MISS_CHAIN],
+        sample_every=p[F_SAMPLE_EVERY], kvals=kvals)
+
+
+def _tlb_sweep_kernel(
+        # scalar prefetch
+        tid_ref, smap_ref, sfill_ref, sclus_ref, sdirty_ref,
+        bseg_ref, bshoot_ref, bhi_ref,
+        # tensor inputs
+        params_ref, kvals_ref, sshoot_ref, trace_ref, tpos_ref,
+        map_ref, fill_ref, clus_ref, dirty_ref,
+        # outputs
+        ppn_ref, cnt_ref, cov_ref,
+        # scratch: the lane's entire TLB state, resident across blocks
+        l1_ref, l1h_ref, l2_ref, rmm_ref, cl_ref, misc_ref,
+        *, tb: int):
+    b = pl.program_id(1)
+    p = params_ref[0]
+    lane = _lane_dict(p, kvals_ref[0])
+
+    @pl.when(b == 0)
+    def _init():
+        """Fresh TLB state at the first block of every lane."""
+        l1_ref[...] = jnp.zeros_like(l1_ref).at[..., 0].set(-1)
+        l1h_ref[...] = jnp.zeros_like(l1h_ref).at[..., 0].set(-1)
+        l2_ref[...] = (jnp.zeros_like(l2_ref)
+                       .at[..., TAG].set(-1)
+                       .at[..., KCLS].set(INVALID)
+                       .at[..., PPN].set(-1))
+        rmm_ref[...] = jnp.zeros_like(rmm_ref).at[..., 0].set(-1)
+        cl_ref[...] = jnp.zeros_like(cl_ref).at[..., 0].set(-1)
+        misc_ref[0] = jnp.int32(0)            # t (active steps processed)
+        misc_ref[1] = p[F_PRED0]              # alignment predictor
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        cov_ref[...] = jnp.zeros_like(cov_ref)
+
+    def read_state():
+        return dict(t=misc_ref[0], pred=misc_ref[1], l1=l1_ref[...],
+                    l1h=l1h_ref[...], l2=l2_ref[...], rmm=rmm_ref[...],
+                    clus=cl_ref[...], counters=cnt_ref[0],
+                    cov_samples=cov_ref[0])
+
+    def write_state(st):
+        misc_ref[0] = st["t"]
+        misc_ref[1] = st["pred"]
+        l1_ref[...] = st["l1"]
+        l1h_ref[...] = st["l1h"]
+        l2_ref[...] = st["l2"]
+        rmm_ref[...] = st["rmm"]
+        cl_ref[...] = st["clus"]
+        cnt_ref[0] = st["counters"]
+        cov_ref[0] = st["cov_samples"]
+
+    seg = bseg_ref[b]
+
+    @pl.when((bshoot_ref[b] == 1) & (sshoot_ref[0, seg] == 1))
+    def _shoot():
+        """Entering a segment whose epoch turned over for this lane."""
+        write_state(shoot_lane(lane, read_state(), dirty_ref[0],
+                               jnp.bool_(True)))
+
+    st = read_state()
+    vpns = trace_ref[0]                       # [tb] this lane's trace block
+    tts = tpos_ref[...]                       # [tb] original t per slot
+    hi = bhi_ref[b]
+    t_real = p[F_T_REAL]
+    Pc = clus_ref.shape[1]
+    outs = []
+    for j in range(tb):                       # sequential dependency chain
+        vpn = vpns[j]
+        mrec = map_ref[0, vpn]
+        frec = fill_ref[0, vpn]
+        bm = clus_ref[0, jnp.clip(vpn, 0, Pc - 1)]
+        active = (tts[j] < hi) & (tts[j] < t_real)
+        st, o = step_access(lane, st, vpn, mrec, frec, bm, active)
+        outs.append(o)
+    write_state(st)
+    ppn_ref[0] = jnp.stack(outs)
+
+
+def make_tlb_sweep_call(sets: int, ways: int):
+    """Build the jitted pallas_call wrapper for one L2 geometry.
+
+    The returned callable invokes the kernel over the ``(lanes, blocks)``
+    grid and returns ``(ppn_pad [L, NB*tb], counters [L, N_COUNTERS],
+    cov_samples [L, N_COV_SAMPLES])`` — padded-timeline outputs that
+    :mod:`.ops` maps back to trace order via the block plan.  The L2
+    geometry parameterizes the scratch allocation, so it is a closure
+    argument rather than an array shape.
+    """
+
+    @functools.partial(jax.jit,
+                       static_argnames=("tb", "n_blocks", "interpret"))
+    def call(tid, smap, sfill, sclus, sdirty, bseg, bshoot, bhi,
+             params, kvals, sshoot, trace_pad, tpos,
+             maps, fills, clus, dirty,
+             *, tb: int, n_blocks: int, interpret: bool):
+        L, n_segs = smap.shape
+        P = maps.shape[1]
+        Pc = clus.shape[1]
+        Pd = dirty.shape[1]
+        maxk = kvals.shape[1]
+        grid = (L, n_blocks)
+
+        def by_lane(shape):
+            return pl.BlockSpec(shape, lambda l, b, *s: (l,) + (0,) *
+                                (len(shape) - 1))
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=8,
+            grid=grid,
+            in_specs=[
+                by_lane((1, N_PARAM_FIELDS)),                 # params
+                by_lane((1, maxk)),                           # kvals
+                by_lane((1, n_segs)),                         # seg_shoot
+                pl.BlockSpec((1, tb),                         # trace block
+                             lambda l, b, tid, *s: (tid[l], b)),
+                pl.BlockSpec((tb,), lambda l, b, *s: (b,)),   # tpos block
+                pl.BlockSpec((1, P, 4),                       # map record
+                             lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
+                             (smap[l, bseg[b]], 0, 0)),
+                pl.BlockSpec((1, P, 4),                       # fill record
+                             lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
+                             (sf[l, bseg[b]], 0, 0)),
+                pl.BlockSpec((1, Pc),                         # cluster bitmap
+                             lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
+                             (sc[l, bseg[b]], 0)),
+                pl.BlockSpec((1, Pd),                         # dirty prefix
+                             lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
+                             (sd[l, bseg[b]], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, tb), lambda l, b, *s: (l, b)),   # ppn
+                by_lane((1, N_COUNTERS)),                         # counters
+                by_lane((1, N_COV_SAMPLES)),                      # cov
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((L1_SETS, L1_WAYS, 3), jnp.int32),
+                pltpu.VMEM((L1H_SETS, L1H_WAYS, 3), jnp.int32),
+                pltpu.VMEM((sets, ways, 5), jnp.int32),
+                pltpu.VMEM((RMM_ENTRIES, 4), jnp.int32),
+                pltpu.VMEM((CLUS_SETS, CLUS_WAYS, 3), jnp.int32),
+                pltpu.SMEM((2,), jnp.int32),              # t, predictor
+            ],
+        )
+        out_shapes = (
+            jax.ShapeDtypeStruct((L, n_blocks * tb), jnp.int32),
+            jax.ShapeDtypeStruct((L, N_COUNTERS), jnp.int32),
+            jax.ShapeDtypeStruct((L, N_COV_SAMPLES), jnp.int32),
+        )
+        kernel = functools.partial(_tlb_sweep_kernel, tb=tb)
+        return pl.pallas_call(
+            kernel, grid_spec=grid_spec, out_shape=out_shapes,
+            interpret=interpret,
+        )(tid, smap, sfill, sclus, sdirty, bseg, bshoot, bhi,
+          params, kvals, sshoot, trace_pad, tpos, maps, fills, clus, dirty)
+
+    return call
