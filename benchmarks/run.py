@@ -57,6 +57,9 @@ BENCHES: List = [
      tlb_suite.bench_scenario_contiguity),
     ("tlb_dynamic", "Dynamic mapping worlds: mid-trace remaps + shootdowns",
      tlb_suite.bench_dynamic),
+    ("tlb_multitenant",
+     "Multi-tenant address spaces: ASID tags vs flush-on-switch",
+     tlb_suite.bench_multitenant),
     ("dma_fragmentation", "TPU adaptation: descriptor model",
      paged_kernel.bench_dma_vs_fragmentation),
     ("dma_k_ablation", "TPU adaptation: |K| ablation",
@@ -105,6 +108,14 @@ def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
                     f" over {len(rel)} dynamic scenarios;"
                     f" total shootdowns |K|=2="
                     f"{sum(r['|K|=2'] for r in sd)}")
+        if name == "tlb_multitenant":
+            import numpy as np
+            rel = [r for r in rows if r["metric"] == "rel_misses"]
+            tag = np.mean([r["|K|=3"] for r in rel if r["policy"] == "tag"])
+            flush = np.mean([r["|K|=3"] for r in rel
+                             if r["policy"] == "flush"])
+            return (f"mean |K|=3 rel: tag={tag:.3f} vs flush={flush:.3f}"
+                    f" over {len(rel) // 2} scenarios")
         if name == "engine_end_to_end":
             return f"buddy desc_red={rows[0]['desc_reduction']}"
     except Exception as e:    # derived metrics must never kill the run

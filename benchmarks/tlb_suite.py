@@ -26,11 +26,12 @@ repo's own serving/training stacks as translation workloads.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core import (BENCHMARKS, SimResult, base_spec, cluster_spec,
                         colt_spec, kaligned_for_mapping, rmm_spec, thp_spec)
-from repro.core.baselines import anchor_spec
+from repro.core.baselines import anchor_spec, kaligned_for_histogram
 from repro.core.page_table import contiguity_histogram
 from repro.core.sweep import SweepCell, run_sweep
 from repro.kvcache.block_table import choose_kernel_classes
@@ -49,6 +50,10 @@ SCENARIO_SEEDS = dict(map_seed=0, trace_seed=8)
 
 # dynamic worlds swept by bench_dynamic (every registered dynamic scenario)
 DYNAMIC_MAX_PAGES = 1 << 16     # per-epoch records are E× the static cost
+
+# multi-tenant worlds swept by bench_multitenant: per-tenant records are
+# n_tenants× the static cost, and the python scheduling drivers cap cheap
+MULTITENANT_MAX_PAGES = 1 << 15
 
 
 def _scenario_world(name: str, trace_len: int, max_pages: int):
@@ -106,24 +111,34 @@ class SweepPlan:
 
 
 def _add_suite(plan: SweepPlan, m, tr, row: str, anchor_grid,
-               psis: Sequence[int] = (2, 3, 4), k_mapping=None) -> None:
-    """Add the full method suite over world ``m`` (static or dynamic).
+               psis: Sequence[int] = (2, 3, 4), k_mapping=None,
+               k_hist=None, transform=None) -> None:
+    """Add the full method suite over world ``m`` (static, dynamic or
+    multi-tenant) — the ONE definition of the compared-method roster.
 
     ``k_mapping`` is the static mapping Algorithm 3 reads the contiguity
     histogram from; defaults to ``m`` (pass the epoch-0 snapshot when ``m``
-    is a :class:`~repro.core.page_table.DynamicMapping`).
+    is a :class:`~repro.core.page_table.DynamicMapping`).  ``k_hist``
+    supplies the histogram directly instead (e.g. the merged per-tenant
+    histogram of a multi-tenant world).  ``transform`` post-processes every
+    spec (e.g. setting ``ctx_policy``) without forking the roster.
     """
+    tx = transform if transform is not None else (lambda s: s)
     k_src = k_mapping if k_mapping is not None else m
-    plan.add(base_spec(), m, tr, row, "Base")
-    plan.add(thp_spec(), m, tr, row, "THP")
-    plan.add(rmm_spec(), m, tr, row, "RMM")
-    plan.add(colt_spec(), m, tr, row, "COLT")
-    plan.add(cluster_spec(), m, tr, row, "Cluster")
-    plan.add_anchor_static(m, tr, row, anchor_grid)
+    plan.add(tx(base_spec()), m, tr, row, "Base")
+    plan.add(tx(thp_spec()), m, tr, row, "THP")
+    plan.add(tx(rmm_spec()), m, tr, row, "RMM")
+    plan.add(tx(colt_spec()), m, tr, row, "COLT")
+    plan.add(tx(cluster_spec()), m, tr, row, "Cluster")
+    for d in anchor_grid:
+        plan.add(tx(anchor_spec(d)), m, tr, row, "Anchor-Static",
+                 group="anchor")
     for psi in psis:
-        spec = kaligned_for_mapping(k_src, psi=psi,
-                                    theta=1.0 if psi > 2 else 0.9)
-        plan.add(spec, m, tr, row, f"|K|={psi}")
+        theta = 1.0 if psi > 2 else 0.9
+        spec = (kaligned_for_histogram(k_hist, psi=psi, theta=theta)
+                if k_hist is not None
+                else kaligned_for_mapping(k_src, psi=psi, theta=theta))
+        plan.add(tx(spec), m, tr, row, f"|K|={psi}")
 
 
 def bench_synthetic(trace_len=150_000, n_pages=1 << 19, quick=True,
@@ -322,6 +337,52 @@ def bench_dynamic(trace_len=120_000, quick=True, max_pages=MAX_PAGES_DEFAULT,
                         for k, v in cols.items()}})
         rows.append({"scenario": name, "metric": "shootdowns",
                      **{k: v.shootdowns for k, v in cols.items()}})
+    return rows
+
+
+def bench_multitenant(trace_len=120_000, quick=True,
+                      max_pages=MAX_PAGES_DEFAULT, backend="auto"):
+    """Multi-tenant address spaces: ASID-tagged TLBs under context-switch
+    pressure, each scenario swept under BOTH context-switch policies.
+
+    Every registered ``multitenant`` scenario (tenants drawn from
+    different contiguity families, scheduled by the serving stack's own
+    KVScheduler; see :mod:`repro.scenarios.multitenant`) runs the full
+    9-method suite twice — ``ctx_policy="flush"`` (untagged hardware wipes
+    the TLB every switch) and ``"tag"`` (ASID-tagged entries survive;
+    recycled ASIDs pay targeted invalidation) — through ONE ``run_sweep``
+    call per policy set.  K for the K-bit Aligned rows comes from the
+    *merged* per-tenant contiguity histogram (Algorithm 3 over what an OS
+    aggregating per-process stats would see).  Rows: per (scenario,
+    policy) relative misses (Base = 1.0) and invalidated-entry counts —
+    switch-heavy schedules are where large-reach designs pay for their
+    coverage twice, once per tenant.
+    """
+    names = tuple(sc.name for sc in list_scenarios("multitenant"))
+    plan = SweepPlan()
+    for name in names:
+        d = _scenario_world(name, trace_len, min(max_pages,
+                                                 MULTITENANT_MAX_PAGES))
+        for policy in ("flush", "tag"):
+            _add_suite(
+                plan, d.world, d.trace, f"{name}::{policy}",
+                ANCHOR_GRID_QUICK, psis=(2, 3, 4),
+                k_hist=d.meta["contiguity_histogram"],
+                transform=lambda s, p=policy: dataclasses.replace(
+                    s, ctx_policy=p))
+    res = plan.run(backend=backend)
+    rows = []
+    for name in names:
+        for policy in ("flush", "tag"):
+            cols = res[f"{name}::{policy}"]
+            base = cols["Base"].walks
+            rows.append({"scenario": name, "policy": policy,
+                         "metric": "rel_misses",
+                         **{k: round(v.walks / max(base, 1), 4)
+                            for k, v in cols.items()}})
+            rows.append({"scenario": name, "policy": policy,
+                         "metric": "shootdowns",
+                         **{k: v.shootdowns for k, v in cols.items()}})
     return rows
 
 

@@ -1,0 +1,162 @@
+"""Tier-1 wall-time budget guard: the fast test tier must stay fast.
+
+Runs the tier-1 suite (``python -m pytest -q`` — the pyproject addopts
+deselect ``@slow``), times it, appends one entry to the repo-root
+``BENCH_tier1.json`` trajectory::
+
+    {"git_sha": ..., "host": ..., "wall_s": ..., "pytest_args": [...]}
+
+and with ``--check`` compares the fresh wall time against the **last
+committed entry** (``git show HEAD:BENCH_tier1.json`` — local appends
+never ratchet the baseline) of the same host signature, failing past
+``--threshold`` (default 1.25×).  New tests are expected to ADD time;
+the gate exists so they add it consciously: exceeding the budget means
+either marking the heaviest new tests ``@pytest.mark.slow`` (with small
+fast variants, the repo convention) or committing a new baseline entry
+in the same PR and saying so.
+
+Wall-clock baselines only compare within one machine class: until an
+entry measured on the current host class is committed, the gate is NOT
+armed — it prints the ready-to-commit entry (and a ``::warning``
+annotation on GitHub Actions) instead of silently passing, exactly like
+``scripts/perf_smoke.py``.
+
+Extra arguments after ``--`` are passed through to pytest (CI appends
+the pytest-cov flags there, so the committed baseline includes the
+coverage overhead it gates under).
+
+Usage::
+
+    python scripts/check_tier_budget.py [--check] [--no-append]
+                                        [--threshold 1.25] [-- PYTEST_ARGS]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_FILE = os.path.join(REPO, "BENCH_tier1.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "describe", "--always", "--dirty"],
+                              capture_output=True, text=True, cwd=REPO,
+                              timeout=10).stdout.strip() or "nogit"
+    except (OSError, subprocess.SubprocessError):
+        return "nogit"
+
+
+def _host_sig() -> str:
+    return f"{platform.system().lower()}-{platform.machine()}-" \
+           f"{os.cpu_count()}cpu"
+
+
+def load_trajectory() -> list:
+    if not os.path.exists(BENCH_FILE):
+        return []
+    with open(BENCH_FILE) as f:
+        data = json.load(f)
+    assert isinstance(data, list), "BENCH_tier1.json must hold a list"
+    return data
+
+
+def committed_trajectory() -> list:
+    """The trajectory as of HEAD — the budget baseline (see perf_smoke)."""
+    try:
+        r = subprocess.run(["git", "show", "HEAD:BENCH_tier1.json"],
+                           capture_output=True, text=True, cwd=REPO,
+                           timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return load_trajectory()
+    if r.returncode != 0:
+        in_repo = subprocess.run(
+            ["git", "rev-parse", "--is-inside-work-tree"],
+            capture_output=True, text=True, cwd=REPO, timeout=10)
+        return [] if in_repo.returncode == 0 else load_trajectory()
+    data = json.loads(r.stdout)
+    assert isinstance(data, list)
+    return data
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    pytest_args: list = []
+    if "--" in argv:
+        cut = argv.index("--")
+        argv, pytest_args = argv[:cut], argv[cut + 1:]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail when wall time exceeds threshold x the "
+                         "committed same-host baseline")
+    ap.add_argument("--threshold", type=float, default=1.25)
+    ap.add_argument("--no-append", action="store_true",
+                    help="leave BENCH_tier1.json untouched")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, "-m", "pytest", "-q"] + pytest_args
+    print("running:", " ".join(cmd), flush=True)
+    t0 = time.time()
+    r = subprocess.run(cmd, cwd=REPO, env=env)
+    wall = round(time.time() - t0, 1)
+    if r.returncode != 0:
+        print(f"tier-1 suite FAILED (rc={r.returncode}) after {wall}s — "
+              "budget not evaluated", file=sys.stderr)
+        return r.returncode
+
+    entry = {"git_sha": _git_sha(), "host": _host_sig(), "wall_s": wall,
+             "pytest_args": pytest_args}
+    # match on host AND pytest args: a coverage-instrumented CI run must
+    # never be gated by (or arm) an uninstrumented local baseline
+    baseline = next(
+        (e for e in reversed(committed_trajectory())
+         if e.get("host") == entry["host"]
+         and e.get("pytest_args", []) == entry["pytest_args"]), None)
+    status = "no baseline"
+    failed = False
+    if baseline is None and args.check:
+        print(f"NOTE: no committed tier-1 baseline for host="
+              f"{entry['host']} — the budget gate did NOT run.  Commit "
+              f"this entry to BENCH_tier1.json to arm it:\n"
+              f"  {json.dumps(entry)}", file=sys.stderr)
+        if os.environ.get("GITHUB_ACTIONS"):
+            print(f"::warning file=BENCH_tier1.json::tier-1 budget gate "
+                  f"not armed for {entry['host']} — commit a baseline "
+                  f"entry measured on this runner class (ready-to-commit "
+                  f"JSON in the job log)")
+    if baseline:
+        ratio = wall / max(baseline["wall_s"], 1e-9)
+        status = (f"{ratio:.2f}x vs baseline {baseline['wall_s']}s"
+                  f"@{baseline['git_sha']}")
+        if args.check and ratio > args.threshold:
+            failed = True
+            print(f"BUDGET EXCEEDED: tier-1 took {wall}s, "
+                  f"{ratio:.2f}x the committed {baseline['wall_s']}s "
+                  f"(> {args.threshold}x).  Mark the heaviest new tests "
+                  f"@pytest.mark.slow (with fast variants) or commit a "
+                  f"new BENCH_tier1.json entry in this PR.",
+                  file=sys.stderr)
+    print(f"tier-1 wall={wall}s [{status}]")
+
+    if not args.no_append:
+        traj = load_trajectory()
+        traj.append(entry)
+        with open(BENCH_FILE, "w") as f:
+            json.dump(traj, f, indent=1)
+            f.write("\n")
+        print(f"appended to {os.path.relpath(BENCH_FILE)}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

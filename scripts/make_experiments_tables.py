@@ -98,7 +98,7 @@ def render_dryrun(final_dir, base_dir=None):
 
 
 SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios",
-                     "tlb_dynamic")
+                     "tlb_dynamic", "tlb_multitenant")
 
 
 def _md_cell(v) -> str:
@@ -166,6 +166,22 @@ def render_tlb(path):
               " `shootdowns` rows count invalidated entries per method —"
               " see `docs/scenarios.md` for the scenario definitions.\n")
         _md_table(dyn)
+
+    mt = sections.get("tlb_multitenant", {}).get("rows")
+    if mt:
+        print("## Multi-tenant address spaces: ASID tags vs"
+              " flush-on-switch\n")
+        print("Several tenants — each with its own contiguity signature —"
+              " time-share one TLB under a KVScheduler-derived"
+              " context-switch schedule (ASIDs are batch slots, recycled"
+              " on tenant departure).  Every scenario is swept under both"
+              " context-switch policies: `flush` wipes all structures on"
+              " a switch, `tag` keeps ASID-tagged entries resident and"
+              " pays targeted invalidation only on ASID recycling."
+              "  `rel_misses` rows are walks relative to Base under the"
+              " SAME policy; `shootdowns` rows count flushed/invalidated"
+              " entries — see `docs/scenarios.md`.\n")
+        _md_table(mt)
 
 
 def main():

@@ -1,0 +1,215 @@
+"""Regenerate the golden-trace oracle suite under tests/goldens/.
+
+Each golden is a tiny hand-checkable world (<= 16 accesses) for one method
+kind, plus one multi-tenant world per context-switch policy.  The JSON
+records the world, the trace, the oracle's per-step
+``(level, ppn, evict, probes, cycles)`` sequence, the segment-entry events
+(switch/shootdown with invalidation counts), and the final counters —
+``tests/test_goldens.py`` replays them so a parity failure localizes to a
+step instead of an end-of-run counter diff.
+
+The worlds are DESIGNED, not sampled: each one forces the interesting
+transitions of its method kind (cold walk -> coalesced hit -> L1 hit ->
+L2 eviction -> refault), small enough to verify by hand from the
+docstrings below.  Regenerate after an intentional semantics change with::
+
+    PYTHONPATH=src python scripts/make_goldens.py
+
+and review the diff like any other golden update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,  # noqa: E402
+                                  colt_spec, kaligned_spec, rmm_spec,
+                                  thp_spec)
+from repro.core.page_table import (build_multitenant_mapping,  # noqa: E402
+                                   make_mapping)
+from repro.core.simulator import (run_method_dynamic,  # noqa: E402
+                                  run_method_multitenant)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "goldens")
+
+FINAL_FIELDS = ("accesses", "l1_hits", "l2_regular_hits",
+                "l2_coalesced_hits", "walks", "aligned_probes",
+                "pred_correct", "cycles", "shootdowns")
+
+
+def _identity(n, off=7):
+    """Fully contiguous mapping: vpn -> vpn + off."""
+    return make_mapping(np.arange(n, dtype=np.int64) + off)
+
+
+def _golden_worlds():
+    """name -> (spec, world, trace, note).  Keep every trace <= 16 long."""
+    out = {}
+
+    # base: 9 conflicting fills walk set 0 full (8 ways), the 10th access
+    # revisits vpn 0 — evicted from both L1 (4-way) and L2 -> walk + evict
+    m = _identity(2048)
+    tr = [128 * i for i in range(9)] + [0]
+    out["base-evict-chain"] = (
+        base_spec(), m, tr,
+        "L2 set 0 (vpn & 127 == 0) receives 9 fills; the 10th access "
+        "(vpn 0) must walk again and evict")
+
+    # thp: vpns 0..511 are one PA-aligned huge run (2MB entry), 1024+ is
+    # scattered 4KB; first touch walks, later touches hit the 2MB L1
+    ppn = np.full(2048, -1, np.int64)
+    ppn[:512] = np.arange(512) + 512          # 512-aligned base: huge-ok
+    ppn[1024:1032] = [5000, 4000, 3000, 2000, 1000, 900, 800, 700]
+    m = make_mapping(ppn)
+    tr = [0, 100, 200, 300, 1024, 1025, 1024, 400]
+    out["thp-huge-vs-4k"] = (
+        thp_spec(), m, tr,
+        "one walk installs the 2MB entry serving vpns 0..511 via the huge "
+        "L1; the scattered 4KB pages walk individually")
+
+    # colt: contiguity within each 8-page cache-line window; one walk
+    # coalesces the window, the rest of the window hits it
+    ppn = np.full(256, -1, np.int64)
+    ppn[0:8] = np.arange(8) + 40              # one full window
+    ppn[16:20] = np.arange(4) + 80            # partial window
+    m = make_mapping(ppn)
+    tr = [0, 1, 7, 2, 16, 17, 18, 19, 3]
+    out["colt-window"] = (
+        colt_spec(), m, tr,
+        "walk at vpn 0 installs the coalesced 8-PTE window; vpns 1,7,2 "
+        "hit it (L2 coalesced); the 4-page window behaves alike")
+
+    # cluster: an 8-page VA window whose pages map into one aligned
+    # physical cluster -> the side TLB's bitmap serves the window
+    ppn = np.full(256, -1, np.int64)
+    ppn[0:8] = [16, 17, 18, 19, 20, 21, 22, 23]   # same cluster (>>3 == 2)
+    ppn[8:16] = [100, 31, 102, 33, 104, 35, 106, 37]  # mixed clusters
+    m = make_mapping(ppn)
+    tr = [0, 1, 2, 3, 8, 9, 10, 4]
+    out["cluster-bitmap"] = (
+        cluster_spec(), m, tr,
+        "vpns 0..7 share one physical cluster: the first walk installs "
+        "the clustered entry, later pages side-hit it")
+
+    # rmm: one long run; the first walk installs the 64-page range, every
+    # other page of the run range-hits (side) instead of walking
+    m = _identity(256, off=100)
+    tr = [10, 11, 12, 40, 60, 5, 200, 201]
+    out["rmm-range"] = (
+        rmm_spec(), m, tr,
+        "walk at vpn 10 installs the full [0,256) range; every later "
+        "first-touch range-hits the side TLB")
+
+    # anchor(d=16): anchors at 16-aligned vpns; an access walks, installs
+    # the anchor entry covering its 16-window, neighbours hit it
+    m = _identity(512, off=3)
+    tr = [5, 6, 15, 4, 33, 34, 47, 7]
+    out["anchor-d16"] = (
+        anchor_spec(4), m, tr,
+        "walk at vpn 5 installs anchor 0 (contig 16); vpns 6,15,4 hit it; "
+        "vpn 33 installs anchor 32")
+
+    # kaligned with predictor: mixed contiguity (one 64-run, one 16-run);
+    # the predictor starts at k=6, mispredicts on the 16-run until it
+    # retrains (probes counted)
+    ppn = np.full(256, -1, np.int64)
+    ppn[0:64] = np.arange(64) + 300           # k=6-coverable run
+    ppn[128:144] = np.arange(16) + 600        # k=4-coverable run
+    m = make_mapping(ppn)
+    tr = [0, 1, 63, 128, 129, 130, 2, 143]
+    out["kaligned-pred"] = (
+        kaligned_spec([6, 4]), m, tr,
+        "walks at 0 and 128 install k=6 and k=4 entries; accesses under "
+        "the wrong predicted class pay an extra probe")
+
+    # kaligned without predictor: fixed probe order K descending
+    out["kaligned-nopred"] = (
+        kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
+        m, tr,
+        "same world, static probe order: k=6 then k=4 every time")
+
+    # multi-tenant, both policies: tenants A (contiguous) and B (stride-2)
+    # alternate, then tenant C RECYCLES tenant A's ASID.  Under flush every
+    # switch wipes; under tag A's entries survive B's quantum but C's
+    # takeover of ASID 0 must targeted-flush A's leftovers.
+    ta = _identity(64, off=1000)
+    tb = make_mapping(np.arange(64, dtype=np.int64) * 2 + 2000)
+    tc = _identity(64, off=3000)
+    mt = build_multitenant_mapping(
+        [ta, tb, tc],
+        [(0, 0, 0), (4, 1, 1), (8, 0, 0), (12, 2, 0)], name="mt-golden")
+    tr = [0, 1, 2, 3] * 4
+    for policy in ("flush", "tag"):
+        out[f"multitenant-{policy}"] = (
+            dataclasses.replace(base_spec(), ctx_policy=policy), mt, tr,
+            "A,B,A,C quanta over vpns 0..3; C recycles A's ASID 0 — "
+            f"ctx_policy={policy}: tag keeps A resident across B's "
+            "quantum but must invalidate A's entries at C's takeover; "
+            "flush refaults every quantum")
+    return out
+
+
+def _world_json(world):
+    from repro.core.page_table import Mapping, MultiTenantMapping
+    if isinstance(world, MultiTenantMapping):
+        return {"kind": "multitenant",
+                "tenants": [t.ppn.tolist() for t in world.tenants],
+                "boundaries": list(world.boundaries),
+                "tenant_ids": list(world.tenant_ids),
+                "asids": list(world.asids)}
+    assert isinstance(world, Mapping)
+    return {"kind": "static", "ppn": world.ppn.tolist()}
+
+
+def _spec_json(spec):
+    d = dataclasses.asdict(spec)
+    d["K"] = list(d["K"])
+    return d
+
+
+def make_golden(name, spec, world, trace, note):
+    from repro.core.page_table import MultiTenantMapping
+    trace = np.asarray(trace, np.int64)
+    assert trace.shape[0] <= 16, f"{name}: goldens must stay hand-checkable"
+    steps, events = [], []
+    runner = (run_method_multitenant
+              if isinstance(world, MultiTenantMapping)
+              else run_method_dynamic)
+    r = runner(spec, world, trace, on_step=steps.append,
+               on_event=events.append)
+    return {
+        "name": name,
+        "note": note,
+        "spec": _spec_json(spec),
+        "world": _world_json(world),
+        "trace": trace.tolist(),
+        "steps": steps,
+        "events": events,
+        "final": {f: int(getattr(r, f)) for f in FINAL_FIELDS}
+        | {"coverage_mean": float(r.coverage_mean)},
+    }
+
+
+def main():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, (spec, world, trace, note) in _golden_worlds().items():
+        g = make_golden(name, spec, world, trace, note)
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(g, f, indent=1)
+            f.write("\n")
+        levels = [s["level"] for s in g["steps"]]
+        print(f"{name:22s} walks={g['final']['walks']:2d} "
+              f"shoot={g['final']['shootdowns']:3d} levels={levels}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,12 +18,13 @@ from .baselines import (anchor_spec, anchor_static, base_spec, cluster_spec,
                         rmm_spec, standard_suite, thp_spec)
 from .determine_k import SIZE_RANGE_TABLE, determine_k, f_alignment
 from .mappings import BuddyAllocator, demand_mapping, synthetic_mapping
-from .page_table import (DynamicMapping, Mapping, MappingEvent, apply_event,
-                         build_dynamic_mapping, compute_runs,
-                         contiguity_chunks, contiguity_histogram,
-                         dynamic_from_snapshots, events_from_diff,
-                         huge_page_backed, make_mapping)
+from .page_table import (DynamicMapping, Mapping, MappingEvent,
+                         MultiTenantMapping, apply_event,
+                         build_dynamic_mapping, build_multitenant_mapping,
+                         compute_runs, contiguity_chunks,
+                         contiguity_histogram, dynamic_from_snapshots,
+                         events_from_diff, huge_page_backed, make_mapping)
 from .simulator import (MethodSpec, SimResult, miss_chain_cycles, run_method,
-                        run_method_dynamic)
+                        run_method_dynamic, run_method_multitenant)
 from .sweep import SweepCell, SweepResult, run_sweep
 from .traces import BENCHMARKS, benchmark_trace, generate_trace

@@ -59,15 +59,26 @@ def kaligned_spec(K: Sequence[int], use_predictor: bool = True,
         use_predictor=use_predictor)
 
 
-def kaligned_for_mapping(m: Mapping, psi: int, theta: float = 0.9,
-                         use_predictor: bool = True) -> MethodSpec:
-    """K Aligned with K chosen by Algorithm 3 from the mapping's histogram."""
-    hist = contiguity_histogram(m)
+def kaligned_for_histogram(hist, psi: int, theta: float = 0.9,
+                           use_predictor: bool = True) -> MethodSpec:
+    """K Aligned with K chosen by Algorithm 3 from a contiguity histogram.
+
+    Use when the histogram is not derived from one mapping — e.g. the
+    merged per-tenant histogram of a
+    :class:`~repro.core.page_table.MultiTenantMapping`, the closest
+    analogue of an OS aggregating per-process contiguity stats."""
     K = determine_k(hist, theta=theta, psi=psi)
     if not K:       # fully fragmented mapping: degenerate to smallest reach
         K = [4]
     return kaligned_spec(K[:psi], use_predictor=use_predictor,
                          name=f"|K|={min(len(K), psi)} Aligned")
+
+
+def kaligned_for_mapping(m: Mapping, psi: int, theta: float = 0.9,
+                         use_predictor: bool = True) -> MethodSpec:
+    """K Aligned with K chosen by Algorithm 3 from the mapping's histogram."""
+    return kaligned_for_histogram(contiguity_histogram(m), psi=psi,
+                                  theta=theta, use_predictor=use_predictor)
 
 
 ANCHOR_GRID: Tuple[int, ...] = (2, 3, 4, 5, 6, 7, 8, 9, 10, 11)

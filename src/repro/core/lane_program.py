@@ -43,13 +43,14 @@ from typing import Dict, List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import (DynamicMapping, Mapping, cluster_bitmap,
-                         huge_page_backed, next_pow2 as _next_pow2)
+from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
+                         cluster_bitmap, huge_page_backed,
+                         next_pow2 as _next_pow2)
 from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
-                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_EXTRA_PROBE,
-                        LAT_INVALIDATE, LAT_L2_REG, LAT_SHOOTDOWN, LAT_WALK,
-                        N_COV_SAMPLES, NEG, REGULAR, RMM_ENTRIES, MethodSpec,
-                        miss_chain_cycles)
+                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_CTX_SWITCH,
+                        LAT_EXTRA_PROBE, LAT_INVALIDATE, LAT_L2_REG,
+                        LAT_SHOOTDOWN, LAT_WALK, N_COV_SAMPLES, NEG, REGULAR,
+                        RMM_ENTRIES, MethodSpec, miss_chain_cycles)
 
 BIG = 2**30  # victim score for padded ways: never evictable
 
@@ -72,11 +73,14 @@ KMIN_SLOTS = 4
 # sizes onto {32, 64}
 FILL_REC_FLOOR = 32
 
-# packed-field indices
-TAG, KCLS, CONTIG, PPN, LRU = 0, 1, 2, 3, 4          # L2: [S, W, 5]
-# L1/L1H: [sets, ways, 3] = tag, ppn, lru
-# RMM:    [32, 4]         = start, len, ppn, lru
-# CLUS:   [64, 5, 3]      = tag, bitmap, lru
+# packed-field indices.  Every structure carries the ASID its entry was
+# filled under as its LAST field: probes require an ASID match (trivially
+# true on single-address-space worlds, where everything is ASID 0), and
+# the context-switch pass (:func:`switch_lane`) clears by it.
+TAG, KCLS, CONTIG, PPN, LRU, L2_ASID = 0, 1, 2, 3, 4, 5  # L2: [S, W, 6]
+# L1/L1H: [sets, ways, 4] = tag, ppn, lru, asid
+# RMM:    [32, 5]         = start, len, ppn, lru, asid
+# CLUS:   [64, 5, 4]      = tag, bitmap, lru, asid
 # fill record: [P, 4]     = tag, k, contig, ppn      (one per world epoch)
 # map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]  (ditto)
 # dirty record: [P+1]     = prefix sum of the epoch's dirty-vpn bitmap
@@ -231,16 +235,54 @@ def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class _WorldPlan:
+    """One world decomposed into its schedule-segment sequence.
+
+    ``sources`` are the distinct Mappings records are built from (epoch
+    snapshots of a dynamic world; tenant address spaces of a multi-tenant
+    one; the single mapping of a static one).  Per schedule segment ``i``:
+    ``src_idx[i]`` is the live source, ``asids[i]`` the live ASID,
+    ``switch[i]`` whether entering it changes the address space, and
+    ``recycled[i]`` whether its ASID was last held by a different tenant.
+    """
+
+    sources: Tuple[Mapping, ...]
+    bounds: Tuple[int, ...]
+    src_idx: Tuple[int, ...]
+    asids: Tuple[int, ...]
+    switch: Tuple[bool, ...]
+    recycled: Tuple[bool, ...]
+
+
+def _world_plan(world) -> _WorldPlan:
+    if isinstance(world, DynamicMapping):
+        n = world.n_epochs
+        return _WorldPlan(world.epochs, world.boundaries, tuple(range(n)),
+                          (0,) * n, (False,) * n, (False,) * n)
+    if isinstance(world, MultiTenantMapping):
+        n = world.n_segments
+        return _WorldPlan(world.tenants, world.boundaries, world.tenant_ids,
+                          world.asids,
+                          tuple(world.switches(s) for s in range(n)),
+                          world.recycled)
+    return _WorldPlan((world,), (0,), (0,), (0,), (False,), (False,))
+
+
 def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
     """Dedup worlds/traces/fill-profiles; pack per-lane params to arrays.
 
-    Every world is an epoch *sequence* (a static ``Mapping`` is one epoch);
-    map/fill/cluster records are built per ``(world, epoch)`` and lanes carry
-    a per-segment record index, so dynamic and static lanes share one
-    compiled program.  The segment grid — the sorted union of every lane's
-    epoch boundaries — is returned as a static tuple; a batch with no
-    dynamic lane collapses to one segment and never runs the shootdown
-    pass.  Returns ``(lanes, stacks, (L, max_sets, max_ways), seg_bounds)``.
+    Every world is a schedule-segment *sequence* (a static ``Mapping`` is
+    one segment; a :class:`~repro.core.page_table.DynamicMapping` one per
+    epoch; a :class:`~repro.core.page_table.MultiTenantMapping` one per
+    scheduling quantum); map/fill/cluster records are built per ``(world,
+    source mapping)`` and lanes carry a per-segment record index, so
+    static, dynamic and multi-tenant lanes share one compiled program (a
+    tenant scheduled many times reuses ONE record set).  The segment
+    grid — the sorted union of every lane's boundaries — is returned as a
+    static tuple; a batch with no segmented lane collapses to one segment
+    and never runs the shootdown/switch pass.  Returns ``(lanes, stacks,
+    (L, max_sets, max_ways), seg_bounds)``.
     """
     worlds: List = []
     world_index: Dict[int, int] = {}
@@ -254,37 +296,34 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
             trace_index[id(c.trace)] = len(traces)
             traces.append(c.trace)
 
-    all_epochs: Dict[int, Tuple[Mapping, ...]] = {
-        w: (m.epochs if isinstance(m, DynamicMapping) else (m,))
-        for w, m in enumerate(worlds)}
-    all_bounds: Dict[int, Tuple[int, ...]] = {
-        w: (m.boundaries if isinstance(m, DynamicMapping) else (0,))
-        for w, m in enumerate(worlds)}
+    plans: Dict[int, _WorldPlan] = {w: _world_plan(m)
+                                    for w, m in enumerate(worlds)}
 
-    P = _next_pow2(max(m.n_pages for ms in all_epochs.values() for m in ms))
+    P = _next_pow2(max(m.n_pages for p in plans.values()
+                       for m in p.sources))
     T = bucket_trace_len(max(t.shape[0] for t in traces))
 
-    # map records: one per (world, epoch)
+    # map records: one per (world, source mapping)
     map_recs: List[np.ndarray] = []
     map_rec_id: Dict[Tuple[int, int], int] = {}
-    for w, ms in all_epochs.items():
-        for e, m in enumerate(ms):
+    for w, p in plans.items():
+        for e, m in enumerate(p.sources):
             map_rec_id[(w, e)] = len(map_recs)
             map_recs.append(_map_record(m, P))
 
-    # fill records: one per (world, epoch, fill profile)
+    # fill records: one per (world, source, fill profile)
     fill_recs: List[np.ndarray] = []
     fill_rec_id: Dict[Tuple[int, int, tuple], int] = {}
     for c in cells:
         w = world_index[id(c.mapping)]
         key = _fill_profile_key(c.spec)
-        for e, m in enumerate(all_epochs[w]):
+        for e, m in enumerate(plans[w].sources):
             fk = (w, e, key)
             if fk not in fill_rec_id:
                 fill_rec_id[fk] = len(fill_recs)
                 fill_recs.append(_fill_profile(m, key, P))
 
-    # cluster bitmaps: one per (world, epoch).  The stack is always P wide
+    # cluster bitmaps: one per (world, source).  The stack is always P wide
     # (not 1) so suites with and without cluster lanes share an executable;
     # the budget guard below shrinks it back for paper-scale footprints.
     need_clus = any(c.spec.side == "cluster" for c in cells)
@@ -296,7 +335,7 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
             if c.spec.side != "cluster":
                 continue
             w = world_index[id(c.mapping)]
-            for e, m in enumerate(all_epochs[w]):
+            for e, m in enumerate(plans[w].sources):
                 if (w, e) not in clus_rec_id:
                     rec = np.zeros(P, np.int32)
                     rec[: m.n_pages] = cluster_bitmap(m)
@@ -325,9 +364,9 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
     for i, t in enumerate(traces):
         trace_stack[i, : t.shape[0]] = t
 
-    # segment grid: union of all epoch boundaries, static per compile
+    # segment grid: union of all schedule boundaries, static per compile
     grid = sorted({int(b) for w in range(len(worlds))
-                   for b in all_bounds[w][1:]})
+                   for b in plans[w].bounds[1:]})
     seg_bounds = tuple([0] + grid + [T])
     n_segs = len(seg_bounds) - 1
 
@@ -343,19 +382,23 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
         kvals=np.full((L, maxk), -1, np.int32),
         set_mask=np.zeros(L, np.int32), n_ways=np.ones(L, np.int32),
         k_hat=np.zeros(L, np.int32), miss_chain=np.zeros(L, np.int32),
-        pred0=np.zeros(L, np.int32),
+        pred0=np.zeros(L, np.int32), asid0=np.zeros(L, np.int32),
         seg_map=np.zeros((L, n_segs), np.int32),
         seg_fill=np.zeros((L, n_segs), np.int32),
         seg_clus=np.zeros((L, n_segs), np.int32),
         seg_shoot=np.zeros((L, n_segs), bool),
         seg_dirty=np.zeros((L, n_segs), np.int32),
+        seg_asid=np.zeros((L, n_segs), np.int32),
+        seg_switch=np.zeros((L, n_segs), bool),
+        seg_fall=np.zeros((L, n_segs), bool),
+        seg_fasid=np.zeros((L, n_segs), bool),
         trace_id=np.zeros(L, np.int32), t_real=np.zeros(L, np.int32),
         sample_every=np.ones(L, np.int32),
     )
     for i, c in enumerate(cells):
         s = c.spec
         w = world_index[id(c.mapping)]
-        bounds = all_bounds[w]
+        p = plans[w]
         key = _fill_profile_key(s)
         lanes["is_colt"][i] = s.kind == "colt"
         lanes["is_thp"][i] = s.kind == "thp"
@@ -368,19 +411,30 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
         lanes["k_hat"][i] = s.index_shift
         lanes["miss_chain"][i] = miss_chain_cycles(s)
         lanes["pred0"][i] = s.K[0] if s.K else 0
+        lanes["asid0"][i] = p.asids[0]
         lanes["trace_id"][i] = trace_index[id(c.trace)]
         lanes["t_real"][i] = c.trace.shape[0]
         lanes["sample_every"][i] = max(c.trace.shape[0] // N_COV_SAMPLES, 1)
         for seg in range(n_segs):
             lo = seg_bounds[seg]
-            e = int(np.searchsorted(bounds, lo, side="right") - 1)
-            lanes["seg_map"][i, seg] = map_rec_id[(w, e)]
-            lanes["seg_fill"][i, seg] = fill_rec_id[(w, e, key)]
-            lanes["seg_clus"][i, seg] = clus_rec_id.get((w, e), 0)
-            turned = seg > 0 and e >= 1 and lo == bounds[e]
+            e = int(np.searchsorted(p.bounds, lo, side="right") - 1)
+            src = p.src_idx[e]
+            lanes["seg_map"][i, seg] = map_rec_id[(w, src)]
+            lanes["seg_fill"][i, seg] = fill_rec_id[(w, src, key)]
+            lanes["seg_clus"][i, seg] = clus_rec_id.get((w, src), 0)
+            lanes["seg_asid"][i, seg] = p.asids[e]
+            # `turned` = this grid segment starts at one of the LANE's own
+            # boundaries (the union grid also cuts at other lanes')
+            turned = seg > 0 and e >= 1 and lo == p.bounds[e]
             if turned and (w, e) in dirty_rec_id:
                 lanes["seg_shoot"][i, seg] = True
                 lanes["seg_dirty"][i, seg] = dirty_rec_id[(w, e)]
+            if turned:
+                lanes["seg_switch"][i, seg] = p.switch[e]
+                lanes["seg_fall"][i, seg] = (p.switch[e]
+                                             and s.ctx_policy == "flush")
+                lanes["seg_fasid"][i, seg] = (p.recycled[e]
+                                              and s.ctx_policy == "tag")
     stacks = dict(maps=_pad_stack(map_recs),
                   fills=_pad_stack(fill_recs, floor=FILL_REC_FLOOR),
                   clus=_pad_stack(clus_recs), dirty=_pad_stack(dirty_recs),
@@ -388,24 +442,40 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
     return lanes, stacks, (L, max_sets, max_ways), seg_bounds
 
 
-def init_batched_state(L: int, max_sets: int, max_ways: int, pred0):
+def needs_switch_pass(lanes) -> bool:
+    """True when some lane's schedule actually switches, flushes or
+    relabels an ASID — knowable statically at pack time.  Backends compile
+    the segment-entry switch pass only then, so static and dynamic-only
+    batches (whose flags are all False by construction) pay nothing for
+    the multi-tenant machinery."""
+    return bool(np.asarray(lanes["seg_switch"]).any()
+                or np.asarray(lanes["seg_fall"]).any()
+                or np.asarray(lanes["seg_fasid"]).any()
+                or (np.asarray(lanes["seg_asid"])
+                    != np.asarray(lanes["asid0"])[:, None]).any())
+
+
+def init_batched_state(L: int, max_sets: int, max_ways: int, pred0,
+                       asid0=None):
     def packed(shape, init_tag):
         a = np.zeros(shape, np.int32)
         a[..., 0] = init_tag
         return a
 
-    l2 = np.zeros((L, max_sets, max_ways, 5), np.int32)
+    l2 = np.zeros((L, max_sets, max_ways, 6), np.int32)
     l2[..., TAG] = -1
     l2[..., KCLS] = INVALID
     l2[..., PPN] = -1
     return dict(
         t=np.zeros(L, np.int32),
-        l1=packed((L, L1_SETS, L1_WAYS, 3), -1),
-        l1h=packed((L, L1H_SETS, L1H_WAYS, 3), -1),
+        l1=packed((L, L1_SETS, L1_WAYS, 4), -1),
+        l1h=packed((L, L1H_SETS, L1H_WAYS, 4), -1),
         l2=l2,
-        rmm=packed((L, RMM_ENTRIES, 4), -1),
-        clus=packed((L, CLUS_SETS, CLUS_WAYS, 3), -1),
+        rmm=packed((L, RMM_ENTRIES, 5), -1),
+        clus=packed((L, CLUS_SETS, CLUS_WAYS, 4), -1),
         pred=np.asarray(pred0, np.int32).copy(),
+        asid=(np.zeros(L, np.int32) if asid0 is None
+              else np.asarray(asid0, np.int32).copy()),
         counters=np.zeros((L, N_COUNTERS), np.int32),
         cov_samples=np.zeros((L, N_COV_SAMPLES), np.int32),
     )
@@ -470,16 +540,18 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
                                                frec[3])
     new = dict(st)
 
+    cur = st["asid"]
+
     # ---------------- L1 (regular + gated 2MB array) ----------------
     s1 = vpn & jnp.int32(L1_SETS - 1)
     l1row = st["l1"][s1]
-    l1_ways_hit = l1row[:, 0] == vpn
+    l1_ways_hit = (l1row[:, 0] == vpn) & (l1row[:, 3] == cur)
     l1_hit = l1_ways_hit.any()
     l1_way = jnp.argmax(l1_ways_hit)
     hv = vpn >> 9
     s1h = hv & jnp.int32(L1H_SETS - 1)
     l1hrow = st["l1h"][s1h]
-    h_ways_hit = l1hrow[:, 0] == hv
+    h_ways_hit = (l1hrow[:, 0] == hv) & (l1hrow[:, 3] == cur)
     l1h_hit = is_thp & h_ways_hit.any()
     l1h_way = jnp.argmax(h_ways_hit)
     l1_served = l1_hit | l1h_hit
@@ -488,10 +560,10 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
 
     # ---------------- L2 probes (all kinds, selected) ---------------
     s2 = (vpn >> k_hat) & set_mask
-    row = st["l2"][s2]                  # [W, 5]
+    row = st["l2"][s2]                  # [W, 6]
     tags, kcls, contig, pbase = (row[:, TAG], row[:, KCLS],
                                  row[:, CONTIG], row[:, PPN])
-    valid = kcls != INVALID
+    valid = (kcls != INVALID) & (row[:, L2_ASID] == cur)
 
     # colt branch
     diff = vpn - tags
@@ -505,7 +577,8 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     # thp branch (dual-set probe on the same packed array)
     s2h = hv & set_mask
     row_h = st["l2"][s2h]
-    huge_ways = (row_h[:, KCLS] == HUGE) & (row_h[:, TAG] == hv)
+    huge_ways = (row_h[:, KCLS] == HUGE) & (row_h[:, TAG] == hv) & \
+        (row_h[:, L2_ASID] == cur)
     reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
     huge_hit = huge_ways.any()
     hw = jnp.argmax(huge_ways)
@@ -562,16 +635,17 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
 
     # ---------------- side structures (gated) -----------------------
     d_r = vpn - st["rmm"][:, 0]
-    in_rng = (d_r >= 0) & (d_r < st["rmm"][:, 1])
+    in_rng = (d_r >= 0) & (d_r < st["rmm"][:, 1]) & \
+        (st["rmm"][:, 4] == cur)
     rmm_hit = has_rmm & in_rng.any()
     sw = jnp.argmax(in_rng)
     rmm_ppn_val = st["rmm"][sw, 2] + d_r[sw]
 
     cwd = vpn >> 3
     sc = cwd & jnp.int32(CLUS_SETS - 1)
-    crow = st["clus"][sc]               # [5, 3]
+    crow = st["clus"][sc]               # [5, 4]
     bit = (crow[:, 1] >> (vpn & 7)) & 1
-    c_ways = (crow[:, 0] == cwd) & (bit == 1)
+    c_ways = (crow[:, 0] == cwd) & (bit == 1) & (crow[:, 3] == cur)
     cl_hit = has_cluster & c_ways.any()
 
     side_hit = rmm_hit | cl_hit
@@ -604,7 +678,7 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     victim = jnp.argmin(score)
     evicted_contig = jnp.where(valid_row[victim],
                                frow[victim, CONTIG], 0)
-    fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t])
+    fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t, cur])
     l2n = _cond_set(st["l2"], (fill_set, victim), fill_vec, wr)
     new["l2"] = _cond_set(l2n, (touch_set, tw, LRU), t,
                           l2_hit & ~walk & ~l1_served & active)
@@ -616,7 +690,7 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
                                     jnp.int32(NEG)))
     ev_len = jnp.where(rmm_len[victim_r] > 0, rmm_len[victim_r], 0)
     rmm_wr = wr & has_rmm
-    rmm_vec = jnp.stack([rs_v, rl_v, rmm_fill_ppn, t])
+    rmm_vec = jnp.stack([rs_v, rl_v, rmm_fill_ppn, t, cur])
     rmmn = _cond_set(st["rmm"], victim_r, rmm_vec, rmm_wr)
     new["rmm"] = _cond_set(rmmn, (sw, 3), t, rmm_hit & active)
     cov_delta = cov_delta + jnp.where(rmm_wr, rl_v - ev_len, 0)
@@ -626,9 +700,9 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     vrow = crow[:, 1] != 0
     victim_c = jnp.argmin(jnp.where(vrow, crow[:, 2],
                                     jnp.int32(NEG)))
-    cl_vec = jnp.stack([cwd, bm, t])
+    cl_vec = jnp.stack([cwd, bm, t, cur])
     cln = _cond_set(st["clus"], (sc, victim_c), cl_vec, fill_c)
-    hit_cway = jnp.argmax(crow[:, 0] == cwd)
+    hit_cway = jnp.argmax((crow[:, 0] == cwd) & (crow[:, 3] == cur))
     new["clus"] = _cond_set(cln, (sc, hit_cway, 2), t,
                             cl_hit & active)
 
@@ -636,7 +710,7 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     do1h = ~l1_served & served_huge & active
     vrh = l1hrow[:, 0] >= 0
     vich = jnp.argmin(jnp.where(vrh, l1hrow[:, 2], jnp.int32(NEG)))
-    l1h_vec = jnp.stack([hv, fill_ppn, t])
+    l1h_vec = jnp.stack([hv, fill_ppn, t, cur])
     l1hn = _cond_set(st["l1h"], (s1h, vich), l1h_vec, do1h)
     new["l1h"] = _cond_set(
         l1hn, (s1h, l1h_way, 2), t,
@@ -645,7 +719,7 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     do1 = ~l1_served & ~served_huge & active
     vr1 = l1row[:, 0] >= 0
     vic1 = jnp.argmin(jnp.where(vr1, l1row[:, 2], jnp.int32(NEG)))
-    l1_vec = jnp.stack([vpn, ppn_true, t])
+    l1_vec = jnp.stack([vpn, ppn_true, t, cur])
     l1n = _cond_set(st["l1"], (s1, vic1), l1_vec, do1)
     new["l1"] = _cond_set(l1n, (s1, l1_way, 2), t, l1_hit & active)
 
@@ -745,6 +819,70 @@ def shoot_lane(lane, st, dc, do):
            .at[C_SHOOT].set(n_inv)
            .at[C_CYC].set(jnp.where(do, LAT_SHOOTDOWN, 0)
                           + n_inv * LAT_INVALIDATE)
+           .at[C_COV].set(-cov_loss))
+    new["counters"] = cnt + add
+    return new
+
+
+def switch_lane(st, new_asid, do_switch, flush_all, flush_asid):
+    """Context switch at segment entry (multi-tenant worlds).
+
+    Sets the live ASID from per-``(lane, segment)`` data (``new_asid``
+    equals the current ASID when this lane has no boundary here, so the
+    unconditional write is a no-op), charges ``LAT_CTX_SWITCH`` when the
+    address space changed (``do_switch``), and bulk-clears entries —
+    every structure under ``flush_all`` (the untagged-hardware policy),
+    or only entries tagged ``new_asid`` under ``flush_asid`` (an ASID
+    recycled from a departed tenant: its stale entries must not serve
+    the newcomer).  Flushes drop valid bits in bulk — no per-entry
+    invalidation-port cycles, unlike coherence shootdowns — and the
+    dropped entries are counted in the shootdown counter; the real cost
+    surfaces as refill walks.  Static/dynamic lanes carry all-False
+    flags and ASID 0 everywhere, making this pass a no-op for them."""
+    new = dict(st)
+
+    def kill(valid, asid_col):
+        return valid & (flush_all | (flush_asid & (asid_col == new_asid)))
+
+    l2 = st["l2"]
+    kv = l2[..., KCLS]
+    k2 = kill(kv != INVALID, l2[..., L2_ASID])
+    new["l2"] = l2.at[..., KCLS].set(jnp.where(k2, INVALID, kv))
+    n_inv = k2.sum(dtype=jnp.int32)
+    cov_loss = jnp.where(k2, l2[..., CONTIG], 0).sum(dtype=jnp.int32)
+
+    l1 = st["l1"]
+    t1 = l1[..., 0]
+    k1 = kill(t1 >= 0, l1[..., 3])
+    new["l1"] = l1.at[..., 0].set(jnp.where(k1, -1, t1))
+    n_inv = n_inv + k1.sum(dtype=jnp.int32)
+
+    l1h = st["l1h"]
+    th = l1h[..., 0]
+    kh = kill(th >= 0, l1h[..., 3])
+    new["l1h"] = l1h.at[..., 0].set(jnp.where(kh, -1, th))
+    n_inv = n_inv + kh.sum(dtype=jnp.int32)
+
+    rmm = st["rmm"]
+    rl0 = rmm[:, 1]
+    kr = kill(rl0 > 0, rmm[:, 4])
+    rmm2 = rmm.at[:, 0].set(jnp.where(kr, -1, rmm[:, 0]))
+    rmm2 = rmm2.at[:, 1].set(jnp.where(kr, 0, rl0))
+    new["rmm"] = rmm2.at[:, 2].set(jnp.where(kr, -1, rmm[:, 2]))
+    n_inv = n_inv + kr.sum(dtype=jnp.int32)
+    cov_loss = cov_loss + jnp.where(kr, rl0, 0).sum(dtype=jnp.int32)
+
+    cl = st["clus"]
+    cb = cl[..., 1]
+    kc = kill(cb != 0, cl[..., 3])
+    new["clus"] = cl.at[..., 1].set(jnp.where(kc, 0, cb))
+    n_inv = n_inv + kc.sum(dtype=jnp.int32)
+
+    new["asid"] = new_asid
+    cnt = st["counters"]
+    add = (jnp.zeros_like(cnt)
+           .at[C_SHOOT].set(n_inv)
+           .at[C_CYC].set(jnp.where(do_switch, LAT_CTX_SWITCH, 0))
            .at[C_COV].set(-cov_loss))
     new["counters"] = cnt + add
     return new

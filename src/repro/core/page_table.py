@@ -310,6 +310,137 @@ def dynamic_from_snapshots(snaps: Sequence[Mapping],
                           tuple(events), name=name)
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant address spaces: many processes time-sharing one TLB
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantMapping:
+    """Several address spaces time-sharing one TLB under a context-switch
+    schedule (the serving-stack conclusion of the paper's "diverse
+    contiguity": every tenant brings its *own* contiguity signature).
+
+    ``tenants[i]`` is tenant ``i``'s full address space (VPNs are
+    per-tenant: the same vpn means different translations in different
+    tenants).  The schedule is a segment sequence: during trace steps
+    ``[boundaries[s], boundaries[s+1])`` tenant ``tenant_ids[s]`` runs under
+    ASID ``asids[s]``.  The ASID is the *hardware tag* the OS assigned for
+    that scheduling quantum — a finite resource, so departing tenants'
+    ASIDs get recycled (``recycled[s]`` is True when segment ``s`` reuses
+    an ASID whose previous holder was a *different* tenant; correctness
+    then requires the OS to invalidate that ASID's stale entries before
+    the segment runs, exactly like a Linux ASID-generation rollover).
+
+    How a context switch treats the TLB is NOT a property of the world but
+    of the hardware policy under test —
+    :attr:`repro.core.simulator.MethodSpec.ctx_policy`:
+
+    * ``"flush"`` — switching flushes every structure (untagged hardware);
+    * ``"tag"``   — entries are ASID-tagged and survive switches; lookups
+      only hit entries whose tag matches the live ASID, and only recycled
+      ASIDs pay a targeted invalidation.
+    """
+
+    tenants: Tuple[Mapping, ...]
+    boundaries: Tuple[int, ...]      # strictly ascending, [0] == 0
+    tenant_ids: Tuple[int, ...]      # per segment: index into tenants
+    asids: Tuple[int, ...]           # per segment: ASID label assigned
+    name: str = "multitenant"
+    recycled: Tuple[bool, ...] = ()  # derived: segment reuses a dead ASID
+
+    def __post_init__(self):
+        assert len(self.tenants) >= 1
+        ns = len(self.boundaries)
+        assert len(self.tenant_ids) == ns and len(self.asids) == ns
+        assert ns >= 1 and self.boundaries[0] == 0
+        assert all(a < b for a, b in zip(self.boundaries,
+                                         self.boundaries[1:])), \
+            "segment boundaries must be strictly ascending"
+        assert all(0 <= t < len(self.tenants) for t in self.tenant_ids)
+        assert all(a >= 0 for a in self.asids)
+        # a resident tenant keeps its ASID until it is descheduled: adjacent
+        # same-tenant segments must share one ASID.  Allowing a silent
+        # relabel would make every resident entry unhittable through the
+        # ASID compare with no flush charged — a free, invisible TLB wipe
+        # no hardware policy exhibits.
+        assert all(self.asids[s] == self.asids[s - 1]
+                   for s in range(1, ns)
+                   if self.tenant_ids[s] == self.tenant_ids[s - 1]), \
+            "adjacent same-tenant segments must share one ASID"
+        if not self.recycled:
+            holder: Dict[int, int] = {}
+            rec = []
+            for s in range(ns):
+                a, t = self.asids[s], self.tenant_ids[s]
+                rec.append(a in holder and holder[a] != t)
+                holder[a] = t
+            object.__setattr__(self, "recycled", tuple(rec))
+        assert len(self.recycled) == ns
+
+    @property
+    def n_pages(self) -> int:
+        """Largest tenant footprint (engines pad every record to it)."""
+        return max(m.n_pages for m in self.tenants)
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.boundaries)
+
+    def segment_at(self, t: int) -> int:
+        """Index of the schedule segment live at trace step ``t``."""
+        return int(np.searchsorted(self.boundaries, t, side="right") - 1)
+
+    def tenant_at(self, t: int) -> Mapping:
+        return self.tenants[self.tenant_ids[self.segment_at(t)]]
+
+    def switches(self, s: int) -> bool:
+        """True when entering segment ``s`` changes the running address
+        space (a context switch is charged; under ``flush`` the TLB is
+        wiped)."""
+        return s > 0 and self.tenant_ids[s] != self.tenant_ids[s - 1]
+
+    def n_switches(self) -> int:
+        return sum(self.switches(s) for s in range(self.n_segments))
+
+    def merged_contiguity_histogram(self) -> Dict[int, int]:
+        """Union histogram over all tenants — what an OS aggregating
+        per-process contiguity stats would feed Algorithm 3."""
+        hist: Dict[int, int] = {}
+        for m in self.tenants:
+            for size, freq in contiguity_histogram(m).items():
+                hist[size] = hist.get(size, 0) + freq
+        return hist
+
+
+def build_multitenant_mapping(tenants: Sequence[Mapping],
+                              schedule: Sequence[Tuple[int, int, int]],
+                              name: str = "multitenant"
+                              ) -> MultiTenantMapping:
+    """Build a :class:`MultiTenantMapping` from ``(t, tenant_id, asid)``
+    triples (strictly ascending ``t``, first at 0).  Consecutive segments
+    with identical ``(tenant_id, asid)`` are merged — schedulers emit one
+    entry per quantum and a tenant may run back-to-back quanta.  Adjacent
+    same-tenant segments with *different* ASIDs are rejected by the
+    constructor: a resident tenant keeps its ASID until descheduled."""
+    assert schedule and schedule[0][0] == 0
+    bounds: List[int] = []
+    tids: List[int] = []
+    asids: List[int] = []
+    for t, tid, asid in schedule:
+        if bounds and tids[-1] == tid and asids[-1] == asid:
+            continue
+        bounds.append(int(t))
+        tids.append(int(tid))
+        asids.append(int(asid))
+    return MultiTenantMapping(tuple(tenants), tuple(bounds), tuple(tids),
+                              tuple(asids), name=name)
+
+
 def cluster_bitmap(m: Mapping, cluster_bits: int = 3) -> np.ndarray:
     """Per-vpn bitmap for the Cluster TLB [Pham et al., HPCA'14].
 

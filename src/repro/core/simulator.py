@@ -45,8 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .page_table import (DynamicMapping, Mapping, cluster_bitmap,
-                         huge_page_backed)
+from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
+                         cluster_bitmap, huge_page_backed)
 
 REGULAR = -1
 HUGE = 9            # k-class used for 2MB entries (2^9 pages)
@@ -66,6 +66,17 @@ LAT_WALK = 50
 # dirty vpn.  Charged once per epoch transition per TLB.
 LAT_SHOOTDOWN = 200
 LAT_INVALIDATE = 8
+
+# Context-switch model (multi-tenant worlds): switching the running address
+# space costs the kernel switch path once, whatever the TLB does about it.
+# Under ``ctx_policy="flush"`` every structure is then bulk-cleared (valid
+# bits drop in one go — no per-entry port writes; the real cost is the
+# refill misses, which the simulation produces naturally).  Under
+# ``ctx_policy="tag"`` entries survive and are screened by ASID compare;
+# only a *recycled* ASID (see page_table.MultiTenantMapping) pays a
+# targeted invalidation of its stale entries.  Entries invalidated by
+# either flush are counted in ``SimResult.shootdowns``.
+LAT_CTX_SWITCH = 150
 
 N_COV_SAMPLES = 64
 
@@ -87,9 +98,16 @@ class MethodSpec:
     index_shift: int = 0           # k_hat of Fig 7
     use_predictor: bool = False
     side: Optional[str] = None     # None | "rmm" | "cluster"
+    #: context-switch policy on multi-tenant worlds: ``"flush"`` wipes every
+    #: structure on a switch (untagged hardware), ``"tag"`` keeps entries
+    #: ASID-tagged across switches (lookups only hit the live ASID; recycled
+    #: ASIDs pay a targeted invalidation).  Irrelevant on single-address-
+    #: space worlds: entries and probes then all carry ASID 0.
+    ctx_policy: str = "flush"
 
     def __post_init__(self):
         assert tuple(sorted(self.K, reverse=True)) == tuple(self.K)
+        assert self.ctx_policy in ("flush", "tag"), self.ctx_policy
 
 
 @dataclasses.dataclass
@@ -515,20 +533,24 @@ def run_method(spec: MethodSpec, m: Mapping, trace: np.ndarray) -> SimResult:
 
 
 # ---------------------------------------------------------------------------
-# Epoch-aware pure-python oracle (dynamic mappings)
+# Segment-driven pure-python oracle (dynamic AND multi-tenant worlds)
 # ---------------------------------------------------------------------------
 #
-# ``run_method_dynamic`` is the correctness reference for mid-trace remaps:
-# a plain numpy state machine with the exact semantics of the engine above,
-# plus paper-correct translation coherence — entering an epoch, every
-# structure (L1, 2MB L1, L2, RMM ranges, clustered side-TLB) drops every
-# entry whose covered range contains a vpn whose translation died, and the
-# shootdown cost is charged.  The batched lanes of :mod:`repro.core.sweep`
-# must match it bit for bit (tests/test_dynamic.py); it is deliberately
+# ``run_method_dynamic`` / ``run_method_multitenant`` are the correctness
+# references for mid-trace remaps and for multi-tenant context switching: a
+# plain numpy state machine with the exact semantics of the engine above,
+# plus (a) paper-correct translation coherence — entering an epoch whose
+# events dirtied pages, every structure (L1, 2MB L1, L2, RMM ranges,
+# clustered side-TLB) drops every entry whose covered range contains a vpn
+# whose translation died, and the shootdown cost is charged — and (b)
+# ASID-correct context switching: every entry in every structure carries
+# the ASID it was filled under, lookups only hit entries of the live ASID,
+# and a switch either bulk-flushes (``ctx_policy="flush"``) or relies on
+# the tags (``"tag"``, with targeted invalidation of recycled ASIDs).
+# Both run over one shared segment loop (:func:`_run_segments`); the
+# batched lanes of :mod:`repro.core.sweep` must match it bit for bit
+# (tests/test_dynamic.py, tests/test_multitenant.py).  It is deliberately
 # written without JAX so an engine bug cannot hide in shared machinery.
-
-
-_DEBUG_HOOK = None
 
 
 def _as_dynamic(world) -> DynamicMapping:
@@ -537,14 +559,90 @@ def _as_dynamic(world) -> DynamicMapping:
     return DynamicMapping((world,), (0,), name=world.name)
 
 
-def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
-                       ) -> SimResult:
+@dataclasses.dataclass
+class _OracleSegment:
+    """One schedule segment of the oracle: mapping + per-entry records live
+    from trace step ``lo``, entered with optional coherence/switch work."""
+
+    lo: int
+    m: Mapping
+    fill: np.ndarray                      # [n_pages, 4] fill profile
+    clus: Optional[np.ndarray]            # [n_pages] cluster bitmap
+    asid: int = 0
+    switch: bool = False                  # address space changed: charge it
+    flush_all: bool = False               # wipe every structure on entry
+    flush_asid: bool = False              # wipe entries tagged asid (recycle)
+    dirty: Optional[np.ndarray] = None    # bool[n_pages] shootdown set
+
+
+def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray,
+                       on_step=None, on_event=None) -> SimResult:
     """Simulate one method over a (possibly dynamic) world, pure python."""
     from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
 
     dyn = _as_dynamic(world)
-    n_pages = dyn.n_pages
-    E = dyn.n_epochs
+    fkey = _fill_profile_key(spec)
+    has_clus = spec.side == "cluster"
+    segs = []
+    for e, m in enumerate(dyn.epochs):
+        dirty = dyn.dirty(e) if e >= 1 else None
+        if dirty is not None and not dirty.any():
+            dirty = None
+        segs.append(_OracleSegment(
+            lo=dyn.boundaries[e], m=m,
+            fill=_fill_profile(m, fkey, m.n_pages),
+            clus=cluster_bitmap(m) if has_clus else None,
+            dirty=dirty))
+    return _run_segments(spec, segs, trace, on_step=on_step,
+                         on_event=on_event)
+
+
+def run_method_multitenant(spec: MethodSpec, world: MultiTenantMapping,
+                           trace: np.ndarray, on_step=None, on_event=None
+                           ) -> SimResult:
+    """Simulate one method over a multi-tenant world, pure python.
+
+    Every trace entry is a vpn of the tenant scheduled at that step
+    (:meth:`~repro.core.page_table.MultiTenantMapping.tenant_at`); whether
+    a context switch flushes or relies on ASID tags is
+    ``spec.ctx_policy``.  The sweep engine's switch-segmented lanes must
+    match this bit for bit (``tests/test_multitenant.py``)."""
+    from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
+
+    assert isinstance(world, MultiTenantMapping)
+    fkey = _fill_profile_key(spec)
+    has_clus = spec.side == "cluster"
+    fill_of: dict = {}
+    clus_of: dict = {}
+    segs = []
+    for s in range(world.n_segments):
+        tid = world.tenant_ids[s]
+        m = world.tenants[tid]
+        if tid not in fill_of:
+            fill_of[tid] = _fill_profile(m, fkey, m.n_pages)
+            clus_of[tid] = cluster_bitmap(m) if has_clus else None
+        sw = world.switches(s)
+        segs.append(_OracleSegment(
+            lo=world.boundaries[s], m=m, fill=fill_of[tid],
+            clus=clus_of[tid], asid=world.asids[s], switch=sw,
+            flush_all=sw and spec.ctx_policy == "flush",
+            flush_asid=world.recycled[s] and spec.ctx_policy == "tag"))
+    return _run_segments(spec, segs, trace, on_step=on_step,
+                         on_event=on_event)
+
+
+def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
+                  on_step=None, on_event=None) -> SimResult:
+    """The shared oracle loop: one TLB, a segment schedule, ASID tags.
+
+    ``on_step(dict)`` (when given) receives one record per access —
+    ``{t, vpn, asid, level, ppn, walk, evict, probes, cycles}`` with
+    ``level`` in ``l1|l2reg|l2coal|side|walk`` — and ``on_event(dict)``
+    one record per segment-entry action (``kind`` in ``switch|shootdown``
+    with the invalidated-entry count): the golden-trace suite
+    (``tests/goldens``) pins these step sequences so a parity failure
+    localizes to a step instead of an end-of-run counter diff.
+    """
     trace = np.asarray(trace, np.int64)
     T = int(trace.shape[0])
     Ks = spec.K
@@ -556,45 +654,47 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
     has_rmm = spec.side == "rmm"
     has_clus = spec.side == "cluster"
 
-    fkey = _fill_profile_key(spec)
-    fills = [_fill_profile(m, fkey, n_pages) for m in dyn.epochs]
-    clus_maps = ([cluster_bitmap(m) for m in dyn.epochs] if has_clus
-                 else None)
-
     # -- state ------------------------------------------------------------
     l1_tag = np.full((L1_SETS, L1_WAYS), -1, np.int64)
     l1_ppn = np.full((L1_SETS, L1_WAYS), -1, np.int64)
     l1_lru = np.zeros((L1_SETS, L1_WAYS), np.int64)
+    l1_asid = np.zeros((L1_SETS, L1_WAYS), np.int64)
     l1h_tag = np.full((L1H_SETS, L1H_WAYS), -1, np.int64)
     l1h_ppn = np.full((L1H_SETS, L1H_WAYS), -1, np.int64)
     l1h_lru = np.zeros((L1H_SETS, L1H_WAYS), np.int64)
+    l1h_asid = np.zeros((L1H_SETS, L1H_WAYS), np.int64)
     l2_tag = np.full((spec.l2_sets, spec.l2_ways), -1, np.int64)
     l2_k = np.full((spec.l2_sets, spec.l2_ways), INVALID, np.int64)
     l2_contig = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
     l2_ppn = np.full((spec.l2_sets, spec.l2_ways), -1, np.int64)
     l2_lru = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
+    l2_asid = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
     rmm_start = np.full(RMM_ENTRIES, -1, np.int64)
     rmm_len = np.zeros(RMM_ENTRIES, np.int64)
     rmm_ppn = np.full(RMM_ENTRIES, -1, np.int64)
     rmm_lru = np.zeros(RMM_ENTRIES, np.int64)
+    rmm_asid = np.zeros(RMM_ENTRIES, np.int64)
     cl_tag = np.full((CLUS_SETS, CLUS_WAYS), -1, np.int64)
     cl_bm = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
     cl_lru = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
+    cl_asid = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
     pred = int(Ks[0]) if Ks else 0
+    cur_asid = segs[0].asid
 
     n_l1 = n_reg = n_coal = n_walk = n_probe = n_pred = 0
     cycles = cov = n_shoot = 0
     sample_every = max(T // N_COV_SAMPLES, 1)
     cov_samples = np.zeros(N_COV_SAMPLES, np.int64)
     out = np.empty(T, np.int64)
-    epoch = 0
+    seg_i = 0
 
-    def shootdown(e: int):
-        """Invalidate every entry covering a dirty vpn; charge the cost."""
+    def shootdown(t: int, dirty: np.ndarray, n_pages: int):
+        """Invalidate every entry covering a dirty vpn; charge the cost.
+
+        Coherence invalidation is ASID-blind: a translation died for
+        whichever address space held it (in single-space worlds every
+        entry carries ASID 0 anyway)."""
         nonlocal n_shoot, cycles, cov
-        dirty = dyn.dirty(e)
-        if not dirty.any():
-            return
         dcum = np.concatenate([[0], np.cumsum(dirty)])
 
         def rng_dirty(lo, ln):
@@ -644,26 +744,76 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
         n_shoot += n_inv
         cycles += LAT_SHOOTDOWN + LAT_INVALIDATE * n_inv
         cov -= cov_loss
+        if on_event is not None:
+            on_event(dict(t=t, kind="shootdown", invalidated=n_inv))
+
+    def ctx_switch(t: int, seg: _OracleSegment):
+        """Enter a schedule segment: set the live ASID, charge the switch,
+        and flush — everything (``flush_all``) or the recycled ASID's stale
+        entries (``flush_asid``).  Flushes are bulk valid-bit clears (no
+        per-entry port writes); the refill misses are the real cost."""
+        nonlocal cur_asid, n_shoot, cycles, cov
+        cur_asid = seg.asid
+        n_inv = 0
+        if seg.flush_all or seg.flush_asid:
+            def kill(valid, asid_arr):
+                mask = np.asarray(valid)
+                if not seg.flush_all:
+                    mask = mask & (asid_arr == seg.asid)
+                return mask
+
+            k2 = kill(l2_k != INVALID, l2_asid)
+            n_inv += int(k2.sum())
+            cov -= int(l2_contig[k2].sum())
+            l2_k[k2] = INVALID
+            k1 = kill(l1_tag >= 0, l1_asid)
+            n_inv += int(k1.sum())
+            l1_tag[k1] = -1
+            kh = kill(l1h_tag >= 0, l1h_asid)
+            n_inv += int(kh.sum())
+            l1h_tag[kh] = -1
+            kr = kill(rmm_len > 0, rmm_asid)
+            n_inv += int(kr.sum())
+            cov -= int(rmm_len[kr].sum())
+            rmm_start[kr] = -1
+            rmm_len[kr] = 0
+            rmm_ppn[kr] = -1
+            kc = kill(cl_bm != 0, cl_asid)
+            n_inv += int(kc.sum())
+            cl_bm[kc] = 0
+            n_shoot += n_inv
+        if seg.switch:
+            cycles += LAT_CTX_SWITCH
+        if on_event is not None and (seg.switch or n_inv):
+            on_event(dict(t=t, kind="switch", asid=seg.asid,
+                          invalidated=n_inv))
 
     for t in range(T):
-        while epoch + 1 < E and t == dyn.boundaries[epoch + 1]:
-            epoch += 1
-            shootdown(epoch)
-        m = dyn.epochs[epoch]
+        while seg_i + 1 < len(segs) and t == segs[seg_i + 1].lo:
+            seg_i += 1
+            seg = segs[seg_i]
+            if seg.switch or seg.flush_all or seg.flush_asid \
+                    or seg.asid != cur_asid:
+                ctx_switch(t, seg)
+            if seg.dirty is not None:
+                shootdown(t, seg.dirty, seg.m.n_pages)
+        seg = segs[seg_i]
+        m = seg.m
+        n_pages = m.n_pages
         vpn = int(trace[t])
         ppn_true = int(m.ppn[vpn])
-        frec = fills[epoch][vpn]
+        frec = seg.fill[vpn]
         fill_tag, fill_k, fill_contig, fill_ppn = (int(frec[0]), int(frec[1]),
                                                    int(frec[2]), int(frec[3]))
 
         # ---------------- L1 ---------------------------------------------
         s1 = vpn & (L1_SETS - 1)
-        hits1 = l1_tag[s1] == vpn
+        hits1 = (l1_tag[s1] == vpn) & (l1_asid[s1] == cur_asid)
         l1_hit = bool(hits1.any())
         l1_way = int(np.argmax(hits1))
         hv = vpn >> 9
         s1h = hv & (L1H_SETS - 1)
-        hitsh = l1h_tag[s1h] == hv
+        hitsh = (l1h_tag[s1h] == hv) & (l1h_asid[s1h] == cur_asid)
         l1h_hit = is_thp and bool(hitsh.any())
         l1h_way = int(np.argmax(hitsh))
         l1_served = l1_hit or l1h_hit
@@ -676,7 +826,7 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
         kcls = l2_k[s2]
         contig = l2_contig[s2]
         pbase = l2_ppn[s2]
-        valid = kcls != INVALID
+        valid = (kcls != INVALID) & (l2_asid[s2] == cur_asid)
         probes_used = 0
         pred_ok = 0
         hit_k = -1
@@ -693,7 +843,8 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
             l2_ppn_val = int(pbase[way]) + (vpn - int(tags[way]))
             touch_set, tw = s2, way
         elif is_thp:
-            huge_ways = (l2_k[s2h] == HUGE) & (l2_tag[s2h] == hv)
+            huge_ways = (l2_k[s2h] == HUGE) & (l2_tag[s2h] == hv) & \
+                (l2_asid[s2h] == cur_asid)
             reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
             huge_hit = bool(huge_ways.any())
             hw = int(np.argmax(huge_ways))
@@ -741,7 +892,7 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
         side_ppn = -1
         if has_rmm:
             d_r = vpn - rmm_start
-            in_rng = (d_r >= 0) & (d_r < rmm_len)
+            in_rng = (d_r >= 0) & (d_r < rmm_len) & (rmm_asid == cur_asid)
             if bool(in_rng.any()):
                 side_hit = True
                 sw = int(np.argmax(in_rng))
@@ -750,7 +901,8 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
         sc = cwd & (CLUS_SETS - 1)
         if has_clus:
             bit = (cl_bm[sc] >> (vpn & 7)) & 1
-            c_ways = (cl_tag[sc] == cwd) & (bit == 1)
+            c_ways = (cl_tag[sc] == cwd) & (bit == 1) & \
+                (cl_asid[sc] == cur_asid)
             if bool(c_ways.any()):
                 side_hit = True
                 side_ppn = ppn_true
@@ -771,18 +923,20 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
 
         # ---------------- L2 fill ----------------------------------------
         served_huge = is_thp and fill_k == HUGE
+        evict = False
         if walk:
             fill_set = s2h if served_huge else s2
             valid_row = l2_k[fill_set] != INVALID
             score = np.where(valid_row, l2_lru[fill_set], NEG)
             victim = int(np.argmin(score))
-            evicted = int(l2_contig[fill_set, victim]) \
-                if valid_row[victim] else 0
+            evict = bool(valid_row[victim])
+            evicted = int(l2_contig[fill_set, victim]) if evict else 0
             l2_tag[fill_set, victim] = fill_tag
             l2_k[fill_set, victim] = fill_k
             l2_contig[fill_set, victim] = fill_contig
             l2_ppn[fill_set, victim] = fill_ppn
             l2_lru[fill_set, victim] = t
+            l2_asid[fill_set, victim] = cur_asid
             cov += fill_contig - evicted
         elif l2h and not l1_served:
             l2_lru[touch_set, tw] = t
@@ -800,19 +954,22 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
                 rmm_ppn[victim_r] = int(
                     m.ppn[min(max(rs_v, 0), n_pages - 1)])
                 rmm_lru[victim_r] = t
+                rmm_asid[victim_r] = cur_asid
                 cov += rl_v - ev_len
             elif side_hit:
                 rmm_lru[sw] = t
         if has_clus:
-            bm = int(clus_maps[epoch][vpn])
+            bm = int(seg.clus[vpn])
             if walk and bm != (1 << (vpn & 7)):
                 vrow = cl_bm[sc] != 0
                 victim_c = int(np.argmin(np.where(vrow, cl_lru[sc], NEG)))
                 cl_tag[sc, victim_c] = cwd
                 cl_bm[sc, victim_c] = bm
                 cl_lru[sc, victim_c] = t
+                cl_asid[sc, victim_c] = cur_asid
             elif side_hit:
-                hit_cway = int(np.argmax(cl_tag[sc] == cwd))
+                hit_cway = int(np.argmax((cl_tag[sc] == cwd)
+                                         & (cl_asid[sc] == cur_asid)))
                 cl_lru[sc, hit_cway] = t
 
         # ---------------- L1 fills ---------------------------------------
@@ -823,6 +980,7 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
                 l1h_tag[s1h, vich] = hv
                 l1h_ppn[s1h, vich] = fill_ppn
                 l1h_lru[s1h, vich] = t
+                l1h_asid[s1h, vich] = cur_asid
             if l1_served and bool(hitsh.any()) and not l1_hit:
                 l1h_lru[s1h, l1h_way] = t
             do1 = not l1_served and not served_huge
@@ -834,6 +992,7 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
             l1_tag[s1, vic1] = vpn
             l1_ppn[s1, vic1] = ppn_true
             l1_lru[s1, vic1] = t
+            l1_asid[s1, vic1] = cur_asid
         if l1_hit:
             l1_lru[s1, l1_way] = t
 
@@ -862,8 +1021,14 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray
                   else l2_ppn_val if l2h
                   else side_ppn if side_hit
                   else ppn_true)
-        if _DEBUG_HOOK is not None:
-            _DEBUG_HOOK(t, locals())
+        if on_step is not None:
+            level = ("l1" if l1_served else "l2reg" if reg_hit
+                     else "l2coal" if coal_hit else "side" if side_hit
+                     else "walk")
+            on_step(dict(t=t, vpn=vpn, asid=cur_asid, level=level,
+                         ppn=int(out[t]), walk=bool(walk),
+                         evict=bool(evict), probes=int(probes_used),
+                         cycles=int(cyc)))
 
     return SimResult(
         name=spec.name, accesses=T, l1_hits=int(n_l1),

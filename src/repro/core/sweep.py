@@ -70,9 +70,9 @@ import numpy as np
 from .lane_program import (
     C_COAL, C_CYC, C_L1, C_PRED, C_PROBE, C_REG, C_SHOOT, C_WALK,
     LANE_SHARE_MAX, STEP_KEYS, build_block_plan,
-    init_batched_state as _init_batched_state, pack_lanes as _pack_lanes,
-    shoot_lane, step_access)
-from .page_table import DynamicMapping, Mapping
+    init_batched_state as _init_batched_state, needs_switch_pass,
+    pack_lanes as _pack_lanes, shoot_lane, step_access, switch_lane)
+from .page_table import DynamicMapping, Mapping, MultiTenantMapping
 from .simulator import MethodSpec, SimResult
 
 # Default trace-steps-per-block of the time-blocked XLA backend.  Override
@@ -113,45 +113,51 @@ class SweepCell:
       becomes per-lane *data* in the batched engine, so cells with different
       specs still share one compiled program.
     * ``mapping`` — a contiguity-annotated
-      :class:`~repro.core.page_table.Mapping`, **or** a
+      :class:`~repro.core.page_table.Mapping`, a
       :class:`~repro.core.page_table.DynamicMapping` whose epoch boundaries
       segment the trace (mid-trace remaps with shootdown-correct
-      invalidation); get one from a registered scenario
+      invalidation), **or** a
+      :class:`~repro.core.page_table.MultiTenantMapping` whose schedule
+      segments it (ASID-tagged context switching; the flush-vs-tag policy
+      is ``spec.ctx_policy``); get one from a registered scenario
       (:mod:`repro.scenarios`) or the generators in
       :mod:`repro.core.mappings`.
     * ``trace``   — 1-D integer array of VPNs (every entry must be a mapped
-      page of the epoch live at that step).
+      page of the epoch/tenant live at that step).
 
     Mappings/traces shared between cells (by object identity) are packed and
     hashed once, so build each world once and reuse it across specs.
     """
 
     spec: MethodSpec
-    mapping: "Mapping | DynamicMapping"
+    mapping: "Mapping | DynamicMapping | MultiTenantMapping"
     trace: np.ndarray
 
     def __post_init__(self):
         assert self.trace.ndim == 1
-        if isinstance(self.mapping, DynamicMapping):
+        if isinstance(self.mapping, (DynamicMapping, MultiTenantMapping)):
             assert all(0 < b < self.trace.shape[0]
                        for b in self.mapping.boundaries[1:]), \
-                "epoch boundaries must fall inside the trace"
+                "segment boundaries must fall inside the trace"
 
     @property
     def epochs(self) -> Tuple[Mapping, ...]:
         if isinstance(self.mapping, DynamicMapping):
             return self.mapping.epochs
+        if isinstance(self.mapping, MultiTenantMapping):
+            return self.mapping.tenants
         return (self.mapping,)
 
     @property
     def boundaries(self) -> Tuple[int, ...]:
-        if isinstance(self.mapping, DynamicMapping):
+        if isinstance(self.mapping, (DynamicMapping, MultiTenantMapping)):
             return self.mapping.boundaries
         return (0,)
 
     @property
-    def is_dynamic(self) -> bool:
-        """True when the world actually changes mid-trace (>= 2 epochs)."""
+    def is_segmented(self) -> bool:
+        """True when the lane rides a multi-segment timeline (mid-trace
+        remap epochs or multi-tenant scheduling quanta)."""
         return len(self.boundaries) > 1
 
 
@@ -173,7 +179,7 @@ class SweepResult:
 # The XLA backend: one scan over TB-step blocks, body vmapped over lanes
 # ---------------------------------------------------------------------------
 
-def _run_lanes_impl(lanes, stacks, st0, seg_bounds, tb):
+def _run_lanes_impl(lanes, stacks, st0, seg_bounds, tb, with_switch):
     """Time-blocked batched simulation of every lane.
 
     One ``lax.scan`` over the :class:`~repro.core.lane_program.BlockPlan`
@@ -212,12 +218,22 @@ def _run_lanes_impl(lanes, stacks, st0, seg_bounds, tb):
     def blk_body(st_all, x):
         seg = x["seg"]
 
-        def do_shoot(s):
+        def do_entry(s):
+            # context switch first (set ASID, charge, policy flush), then
+            # the translation-coherence shootdown — the oracle's order.
+            # ``with_switch`` is static: batches with no multi-tenant lane
+            # (all switch flags False by construction) never compile the
+            # switch pass at all.
+            if with_switch:
+                s = jax.vmap(switch_lane)(
+                    s, lanes["seg_asid"][:, seg],
+                    lanes["seg_switch"][:, seg],
+                    lanes["seg_fall"][:, seg], lanes["seg_fasid"][:, seg])
             do = lanes["seg_shoot"][:, seg]
             dcs = dirty_stack[lanes["seg_dirty"][:, seg]]
             return jax.vmap(shoot_lane)(lane_params, s, dcs, do)
 
-        st_all = jax.lax.cond(x["shoot"], do_shoot, lambda s: s, st_all)
+        st_all = jax.lax.cond(x["shoot"], do_entry, lambda s: s, st_all)
 
         vpns = trace_stack[lanes["trace_id"][:, None], x["tt"][None, :]]
         mrecs = map_stack[lanes["seg_map"][:, seg, None], vpns]
@@ -234,9 +250,9 @@ def _run_lanes_impl(lanes, stacks, st0, seg_bounds, tb):
     return stF, pp[:, plan.slot_of_t]
 
 
-_run_lanes_jit = jax.jit(_run_lanes_impl, static_argnums=(3, 4))
+_run_lanes_jit = jax.jit(_run_lanes_impl, static_argnums=(3, 4, 5))
 _run_lanes_pmap = jax.pmap(_run_lanes_impl, in_axes=(0, None, 0),
-                           static_broadcasted_argnums=(3, 4))
+                           static_broadcasted_argnums=(3, 4, 5))
 
 
 def _simulate_lanes(lanes, stacks, st0, seg_bounds, backend="xla",
@@ -254,6 +270,7 @@ def _simulate_lanes(lanes, stacks, st0, seg_bounds, backend="xla",
         from ..kernels.tlb_sweep import run_lanes_pallas
         stF, ppns = run_lanes_pallas(lanes, stacks, st0, seg_bounds, tb)
         return jax.device_get(stF), np.asarray(jax.device_get(ppns))
+    with_switch = needs_switch_pass(lanes)
     dev = jax.local_device_count()
     L = lanes["t_real"].shape[0]
     if dev > 1 and L % dev == 0:
@@ -262,11 +279,13 @@ def _simulate_lanes(lanes, stacks, st0, seg_bounds, backend="xla",
 
         stF, ppns = _run_lanes_pmap(
             {k: shard(v) for k, v in lanes.items()}, stacks,
-            {k: shard(v) for k, v in st0.items()}, seg_bounds, tb)
+            {k: shard(v) for k, v in st0.items()}, seg_bounds, tb,
+            with_switch)
         unshard = lambda x: np.asarray(x).reshape((L,) + x.shape[2:])  # noqa: E731
         return ({k: unshard(v) for k, v in jax.device_get(stF).items()},
                 unshard(jax.device_get(ppns)))
-    stF, ppns = _run_lanes_jit(lanes, stacks, st0, seg_bounds, tb)
+    stF, ppns = _run_lanes_jit(lanes, stacks, st0, seg_bounds, tb,
+                               with_switch)
     return jax.device_get(stF), np.asarray(jax.device_get(ppns))
 
 
@@ -364,6 +383,15 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
     if isinstance(cell.mapping, DynamicMapping):
         h.update(repr(tuple(cell.mapping.boundaries)).encode())
         for m in cell.mapping.epochs:
+            h.update(digest(m.ppn).encode())
+    elif isinstance(cell.mapping, MultiTenantMapping):
+        mt = cell.mapping
+        # the full schedule: when, who, under which ASID — and the recycle
+        # flags explicitly (normally derived from the former, but the
+        # constructor accepts an override, which must not collide)
+        h.update(repr((tuple(mt.boundaries), tuple(mt.tenant_ids),
+                       tuple(mt.asids), tuple(mt.recycled))).encode())
+        for m in mt.tenants:
             h.update(digest(m.ppn).encode())
     else:
         h.update(digest(cell.mapping.ppn).encode())
@@ -473,13 +501,13 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
         todo.append(i)
 
     # Partition: static cells never ride a multi-segment timeline installed
-    # by dynamic cells sharing the sweep (and vice versa the dynamic batch
-    # stays small).  Groups larger than the lane-sharing bucket are chunked
-    # at its size, so a 5-row and an 8-row suite execute the SAME compiled
-    # programs instead of specializing on their exact lane counts.  Each
-    # chunk is one packed batch.
-    groups = [[i for i in todo if not cells[i].is_dynamic],
-              [i for i in todo if cells[i].is_dynamic]]
+    # by segmented (dynamic/multi-tenant) cells sharing the sweep (and vice
+    # versa the segmented batch stays small).  Groups larger than the
+    # lane-sharing bucket are chunked at its size, so a 5-row and an 8-row
+    # suite execute the SAME compiled programs instead of specializing on
+    # their exact lane counts.  Each chunk is one packed batch.
+    groups = [[i for i in todo if not cells[i].is_segmented],
+              [i for i in todo if cells[i].is_segmented]]
     batches = [g[k: k + LANE_SHARE_MAX]
                for g in groups if g
                for k in range(0, len(g), LANE_SHARE_MAX)]
@@ -487,7 +515,8 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
         sub = [cells[i] for i in group]
         lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(
             sub, device_count=jax.local_device_count())
-        st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"])
+        st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"],
+                                  lanes["asid0"])
         stF, ppns = _simulate_lanes(lanes, stacks, st0, seg_bounds,
                                     backend=backend, tb=tb)
         counters = np.asarray(stF["counters"])

@@ -21,7 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from ...core.lane_program import build_block_plan
+from ...core.lane_program import build_block_plan, needs_switch_pass
 from .tlb_sweep import N_PARAM_FIELDS, PARAM_KEYS, make_tlb_sweep_call
 
 _CALL_CACHE: Dict[Tuple[int, int], object] = {}
@@ -84,10 +84,13 @@ def run_lanes_pallas(lanes, stacks, st0, seg_bounds, tb: int,
         i32(lanes["seg_dirty"]), i32(plan.blk_seg), i32(plan.blk_shoot),
         i32(plan.blk_hi),
         pack_params(lanes), i32(lanes["kvals"]), i32(lanes["seg_shoot"]),
+        i32(lanes["seg_asid"]), i32(lanes["seg_switch"]),
+        i32(lanes["seg_fall"]), i32(lanes["seg_fasid"]),
         trace_pad, i32(plan.tpos),
         i32(stacks["maps"]), i32(stacks["fills"]), i32(stacks["clus"]),
         i32(stacks["dirty"]),
-        tb=tb, n_blocks=plan.n_blocks, interpret=bool(interpret))
+        tb=tb, n_blocks=plan.n_blocks, interpret=bool(interpret),
+        with_switch=needs_switch_pass(lanes))
 
     ppns = np.asarray(jax.device_get(ppn_pad))[:, plan.slot_of_t]
     stF = dict(counters=np.asarray(jax.device_get(counters)),

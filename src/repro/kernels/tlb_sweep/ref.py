@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.lane_program import STEP_KEYS, shoot_lane, step_access
+from ...core.lane_program import (STEP_KEYS, shoot_lane, step_access,
+                                  switch_lane)
 
 
 def run_lanes_ref(lanes, stacks, st0, seg_bounds):
@@ -47,6 +48,10 @@ def run_lanes_ref(lanes, stacks, st0, seg_bounds):
         outs = []
         for seg, (lo, hi) in enumerate(zip(seg_bounds, seg_bounds[1:])):
             if seg > 0:
+                st = switch_lane(st, lane["seg_asid"][seg],
+                                 lane["seg_switch"][seg],
+                                 lane["seg_fall"][seg],
+                                 lane["seg_fasid"][seg])
                 st = shoot_lane(params, st,
                                 dirty_stack[lane["seg_dirty"][seg]],
                                 lane["seg_shoot"][seg])

@@ -38,7 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
                                   L1_WAYS, L1H_SETS, L1H_WAYS, N_COUNTERS,
                                   N_COV_SAMPLES, PPN, RMM_ENTRIES, TAG,
-                                  shoot_lane, step_access)
+                                  shoot_lane, step_access, switch_lane)
 
 # params row layout (int32): one row per lane, packed by ops.pack_params
 # from PARAM_KEYS — the F_* indices and PARAM_KEYS are the same ordering
@@ -46,9 +46,10 @@ from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
 # exactly one place.
 PARAM_KEYS = ("is_colt", "is_thp", "has_rmm", "has_cluster", "use_pred",
               "set_mask", "n_ways", "k_hat", "miss_chain", "pred0",
-              "t_real", "sample_every")
+              "asid0", "t_real", "sample_every")
 (F_IS_COLT, F_IS_THP, F_HAS_RMM, F_HAS_CLUSTER, F_USE_PRED, F_SET_MASK,
- F_N_WAYS, F_K_HAT, F_MISS_CHAIN, F_PRED0, F_T_REAL, F_SAMPLE_EVERY,
+ F_N_WAYS, F_K_HAT, F_MISS_CHAIN, F_PRED0, F_ASID0, F_T_REAL,
+ F_SAMPLE_EVERY,
  ) = range(len(PARAM_KEYS))
 N_PARAM_FIELDS = len(PARAM_KEYS)
 
@@ -68,13 +69,14 @@ def _tlb_sweep_kernel(
         tid_ref, smap_ref, sfill_ref, sclus_ref, sdirty_ref,
         bseg_ref, bshoot_ref, bhi_ref,
         # tensor inputs
-        params_ref, kvals_ref, sshoot_ref, trace_ref, tpos_ref,
+        params_ref, kvals_ref, sshoot_ref, sasid_ref, sswitch_ref,
+        sfall_ref, sfasid_ref, trace_ref, tpos_ref,
         map_ref, fill_ref, clus_ref, dirty_ref,
         # outputs
         ppn_ref, cnt_ref, cov_ref,
         # scratch: the lane's entire TLB state, resident across blocks
         l1_ref, l1h_ref, l2_ref, rmm_ref, cl_ref, misc_ref,
-        *, tb: int):
+        *, tb: int, with_switch: bool):
     b = pl.program_id(1)
     p = params_ref[0]
     lane = _lane_dict(p, kvals_ref[0])
@@ -92,18 +94,20 @@ def _tlb_sweep_kernel(
         cl_ref[...] = jnp.zeros_like(cl_ref).at[..., 0].set(-1)
         misc_ref[0] = jnp.int32(0)            # t (active steps processed)
         misc_ref[1] = p[F_PRED0]              # alignment predictor
+        misc_ref[2] = p[F_ASID0]              # live ASID
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
         cov_ref[...] = jnp.zeros_like(cov_ref)
 
     def read_state():
-        return dict(t=misc_ref[0], pred=misc_ref[1], l1=l1_ref[...],
-                    l1h=l1h_ref[...], l2=l2_ref[...], rmm=rmm_ref[...],
-                    clus=cl_ref[...], counters=cnt_ref[0],
+        return dict(t=misc_ref[0], pred=misc_ref[1], asid=misc_ref[2],
+                    l1=l1_ref[...], l1h=l1h_ref[...], l2=l2_ref[...],
+                    rmm=rmm_ref[...], clus=cl_ref[...], counters=cnt_ref[0],
                     cov_samples=cov_ref[0])
 
     def write_state(st):
         misc_ref[0] = st["t"]
         misc_ref[1] = st["pred"]
+        misc_ref[2] = st["asid"]
         l1_ref[...] = st["l1"]
         l1h_ref[...] = st["l1h"]
         l2_ref[...] = st["l2"]
@@ -114,11 +118,26 @@ def _tlb_sweep_kernel(
 
     seg = bseg_ref[b]
 
-    @pl.when((bshoot_ref[b] == 1) & (sshoot_ref[0, seg] == 1))
-    def _shoot():
-        """Entering a segment whose epoch turned over for this lane."""
-        write_state(shoot_lane(lane, read_state(), dirty_ref[0],
-                               jnp.bool_(True)))
+    if with_switch:
+        # multi-tenant batch: segment entry runs the context switch (ASID
+        # update + policy flush, data-gated per lane) then the epoch-
+        # turnover shootdown (ditto) — the oracle's order.  Both passes
+        # are identity for lanes whose own schedule has no boundary here.
+        @pl.when(bshoot_ref[b] == 1)
+        def _entry():
+            st = switch_lane(read_state(), sasid_ref[0, seg],
+                             sswitch_ref[0, seg] == 1,
+                             sfall_ref[0, seg] == 1,
+                             sfasid_ref[0, seg] == 1)
+            write_state(shoot_lane(lane, st, dirty_ref[0],
+                                   sshoot_ref[0, seg] == 1))
+    else:
+        # no lane switches (static/dynamic-only batch, knowable at pack
+        # time): compile only the shootdown, gated as before
+        @pl.when((bshoot_ref[b] == 1) & (sshoot_ref[0, seg] == 1))
+        def _shoot():
+            write_state(shoot_lane(lane, read_state(), dirty_ref[0],
+                                   jnp.bool_(True)))
 
     st = read_state()
     vpns = trace_ref[0]                       # [tb] this lane's trace block
@@ -151,11 +170,13 @@ def make_tlb_sweep_call(sets: int, ways: int):
     """
 
     @functools.partial(jax.jit,
-                       static_argnames=("tb", "n_blocks", "interpret"))
+                       static_argnames=("tb", "n_blocks", "interpret",
+                                        "with_switch"))
     def call(tid, smap, sfill, sclus, sdirty, bseg, bshoot, bhi,
-             params, kvals, sshoot, trace_pad, tpos,
-             maps, fills, clus, dirty,
-             *, tb: int, n_blocks: int, interpret: bool):
+             params, kvals, sshoot, sasid, sswitch, sfall, sfasid,
+             trace_pad, tpos, maps, fills, clus, dirty,
+             *, tb: int, n_blocks: int, interpret: bool,
+             with_switch: bool):
         L, n_segs = smap.shape
         P = maps.shape[1]
         Pc = clus.shape[1]
@@ -174,6 +195,10 @@ def make_tlb_sweep_call(sets: int, ways: int):
                 by_lane((1, N_PARAM_FIELDS)),                 # params
                 by_lane((1, maxk)),                           # kvals
                 by_lane((1, n_segs)),                         # seg_shoot
+                by_lane((1, n_segs)),                         # seg_asid
+                by_lane((1, n_segs)),                         # seg_switch
+                by_lane((1, n_segs)),                         # seg_fall
+                by_lane((1, n_segs)),                         # seg_fasid
                 pl.BlockSpec((1, tb),                         # trace block
                              lambda l, b, tid, *s: (tid[l], b)),
                 pl.BlockSpec((tb,), lambda l, b, *s: (b,)),   # tpos block
@@ -196,12 +221,12 @@ def make_tlb_sweep_call(sets: int, ways: int):
                 by_lane((1, N_COV_SAMPLES)),                      # cov
             ],
             scratch_shapes=[
-                pltpu.VMEM((L1_SETS, L1_WAYS, 3), jnp.int32),
-                pltpu.VMEM((L1H_SETS, L1H_WAYS, 3), jnp.int32),
-                pltpu.VMEM((sets, ways, 5), jnp.int32),
-                pltpu.VMEM((RMM_ENTRIES, 4), jnp.int32),
-                pltpu.VMEM((CLUS_SETS, CLUS_WAYS, 3), jnp.int32),
-                pltpu.SMEM((2,), jnp.int32),              # t, predictor
+                pltpu.VMEM((L1_SETS, L1_WAYS, 4), jnp.int32),
+                pltpu.VMEM((L1H_SETS, L1H_WAYS, 4), jnp.int32),
+                pltpu.VMEM((sets, ways, 6), jnp.int32),
+                pltpu.VMEM((RMM_ENTRIES, 5), jnp.int32),
+                pltpu.VMEM((CLUS_SETS, CLUS_WAYS, 4), jnp.int32),
+                pltpu.SMEM((3,), jnp.int32),         # t, predictor, asid
             ],
         )
         out_shapes = (
@@ -209,11 +234,13 @@ def make_tlb_sweep_call(sets: int, ways: int):
             jax.ShapeDtypeStruct((L, N_COUNTERS), jnp.int32),
             jax.ShapeDtypeStruct((L, N_COV_SAMPLES), jnp.int32),
         )
-        kernel = functools.partial(_tlb_sweep_kernel, tb=tb)
+        kernel = functools.partial(_tlb_sweep_kernel, tb=tb,
+                                   with_switch=with_switch)
         return pl.pallas_call(
             kernel, grid_spec=grid_spec, out_shape=out_shapes,
             interpret=interpret,
         )(tid, smap, sfill, sclus, sdirty, bseg, bshoot, bhi,
-          params, kvals, sshoot, trace_pad, tpos, maps, fills, clus, dirty)
+          params, kvals, sshoot, sasid, sswitch, sfall, sfasid,
+          trace_pad, tpos, maps, fills, clus, dirty)
 
     return call

@@ -4,10 +4,13 @@ See :mod:`repro.scenarios.base` for the model and ``docs/scenarios.md`` for
 the catalogue.  Importing this package registers all built-in families:
 synthetic (Table-3 families, demand paging, paper-benchmark analogues),
 workload-derived (KV-cache serving churn, paged-attention gather order,
-training data pipeline, checkpoint shards), and adversarial (compaction,
-THP splitting, NUMA interleave).
+training data pipeline, checkpoint shards), adversarial (compaction,
+THP splitting, NUMA interleave), dynamic (live mapping-event streams),
+and multitenant (ASID-tagged address spaces under KVScheduler-derived
+context-switch schedules).
 """
-from . import adversarial, dynamic, synthetic, workload  # noqa: F401  (registration)
+from . import (adversarial, dynamic, multitenant, synthetic,  # noqa: F401
+               workload)
 from .base import (FAMILIES, Scenario, ScenarioData, ScenarioRequest,
                    clear_materialized_cache, get_scenario, list_scenarios,
                    register, scenario)

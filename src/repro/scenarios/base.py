@@ -38,9 +38,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.page_table import DynamicMapping, Mapping
+from ..core.page_table import DynamicMapping, Mapping, MultiTenantMapping
 
-FAMILIES = ("synthetic", "workload", "adversarial", "dynamic")
+FAMILIES = ("synthetic", "workload", "adversarial", "dynamic", "multitenant")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,9 +71,14 @@ class ScenarioData:
     :class:`~repro.core.page_table.DynamicMapping` (epoch snapshots, event
     stream, trace-position boundaries); for them ``mapping`` is the
     epoch-0 snapshot (what the OS saw when it chose K), and each trace
-    entry must be mapped in the epoch live at that step.  Sweep dynamic
-    worlds by passing ``data.world`` (the dynamic mapping when present,
-    else the static one) to :class:`repro.core.sweep.SweepCell`.
+    entry must be mapped in the epoch live at that step.  ``multitenant``
+    scenarios carry a
+    :class:`~repro.core.page_table.MultiTenantMapping` (tenant address
+    spaces + context-switch schedule with ASID assignments); ``mapping``
+    is tenant 0's space and each trace entry must be mapped in the tenant
+    scheduled at that step.  Sweep either by passing ``data.world`` (the
+    segmented world when present, else the static mapping) to
+    :class:`repro.core.sweep.SweepCell`.
     """
 
     scenario: str
@@ -81,11 +86,16 @@ class ScenarioData:
     trace: np.ndarray
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     dynamic: Optional[DynamicMapping] = None
+    multitenant: Optional[MultiTenantMapping] = None
 
     @property
     def world(self):
-        """What to simulate: the dynamic world when present, else static."""
-        return self.dynamic if self.dynamic is not None else self.mapping
+        """What to simulate: the segmented world when present, else static."""
+        if self.dynamic is not None:
+            return self.dynamic
+        if self.multitenant is not None:
+            return self.multitenant
+        return self.mapping
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,317 @@
+"""Cross-backend differential fuzzer + named seed-corpus regressions.
+
+The simulator has four implementations of one semantics: the pure-python
+oracles (``run_method`` / ``run_method_dynamic`` /
+``run_method_multitenant``), the step-at-a-time pure-JAX reference
+(``kernels/tlb_sweep/ref.py``), the time-blocked XLA backend, and the
+Pallas kernel.  The fuzzer draws random ``(mapping events, trace, method
+kind, ctx policy, block size, tenant schedule)`` tuples and asserts all
+four agree counter-for-counter and PPN-for-PPN — any divergence is a bug
+in exactly one layer, which is what makes the redundancy worth its
+maintenance cost.
+
+The bottom of the file pins the three bugs fixed en route in PRs 2–3 as
+named seed-corpus regressions, each reproducing its original trigger:
+
+* ``decode_step_paged`` scattering inactive batch slots' KV at page ``-1``
+  (which wraps to the LAST pool page and corrupts whoever owns it);
+* ``determine_k`` breaking on strict ``>`` where Algorithm 3 is inclusive
+  at coverage == theta;
+* recompute preemption dropping the victim's already-generated tokens.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import demand_mapping
+from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
+                                  colt_spec, kaligned_spec, rmm_spec,
+                                  thp_spec)
+from repro.core.determine_k import determine_k
+from repro.core.lane_program import init_batched_state, pack_lanes
+from repro.core.page_table import (MappingEvent, build_dynamic_mapping,
+                                   build_multitenant_mapping, make_mapping)
+from repro.core.simulator import (run_method_dynamic, run_method_multitenant)
+from repro.core.sweep import SweepCell, run_sweep
+
+COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
+            "walks", "aligned_probes", "pred_correct", "cycles",
+            "coverage_mean", "shootdowns")
+
+SPECS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
+         anchor_spec(6), kaligned_spec([9, 6, 4]),
+         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+
+WORLD_KINDS = ("static", "dynamic", "multitenant")
+
+
+def _mapped_trace(m, n, rng):
+    mv = np.flatnonzero(np.asarray(m.ppn) >= 0)
+    if mv.size == 0:
+        return None
+    return mv[rng.integers(0, mv.size, n)].astype(np.int64)
+
+
+def _gen_world(world_kind: str, seed: int):
+    """Deterministic (world, trace) from one seed; None if degenerate."""
+    rng = np.random.default_rng(seed)
+    n = 512
+    if world_kind == "static":
+        m = demand_mapping(n, seed=seed % 997)
+        trace = _mapped_trace(m, 260, rng)
+        return (m, trace) if trace is not None else None
+
+    if world_kind == "dynamic":
+        m0 = demand_mapping(n, seed=seed % 991)
+        fresh = int(m0.ppn.max()) + 2
+        ppn = m0.ppn
+        schedule = []
+        for e in (1, 2):
+            evs = []
+            for _ in range(int(rng.integers(1, 3))):
+                kind = str(rng.choice(["remap", "unmap", "map", "compact"]))
+                start = int(rng.integers(0, n - 64))
+                ln = int(rng.integers(1, 48))
+                if kind == "unmap":
+                    evs.append(MappingEvent("unmap", start, ln))
+                else:
+                    evs.append(MappingEvent(kind, start, ln, ppn=fresh))
+                    fresh += ln + 1
+            schedule.append((e * 90, evs))
+        dyn = build_dynamic_mapping(m0.ppn, schedule, name=f"fz{seed}")
+        parts = []
+        bounds = list(dyn.boundaries) + [300]
+        for e in range(dyn.n_epochs):
+            p = _mapped_trace(dyn.epochs[e], bounds[e + 1] - bounds[e], rng)
+            if p is None:
+                return None
+            parts.append(p)
+        return dyn, np.concatenate(parts)
+
+    # multitenant: 2-3 tenants, 5-7 segments, ASIDs drawn from a pool
+    # SMALLER than the tenant count so recycling happens organically
+    n_ten = int(rng.integers(2, 4))
+    tenants = []
+    for i in range(n_ten):
+        style = int(rng.integers(0, 3))
+        if style == 0:
+            tenants.append(demand_mapping(n, seed=(seed + i) % 983))
+        elif style == 1:
+            tenants.append(make_mapping(
+                np.arange(n, dtype=np.int64) + int(rng.integers(1, 100)),
+                name=f"contig{i}"))
+        else:
+            tenants.append(demand_mapping(n, seed=(seed + i) % 977,
+                                          thp=True))
+    n_seg = int(rng.integers(5, 8))
+    q = 40
+    schedule = []
+    for s in range(n_seg):
+        tid = int(rng.integers(0, n_ten))
+        if schedule and schedule[-1][1] == tid:
+            # a resident tenant keeps its ASID (constructor invariant)
+            asid = schedule[-1][2]
+        else:
+            asid = int(rng.integers(0, max(n_ten - 1, 1)))
+        schedule.append((s * q, tid, asid))
+    mt = build_multitenant_mapping(tenants, schedule, name=f"fzmt{seed}")
+    total = n_seg * q + 20
+    bounds = list(mt.boundaries) + [total]
+    parts = []
+    for s in range(mt.n_segments):
+        m = mt.tenants[mt.tenant_ids[s]]
+        p = _mapped_trace(m, bounds[s + 1] - bounds[s], rng)
+        if p is None:
+            return None
+        parts.append(p)
+    return mt, np.concatenate(parts)
+
+
+def _oracle(spec, world, trace):
+    from repro.core.page_table import MultiTenantMapping
+    if isinstance(world, MultiTenantMapping):
+        return run_method_multitenant(spec, world, trace)
+    return run_method_dynamic(spec, world, trace)   # handles static too
+
+
+def _assert_same(got, want, ctx):
+    for f in COUNTERS:
+        assert getattr(got, f) == getattr(want, f), (ctx, f)
+    np.testing.assert_array_equal(got.ppn, want.ppn, err_msg=str(ctx))
+
+
+def _run_ref(cell):
+    from repro.kernels.tlb_sweep.ref import run_lanes_ref
+    from repro.core.lane_program import (C_COAL, C_CYC, C_L1, C_PRED,
+                                         C_PROBE, C_REG, C_SHOOT, C_WALK)
+    lanes, stacks, (L, sets, ways), seg_bounds = pack_lanes([cell])
+    st0 = init_batched_state(L, sets, ways, lanes["pred0"], lanes["asid0"])
+    stF, ppns = run_lanes_ref(lanes, stacks, st0, seg_bounds)
+    counters = np.asarray(stF["counters"])[0]
+    fields = {C_L1: "l1_hits", C_REG: "l2_regular_hits",
+              C_COAL: "l2_coalesced_hits", C_WALK: "walks",
+              C_PROBE: "aligned_probes", C_PRED: "pred_correct",
+              C_CYC: "cycles", C_SHOOT: "shootdowns"}
+    cov = float(np.mean(np.asarray(stF["cov_samples"])[0]))
+    return ({f: int(counters[c]) for c, f in fields.items()},
+            cov, np.asarray(ppns)[0, : cell.trace.shape[0]])
+
+
+def _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas):
+    gen = _gen_world(world_kind, seed)
+    if gen is None:
+        return                       # degenerate draw: nothing mapped
+    world, trace = gen
+    spec = dataclasses.replace(SPECS[spec_i], ctx_policy=policy)
+    cell = SweepCell(spec, world, trace)
+    want = _oracle(spec, world, trace)
+
+    ref_counters, ref_cov, ref_ppn = _run_ref(cell)
+    for f, v in ref_counters.items():
+        assert v == getattr(want, f), (seed, world_kind, spec.name, "ref", f)
+    assert ref_cov == want.coverage_mean
+    np.testing.assert_array_equal(ref_ppn, want.ppn)
+
+    got = run_sweep([cell], cache=False, backend="xla",
+                    block_size=tb).results[0]
+    _assert_same(got, want, (seed, world_kind, spec.name, "xla", tb))
+
+    if with_pallas:
+        got = run_sweep([cell], cache=False, backend="pallas",
+                        block_size=tb).results[0]
+        _assert_same(got, want, (seed, world_kind, spec.name, "pallas", tb))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
+       st.sampled_from(["flush", "tag"]), st.integers(1, 12),
+       st.sampled_from(WORLD_KINDS))
+@settings(max_examples=4, deadline=None)
+def test_differential_oracle_ref_xla(seed, spec_i, policy, tb, world_kind):
+    """oracle == step-reference == time-blocked XLA for random tuples."""
+    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=False)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
+       st.sampled_from(["flush", "tag"]), st.integers(1, 8))
+@settings(max_examples=2, deadline=None)
+def test_differential_pallas_multitenant(seed, spec_i, policy, tb):
+    """The full four-way diff including the Pallas kernel, on the newest
+    (multi-tenant) world kind — the one most likely to regress."""
+    _check_tuple(seed, spec_i, policy, tb, "multitenant", with_pallas=True)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
+       st.sampled_from(["flush", "tag"]), st.integers(1, 16),
+       st.sampled_from(WORLD_KINDS))
+@settings(max_examples=8, deadline=None)
+def test_differential_full(seed, spec_i, policy, tb, world_kind):
+    """Slow lane: more examples, every world kind, all four engines."""
+    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=True)
+
+
+# ---------------------------------------------------------------------------
+# Seed corpus: the three bugs fixed en route in PRs 2-3, pinned by name
+# ---------------------------------------------------------------------------
+
+
+def test_seed_corpus_determine_k_inclusive_theta():
+    """PR 3: Algorithm 3's stop test used strict ``>`` where the paper's
+    "covers more than theta" is inclusive at the boundary.  A histogram
+    whose best class covers EXACTLY theta must stop after that class;
+    the strict version kept appending alignments."""
+    # k=9 covers 512 of 1024 total contiguity == theta exactly
+    assert determine_k({512: 1, 16: 32}, theta=0.5, psi=4) == [9]
+    # and the epsilon guard keeps float rounding of total*theta from
+    # pushing an exact boundary back over the line
+    assert determine_k({16: 2, 32: 1}, theta=0.5, psi=4) == [6]
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    from repro.models import Model, RunConfig
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    model = Model(cfg, RunConfig(attn_q_chunk=32, attn_kv_chunk=32,
+                                 scan_chunk=16))
+    return model, model.init(0)
+
+
+def test_seed_corpus_inactive_slot_kv_scatter(tiny_model):
+    """PR 3: ``decode_step_paged`` scattered inactive batch slots' KV at
+    page ``-1``, which wraps to the LAST pool page — corrupting whichever
+    live sequence owns it.  Run a 1-request engine with a 2-slot batch
+    (slot 1 stays inactive every step) and pin that no decode step ever
+    writes a pool page the allocator never handed out."""
+    import jax.numpy as jnp
+    from repro.serve import EngineConfig, ServingEngine
+    model, params = tiny_model
+    ec = EngineConfig(page_size=8, num_pages=64, max_batch=2, max_seq=64,
+                      interpret=True)
+    eng = ServingEngine(model, params, ec)
+    rid = eng.add_request(list(range(7, 20)), max_new_tokens=4)
+    eng.step()                                   # admit + prefill + decode
+    owned = set(eng.allocator.seqs[rid].pages)
+    probe = [p for p in range(ec.num_pages - 1, -1, -1) if p not in owned]
+    assert probe, "allocator handed out every page; enlarge num_pages"
+    victim_page = probe[0]                       # includes the wrap target
+    snaps = {}
+    for j in range(eng.period):
+        st = eng.state.get(f"pos{j}")
+        if st is not None and "pool_k" in st:
+            snaps[j] = (np.asarray(jnp.copy(st["pool_k"][:, victim_page])),
+                        np.asarray(jnp.copy(st["pool_v"][:, victim_page])))
+    assert snaps, "no paged attention position found"
+    while eng.step():
+        pass
+    assert len(eng.requests[rid].generated) >= 4
+    for j, (k0, v0) in snaps.items():
+        st = eng.state[f"pos{j}"]
+        np.testing.assert_array_equal(
+            np.asarray(st["pool_k"][:, victim_page]), k0,
+            err_msg=f"pos{j}: unowned page {victim_page} was written "
+                    "(inactive-slot scatter regressed)")
+        np.testing.assert_array_equal(
+            np.asarray(st["pool_v"][:, victim_page]), v0)
+
+
+def test_seed_corpus_preemption_keeps_generated_tokens(tiny_model):
+    """PR 3: recompute preemption folded the victim's generated tokens
+    into the prompt and cleared the list, silently dropping them from the
+    final output.  Force a preemption and pin that every token generated
+    before it survives, as a prefix, to completion."""
+    from repro.serve import EngineConfig, ServingEngine
+    model, params = tiny_model
+    # 16 pages x 8 tokens: two 45-token sequences fit, admitting the third
+    # preempts the youngest — which by then holds its first generated token
+    ec = EngineConfig(page_size=8, num_pages=16, max_batch=3, max_seq=64,
+                      interpret=True)
+    eng = ServingEngine(model, params, ec)
+    rng = np.random.default_rng(2024)
+    rids = [eng.add_request(list(rng.integers(0, model.cfg.vocab, size=45)),
+                            max_new_tokens=3) for _ in range(3)]
+    pre_preempt: dict = {}
+    orig_tap = eng.sched.event_tap
+
+    def tap(kind, rid):
+        if kind == "preempt":
+            pre_preempt[rid] = list(eng.requests[rid].generated)
+        if orig_tap is not None:
+            orig_tap(kind, rid)
+
+    eng.sched.event_tap = tap
+    eng.run_to_completion()
+    assert eng.metrics["preemptions"] >= 1, \
+        "pool pressure never forced a preemption; shrink num_pages"
+    assert any(pre_preempt.values()), \
+        "no victim had generated tokens at preemption time"
+    for rid in rids:
+        gen = eng.requests[rid].generated
+        assert len(gen) == 3
+        if rid in pre_preempt:
+            k = len(pre_preempt[rid])
+            assert gen[:k] == pre_preempt[rid], \
+                "pre-preemption tokens were dropped on recompute"

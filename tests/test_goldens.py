@@ -1,0 +1,115 @@
+"""Golden-trace oracle suite: per-step pinning of tiny worlds.
+
+Each file under ``tests/goldens/`` holds a <= 16-access world for one
+method kind (plus one multi-tenant world per context-switch policy) with
+the oracle's expected per-step ``(level, ppn, evict, probes, cycles)``
+sequence and segment-entry events.  The tests replay the oracle and
+compare STEP BY STEP — a parity failure names the first diverging step —
+then run both sweep backends over the same world and hold them to the
+golden's final counters and translated PPNs.
+
+Regenerate after an intentional semantics change with
+``PYTHONPATH=src python scripts/make_goldens.py`` and review the diff;
+the generator's docstrings describe what each world is designed to prove.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.page_table import (MultiTenantMapping, make_mapping)
+from repro.core.simulator import (MethodSpec, run_method_dynamic,
+                                  run_method_multitenant)
+from repro.core.sweep import SweepCell, run_sweep
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "goldens")
+GOLDEN_FILES = sorted(glob.glob(os.path.join(GOLDEN_DIR, "*.json")))
+
+STEP_FIELDS = ("t", "vpn", "asid", "level", "ppn", "walk", "evict",
+               "probes", "cycles")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rebuild(g):
+    spec = MethodSpec(**{**g["spec"], "K": tuple(g["spec"]["K"])})
+    w = g["world"]
+    if w["kind"] == "multitenant":
+        world = MultiTenantMapping(
+            tuple(make_mapping(np.asarray(p, np.int64), name=f"t{i}")
+                  for i, p in enumerate(w["tenants"])),
+            tuple(w["boundaries"]), tuple(w["tenant_ids"]),
+            tuple(w["asids"]), name=g["name"])
+        runner = run_method_multitenant
+    else:
+        world = make_mapping(np.asarray(w["ppn"], np.int64), name=g["name"])
+        runner = run_method_dynamic
+    return spec, world, runner, np.asarray(g["trace"], np.int64)
+
+
+def test_goldens_exist_and_cover_every_kind():
+    assert len(GOLDEN_FILES) >= 10
+    gs = [_load(p) for p in GOLDEN_FILES]
+    kinds = {g["spec"]["kind"] for g in gs}
+    assert {"base", "thp", "colt", "cluster", "rmm", "anchor",
+            "kaligned"} <= kinds
+    # the kaligned pair covers predictor on AND off
+    preds = {g["spec"]["use_predictor"] for g in gs
+             if g["spec"]["kind"] == "kaligned"}
+    assert preds == {True, False}
+    # one multi-tenant golden per context-switch policy
+    mt_pol = {g["spec"]["ctx_policy"] for g in gs
+              if g["world"]["kind"] == "multitenant"}
+    assert mt_pol == {"flush", "tag"}
+    assert all(len(g["trace"]) <= 16 for g in gs)
+
+
+@pytest.mark.parametrize("path", GOLDEN_FILES,
+                         ids=[os.path.basename(p)[:-5]
+                              for p in GOLDEN_FILES])
+def test_oracle_matches_golden_step_by_step(path):
+    """The oracle's per-step hit-level/ppn/evict/latency sequence and its
+    segment-entry events reproduce the committed golden exactly; on
+    divergence the assertion names the step."""
+    g = _load(path)
+    spec, world, runner, trace = _rebuild(g)
+    steps, events = [], []
+    r = runner(spec, world, trace, on_step=steps.append,
+               on_event=events.append)
+    assert len(steps) == len(g["steps"])
+    for got, want in zip(steps, g["steps"]):
+        for f in STEP_FIELDS:
+            assert got[f] == want[f], (
+                f"{g['name']}: step t={want['t']} field {f!r}: "
+                f"got {got[f]!r}, golden {want[f]!r} "
+                f"(golden level sequence: "
+                f"{[s['level'] for s in g['steps']]})")
+    assert events == g["events"], f"{g['name']}: segment-entry events"
+    for f, v in g["final"].items():
+        got = getattr(r, f)
+        assert got == pytest.approx(v), (g["name"], f)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_backends_match_goldens(backend):
+    """Both sweep backends reproduce every golden's final counters and
+    per-step translations (one batch over all golden worlds)."""
+    gs = [_load(p) for p in GOLDEN_FILES]
+    cells = []
+    for g in gs:
+        spec, world, _, trace = _rebuild(g)
+        cells.append(SweepCell(spec, world, trace))
+    sweep = run_sweep(cells, cache=False, backend=backend, block_size=4)
+    for g, got in zip(gs, sweep.results):
+        for f, v in g["final"].items():
+            assert getattr(got, f) == pytest.approx(v), \
+                (g["name"], backend, f)
+        np.testing.assert_array_equal(
+            got.ppn, np.asarray([s["ppn"] for s in g["steps"]]),
+            err_msg=f"{g['name']} ({backend})")

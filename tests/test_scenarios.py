@@ -41,14 +41,25 @@ def test_every_scenario_materializes_valid_world(name):
     d = get_scenario(name).materialize(n_pages=N, trace_len=L, trace_seed=8)
     assert d.trace.dtype == np.int64 and d.trace.ndim == 1
     assert 0 < d.trace.shape[0] <= L
-    assert d.trace.min() >= 0 and d.trace.max() < d.mapping.n_pages
-    if d.dynamic is not None:
+    assert d.trace.min() >= 0
+    if d.multitenant is not None:
+        mt = d.multitenant
+        assert d.trace.max() < mt.n_pages
+        bounds = list(mt.boundaries) + [d.trace.shape[0]]
+        for s in range(mt.n_segments):
+            m = mt.tenants[mt.tenant_ids[s]]
+            seg = d.trace[bounds[s]: bounds[s + 1]]
+            assert (seg < m.n_pages).all() and (m.ppn[seg] >= 0).all(), \
+                f"trace hit a vpn unmapped in its tenant (segment {s})"
+    elif d.dynamic is not None:
+        assert d.trace.max() < d.mapping.n_pages
         bounds = list(d.dynamic.boundaries) + [d.trace.shape[0]]
         for e, m in enumerate(d.dynamic.epochs):
             seg = d.trace[bounds[e]: bounds[e + 1]]
             assert (m.ppn[seg] >= 0).all(), \
                 f"trace hit a vpn unmapped in epoch {e}"
     else:
+        assert d.trace.max() < d.mapping.n_pages
         assert (d.mapping.ppn[d.trace] >= 0).all(), \
             "trace hit an unmapped vpn"
     assert mapped_vpns(d.mapping).shape[0] > 0
