@@ -60,6 +60,9 @@ BENCHES: List = [
     ("tlb_multitenant",
      "Multi-tenant address spaces: ASID tags vs flush-on-switch",
      tlb_suite.bench_multitenant),
+    ("tlb_accelerator",
+     "Accelerator-scale methods: subregion / cache-TLB / dead-protect",
+     tlb_suite.bench_accelerator),
     ("dma_fragmentation", "TPU adaptation: descriptor model",
      paged_kernel.bench_dma_vs_fragmentation),
     ("dma_k_ablation", "TPU adaptation: |K| ablation",
@@ -116,6 +119,16 @@ def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
                              if r["policy"] == "flush"])
             return (f"mean |K|=3 rel: tag={tag:.3f} vs flush={flush:.3f}"
                     f" over {len(rel) // 2} scenarios")
+        if name == "tlb_accelerator":
+            import numpy as np
+            rel = [r for r in rows if r["metric"] == "rel_misses"]
+            ka = np.mean([r["|K|=3"] for r in rel])
+            best = min(("Subregion", "Cache-TLB", "Dead-Protect"),
+                       key=lambda k: np.mean([r[k] for r in rel]))
+            return (f"mean rel misses over {len(rel)} concurrencies:"
+                    f" |K|=3={ka:.3f};"
+                    f" best accel={best}="
+                    f"{np.mean([r[best] for r in rel]):.3f}")
         if name == "engine_end_to_end":
             return f"buddy desc_red={rows[0]['desc_reduction']}"
     except Exception as e:    # derived metrics must never kill the run

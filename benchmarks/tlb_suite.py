@@ -7,6 +7,9 @@
 * ``bench_predictor``  — Table 6 (alignment-predictor accuracy)
 * ``bench_k_sweep``    — Figure 9 (|K| = 2/3/4 relative to Anchor)
 * ``bench_cpi``        — Figures 10/11 (translation cycles per access)
+* ``bench_accelerator``— Beyond the paper: accelerator-lineage methods
+                         (subregion / cache-TLB / dead-protect) on the
+                         concurrency-diluted ``accel-gather`` streams
 
 All traces are synthetic access-pattern analogues of the paper's benchmarks
 (no Pin offline); see repro.core.traces.BENCHMARKS and EXPERIMENTS.md for the
@@ -31,7 +34,9 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 
 from repro.core import (BENCHMARKS, SimResult, base_spec, cluster_spec,
                         colt_spec, kaligned_for_mapping, rmm_spec, thp_spec)
-from repro.core.baselines import anchor_spec, kaligned_for_histogram
+from repro.core.baselines import (anchor_spec, cache_tlb_spec,
+                                  dead_protect_spec, kaligned_for_histogram,
+                                  subregion_spec)
 from repro.core.page_table import contiguity_histogram
 from repro.core.sweep import SweepCell, run_sweep
 from repro.kvcache.block_table import choose_kernel_classes
@@ -359,10 +364,15 @@ def bench_multitenant(trace_len=120_000, quick=True,
     coverage twice, once per tenant.
     """
     names = tuple(sc.name for sc in list_scenarios("multitenant"))
-    plan = SweepPlan()
+    rows = []
     for name in names:
         d = _scenario_world(name, trace_len, min(max_pages,
                                                  MULTITENANT_MAX_PAGES))
+        # one plan (= one run_sweep) PER world: MT lanes are segmented on
+        # that world's switch schedule, so batching all scenarios together
+        # would pad every lane to the union (n_segments, seg_len) grid —
+        # the smoke tier paid ~3x padded steps for the mixed batch
+        plan = SweepPlan()
         for policy in ("flush", "tag"):
             _add_suite(
                 plan, d.world, d.trace, f"{name}::{policy}",
@@ -370,9 +380,7 @@ def bench_multitenant(trace_len=120_000, quick=True,
                 k_hist=d.meta["contiguity_histogram"],
                 transform=lambda s, p=policy: dataclasses.replace(
                     s, ctx_policy=p))
-    res = plan.run(backend=backend)
-    rows = []
-    for name in names:
+        res = plan.run(backend=backend)
         for policy in ("flush", "tag"):
             cols = res[f"{name}::{policy}"]
             base = cols["Base"].walks
@@ -383,6 +391,48 @@ def bench_multitenant(trace_len=120_000, quick=True,
             rows.append({"scenario": name, "policy": policy,
                          "metric": "shootdowns",
                          **{k: v.shootdowns for k, v in cols.items()}})
+    return rows
+
+
+def bench_accelerator(trace_len=120_000, quick=True,
+                      max_pages=MAX_PAGES_DEFAULT, backend="auto"):
+    """Accelerator-scale translation: the three accelerator-lineage kinds
+    against the paper's best CPU-scale scheme on concurrency-diluted
+    gather streams.
+
+    Every registered ``accelerator`` scenario (the kv-gather DMA recording
+    interleaved as 64/256/1024 concurrent streams; see
+    :mod:`repro.scenarios.accelerator`) is swept with Base, |K|=3 Aligned
+    (Algorithm 3 over the scenario's contiguity histogram — the histogram
+    is concurrency-invariant, so K is identical across rows), and the
+    three accelerator-lineage methods: Subregion (bitmap windows),
+    Cache-TLB (cache-backed reach), Dead-Protect (dead-fill bypass).  Two
+    rows per scenario: relative misses (Base = 1.0) and translation
+    cycles per access — cache-backed reach trades walks for slower side
+    hits, so the two metrics deliberately disagree.
+    """
+    names = tuple(sc.name for sc in list_scenarios("accelerator"))
+    plan = SweepPlan()
+    for name in names:
+        d = _scenario_world(name, trace_len, max_pages)
+        m, tr = d.mapping, d.trace
+        plan.add(base_spec(), m, tr, name, "Base")
+        plan.add(kaligned_for_histogram(d.meta["contiguity_histogram"],
+                                        psi=3, theta=1.0),
+                 m, tr, name, "|K|=3")
+        plan.add(subregion_spec(), m, tr, name, "Subregion")
+        plan.add(cache_tlb_spec(), m, tr, name, "Cache-TLB")
+        plan.add(dead_protect_spec(), m, tr, name, "Dead-Protect")
+    res = plan.run(backend=backend)
+    rows = []
+    for name in names:
+        cols = res[name]
+        base = cols["Base"].walks
+        rows.append({"scenario": name, "metric": "rel_misses",
+                     **{k: round(v.walks / max(base, 1), 4)
+                        for k, v in cols.items()}})
+        rows.append({"scenario": name, "metric": "cycles_per_access",
+                     **{k: round(v.cpi, 3) for k, v in cols.items()}})
     return rows
 
 

@@ -1,4 +1,4 @@
-"""Markdown link checker for the docs CI job.
+"""Markdown link + methods-reference checker for the docs CI job.
 
 Walks every tracked ``*.md`` file and verifies that relative link targets
 exist in the working tree.  ``http(s)``/``mailto`` links are skipped (CI
@@ -6,7 +6,13 @@ must not depend on the network); ``#Lnn``/anchor fragments are stripped
 before the existence check, so ``file.py#L123``-style references stay
 checkable as files.
 
-Exit code 1 with a listing when any link is broken.
+Additionally enforces that ``docs/methods.md`` documents EVERY MethodSpec
+kind registered in ``src/repro/core/simulator.py`` (the ``KINDS`` tuple,
+parsed textually so the check needs no jax import): adding a kind without
+documenting its entry format and semantics fails CI.
+
+Exit code 1 with a listing when any link is broken or any kind is
+undocumented.
 
     python scripts/check_docs_links.py [root]
 """
@@ -43,6 +49,37 @@ def md_files(root: str):
             yield os.path.join(root, name)
 
 
+def registered_kinds(root: str):
+    """The simulator's KINDS tuple, read textually (no jax import)."""
+    sim = os.path.join(root, "src", "repro", "core", "simulator.py")
+    with open(sim, encoding="utf-8") as f:
+        text = f.read()
+    kinds = []
+    for name in ("ACCEL_KINDS", "KINDS"):
+        m = re.search(rf"^{name}\s*(?::[^=]+)?=\s*\(([^)]*)\)", text,
+                      re.MULTILINE)
+        assert m, f"cannot locate {name} in simulator.py"
+        kinds.extend(re.findall(r'"([^"]+)"', m.group(1)))
+    # KINDS is written "(...classic...) + ACCEL_KINDS"; the paren capture
+    # holds only the classic literals and the ACCEL_KINDS pass collected
+    # the rest — dedup defensively, keep order
+    seen = set()
+    return [k for k in kinds if not (k in seen or seen.add(k))]
+
+
+def check_methods_doc(root: str) -> list:
+    """Every registered kind must appear as ``kind: `<name>``` in
+    docs/methods.md — the complete-methods-reference contract."""
+    doc = os.path.join(root, "docs", "methods.md")
+    if not os.path.exists(doc):
+        return ["docs/methods.md missing"]
+    with open(doc, encoding="utf-8") as f:
+        text = f.read()
+    return [f"docs/methods.md does not document kind `{k}`"
+            for k in registered_kinds(root)
+            if f"`{k}`" not in text]
+
+
 def check(root: str) -> int:
     broken = []
     n_links = 0
@@ -63,9 +100,14 @@ def check(root: str) -> int:
     rel = os.path.relpath
     for md, target in broken:
         print(f"BROKEN  {rel(md, root)} -> {target}", file=sys.stderr)
+    undocumented = check_methods_doc(root)
+    for msg in undocumented:
+        print(f"UNDOCUMENTED  {msg}", file=sys.stderr)
+    kinds = registered_kinds(root)
     print(f"checked {n_links} relative links in docs; "
-          f"{len(broken)} broken")
-    return 1 if broken else 0
+          f"{len(broken)} broken; {len(kinds)} method kinds, "
+          f"{len(undocumented)} undocumented")
+    return 1 if broken or undocumented else 0
 
 
 if __name__ == "__main__":

@@ -98,7 +98,7 @@ def render_dryrun(final_dir, base_dir=None):
 
 
 SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios",
-                     "tlb_dynamic", "tlb_multitenant")
+                     "tlb_dynamic", "tlb_multitenant", "tlb_accelerator")
 
 
 def _md_cell(v) -> str:
@@ -182,6 +182,23 @@ def render_tlb(path):
               " SAME policy; `shootdowns` rows count flushed/invalidated"
               " entries — see `docs/scenarios.md`.\n")
         _md_table(mt)
+
+    acc = sections.get("tlb_accelerator", {}).get("rows")
+    if acc:
+        print("## Accelerator-scale translation: beyond the paper's"
+              " roster\n")
+        print("The kv-gather DMA recording interleaved as 64/256/1024"
+              " concurrent streams sharing one TLB (`accel-gather-x*`),"
+              " swept with Base, |K|=3 Aligned and the three"
+              " accelerator-lineage methods — Subregion (bitmap windows),"
+              " Cache-TLB (cache-backed reach), Dead-Protect (dead-fill"
+              " bypass); see `docs/methods.md` for the method semantics"
+              " and `docs/scenarios.md` for the scenario family."
+              "  `rel_misses` rows are walks relative to Base;"
+              " `cycles_per_access` rows show the latency trade — a"
+              " cache-backed hit is cheaper than a walk but slower than"
+              " any on-chip hit, so the two metrics can disagree.\n")
+        _md_table(acc)
 
 
 def main():

@@ -29,8 +29,9 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,  # noqa: E402
-                                  colt_spec, kaligned_spec, rmm_spec,
+from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,  # noqa: E402
+                                  cluster_spec, colt_spec, dead_protect_spec,
+                                  kaligned_spec, rmm_spec, subregion_spec,
                                   thp_spec)
 from repro.core.page_table import (build_multitenant_mapping,  # noqa: E402
                                    make_mapping)
@@ -135,6 +136,48 @@ def _golden_worlds():
         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
         m, tr,
         "same world, static probe order: k=6 then k=4 every time")
+
+    # subregion: one 16-page window holding TWO delta-runs plus a hole.
+    # The walk at vpn 0 installs an entry whose bitmap covers only the
+    # pages delta-equal with vpn 0 (0..9); vpn 12's different delta is a
+    # bitmap MISS -> second walk, second way, same set/tag.  vpn 32 is a
+    # singleton window (contig 1 -> classified as a regular hit on probe).
+    ppn = np.full(64, -1, np.int64)
+    ppn[0:10] = np.arange(10) + 40            # delta +40 run
+    ppn[12:16] = np.arange(4) + 200           # delta +188 run, same window
+    ppn[32] = 999                             # singleton window
+    m = make_mapping(ppn)
+    tr = [0, 1, 9, 12, 13, 32, 5, 15]
+    out["subregion-bitmap"] = (
+        subregion_spec(), m, tr,
+        "walk at vpn 0 installs window-0 entry with bitmap over vpns 0..9; "
+        "1,9,5 hit its bitmap; vpn 12's delta differs -> bitmap miss, "
+        "second walk fills a second way of the same window; the singleton "
+        "window at 32 probes as a regular (contig=1) hit")
+
+    # cache-tlb: the base evict-chain world; the 9th conflicting fill
+    # evicts vpn 0 from L2 INTO the cache-backed tier (Victima move), so
+    # the refault at vpn 0 hits the cache tier instead of walking
+    m = _identity(2048)
+    tr = [128 * i for i in range(9)] + [0]
+    out["cache-tlb-victima"] = (
+        cache_tlb_spec(), m, tr,
+        "same evict chain as base-evict-chain, but the L2 victim (vpn 0) "
+        "drops into the cache-backed tier; the 10th access side-hits it "
+        "at L2-cache latency instead of walking")
+
+    # dead-protect: vpns 0,16,32,48,64 alias L1 set 0 (4-way) and all have
+    # dead-predictor counter 0 -> every first touch walks AND BYPASSES the
+    # L2 fill.  vpn 0's second touch (evicted from L1 by the chain) must
+    # walk AGAIN — its first fill was bypassed — and this time (ctr=1)
+    # fills; vpn 0's third touch hits the L1 refill.
+    m = _identity(2048)
+    tr = [0, 16, 32, 48, 64, 0, 16, 0]
+    out["dead-protect-bypass"] = (
+        dead_protect_spec(), m, tr,
+        "5 cold walks all bypass their L2 fill (ctr=0); the refaults at "
+        "vpns 0 and 16 walk a second time and fill under ctr=1; the final "
+        "access hits the refill")
 
     # multi-tenant, both policies: tenants A (contiguous) and B (stride-2)
     # alternate, then tenant C RECYCLES tenant A's ASID.  Under flush every

@@ -56,8 +56,9 @@ TIERS = {"xla": "smoke", "pallas": "smoke-micro"}
 _MICRO_SWEEP = r"""
 import numpy as np
 from repro.core import demand_mapping, generate_trace
-from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
-                                  colt_spec, kaligned_spec, rmm_spec,
+from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,
+                                  cluster_spec, colt_spec, dead_protect_spec,
+                                  kaligned_spec, rmm_spec, subregion_spec,
                                   thp_spec)
 from repro.core.page_table import MappingEvent, build_dynamic_mapping
 from repro.core.sweep import SweepCell, run_sweep
@@ -71,7 +72,8 @@ dyn = build_dynamic_mapping(
 dtr = np.random.default_rng(3).integers(0, 512, size=256).astype(np.int64)
 specs = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
          anchor_spec(6), kaligned_spec([9, 6, 4]),
-         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
+         subregion_spec(), cache_tlb_spec(), dead_protect_spec()]
 cells = [SweepCell(s, m, tr) for s in specs]
 cells += [SweepCell(s, dyn, dtr) for s in specs]
 sweep = run_sweep(cells, backend="pallas")

@@ -16,7 +16,7 @@ import numpy as np
 
 from .determine_k import determine_k
 from .page_table import Mapping, contiguity_histogram
-from .simulator import MethodSpec, SimResult, run_method
+from .simulator import SUBR_BITS, MethodSpec, SimResult, run_method
 
 L2_SETS_8WAY = 128  # 1024 entries / 8 ways
 
@@ -48,6 +48,29 @@ def anchor_spec(distance_bits: int) -> MethodSpec:
     """Anchor with anchor distance 2**distance_bits [Park et al., ISCA'17]."""
     return MethodSpec(name=f"Anchor(d=2^{distance_bits})", kind="anchor",
                       K=(distance_bits,), index_shift=distance_bits)
+
+
+def subregion_spec() -> MethodSpec:
+    """Subregion TLB: large-reach entries covering an aligned 16-page
+    memory subregion with a per-entry contiguity bitmap (the
+    high-throughput-processor lineage, arXiv 2110.08613).  Sets are
+    indexed by the subregion base, so one window maps to one set."""
+    return MethodSpec(name="Subregion", kind="subregion",
+                      index_shift=SUBR_BITS)
+
+
+def cache_tlb_spec() -> MethodSpec:
+    """Cache-backed TLB reach extension (Victima lineage, arXiv
+    2310.04158): evicted L2 entries drop into a large cache-resident
+    tier probed past an L1+L2 miss at L2-cache latency."""
+    return MethodSpec(name="Cache-TLB", kind="cache-tlb")
+
+
+def dead_protect_spec() -> MethodSpec:
+    """Dead-entry protection (GPU TLB lineage, arXiv 2606.00486): a
+    saturating-counter predictor bypasses L2 fills for pages never yet
+    re-referenced, protecting live entries from dead-on-arrival fills."""
+    return MethodSpec(name="Dead-Protect", kind="dead-protect")
 
 
 def kaligned_spec(K: Sequence[int], use_predictor: bool = True,

@@ -46,11 +46,13 @@ import numpy as np
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
                          cluster_bitmap, huge_page_backed,
                          next_pow2 as _next_pow2)
-from .simulator import (CLUS_SETS, CLUS_WAYS, HUGE, INVALID, L1_SETS, L1_WAYS,
-                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_CTX_SWITCH,
-                        LAT_EXTRA_PROBE, LAT_INVALIDATE, LAT_L2_REG,
-                        LAT_SHOOTDOWN, LAT_WALK, N_COV_SAMPLES, NEG, REGULAR,
-                        RMM_ENTRIES, MethodSpec, miss_chain_cycles)
+from .simulator import (CLUS_SETS, CLUS_WAYS, CTLB_SETS, CTLB_WAYS, DP_TABLE,
+                        HUGE, INVALID, KSUBR, L1_SETS, L1_WAYS,
+                        L1H_SETS, L1H_WAYS, LAT_COAL, LAT_CTLB,
+                        LAT_CTX_SWITCH, LAT_EXTRA_PROBE, LAT_INVALIDATE,
+                        LAT_L2_REG, LAT_SHOOTDOWN, LAT_WALK, N_COV_SAMPLES,
+                        NEG, REGULAR, RMM_ENTRIES, SUBR_PAGES, MethodSpec,
+                        miss_chain_cycles)
 
 BIG = 2**30  # victim score for padded ways: never evictable
 
@@ -77,11 +79,14 @@ FILL_REC_FLOOR = 32
 # filled under as its LAST field: probes require an ASID match (trivially
 # true on single-address-space worlds, where everything is ASID 0), and
 # the context-switch pass (:func:`switch_lane`) clears by it.
-TAG, KCLS, CONTIG, PPN, LRU, L2_ASID = 0, 1, 2, 3, 4, 5  # L2: [S, W, 6]
+TAG, KCLS, CONTIG, PPN, LRU, L2_ASID, AUX = 0, 1, 2, 3, 4, 5, 6  # [S, W, 7]
+# L2 AUX holds per-kind sidecar data: the subregion contiguity bitmap
+# (bit j = page tag+j shares the entry's VA->PA delta); 0 for other kinds.
 # L1/L1H: [sets, ways, 4] = tag, ppn, lru, asid
 # RMM:    [32, 5]         = start, len, ppn, lru, asid
 # CLUS:   [64, 5, 4]      = tag, bitmap, lru, asid
-# fill record: [P, 4]     = tag, k, contig, ppn      (one per world epoch)
+# CTLB:   [256, 8, 4]     = tag, ppn, lru, asid     (cache-backed tier)
+# fill record: [P, 5]     = tag, k, contig, ppn, aux (one per world epoch)
 # map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]  (ditto)
 # dirty record: [P+1]     = prefix sum of the epoch's dirty-vpn bitmap
 # counters: [9] = l1_hits, reg_hits, coal_hits, walks, probes, pred_correct,
@@ -97,7 +102,7 @@ N_COUNTERS = 9
 # change.
 STEP_KEYS = ("kvals", "use_pred", "is_colt", "is_thp", "has_rmm",
              "has_cluster", "set_mask", "n_ways", "k_hat", "miss_chain",
-             "sample_every")
+             "sample_every", "is_subr", "has_ctlb", "use_dead")
 
 
 TRACE_LINEAR_BUCKET = 1 << 14
@@ -176,12 +181,15 @@ def _fill_profile_key(spec: MethodSpec):
         return ("ka", spec.K)
     if spec.kind in ("colt", "thp"):
         return (spec.kind,)
+    if spec.kind == "subregion":
+        return ("subr",)
     return ("reg",)
 
 
 def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
-    """[P, 4] int32 fill record (tag, k, contig, ppn): what Algorithm 1 /
-    COLT / THP / the regular policy would install on a walk at each vpn."""
+    """[P, 5] int32 fill record (tag, k, contig, ppn, aux): what
+    Algorithm 1 / COLT / THP / the subregion policy / the regular policy
+    would install on a walk at each vpn."""
     n = m.n_pages
     vpn = np.arange(n, dtype=np.int64)
     ppn = m.ppn
@@ -195,6 +203,7 @@ def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
     kcls = np.full(n, REGULAR, np.int64)
     contig = np.ones(n, np.int64)
     fppn = ppn.copy()
+    aux = np.zeros(n, np.int64)
     if key[0] == "ka":
         chosen = np.zeros(n, bool)
         for k in key[1]:                    # descending; first cover wins
@@ -220,12 +229,31 @@ def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
         kcls = np.where(huge, HUGE, REGULAR)
         contig = np.where(huge, 512, 1)
         fppn = ppn[np.clip(np.where(huge, hv << 9, vpn), 0, n - 1)]
+    elif key[0] == "subr":
+        # subregion entries: one entry covers the aligned SUBR_PAGES
+        # window around vpn; bit j of the bitmap says page base+j shares
+        # this vpn's VA->PA delta (so base_ppn + j translates it).
+        base = vpn & ~np.int64(SUBR_PAGES - 1)
+        delta = ppn - vpn
+        bitmap = np.zeros(n, np.int64)
+        for j in range(SUBR_PAGES):
+            pj = np.clip(base + j, 0, n - 1)
+            ok = (base + j < n) & (ppn[pj] >= 0) & (ppn[pj] - pj == delta)
+            bitmap |= ok.astype(np.int64) << j
+        mapped = ppn >= 0
+        popc = sum((bitmap >> j) & 1 for j in range(SUBR_PAGES))
+        tag = np.where(mapped, base, tag)
+        kcls = np.where(mapped, KSUBR, kcls)
+        contig = np.where(mapped, popc, contig)
+        fppn = np.where(mapped, ppn - (vpn - base), fppn)
+        aux = np.where(mapped, bitmap, 0)
 
-    rec = np.zeros((P, 4), np.int32)
+    rec = np.zeros((P, 5), np.int32)
     rec[:n, 0] = tag
     rec[:n, 1] = kcls
     rec[:n, 2] = contig
     rec[:n, 3] = fppn
+    rec[:n, 4] = aux
     rec[n:, 1] = REGULAR
     return rec
 
@@ -377,6 +405,8 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
 
     lanes = dict(
         is_colt=np.zeros(L, bool), is_thp=np.zeros(L, bool),
+        is_subr=np.zeros(L, bool), has_ctlb=np.zeros(L, bool),
+        use_dead=np.zeros(L, bool),
         has_rmm=np.zeros(L, bool),
         has_cluster=np.zeros(L, bool), use_pred=np.zeros(L, bool),
         kvals=np.full((L, maxk), -1, np.int32),
@@ -402,6 +432,9 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
         key = _fill_profile_key(s)
         lanes["is_colt"][i] = s.kind == "colt"
         lanes["is_thp"][i] = s.kind == "thp"
+        lanes["is_subr"][i] = s.kind == "subregion"
+        lanes["has_ctlb"][i] = s.kind == "cache-tlb"
+        lanes["use_dead"][i] = s.kind == "dead-protect"
         lanes["has_rmm"][i] = s.side == "rmm"
         lanes["has_cluster"][i] = s.side == "cluster"
         lanes["use_pred"][i] = s.use_predictor
@@ -456,16 +489,23 @@ def needs_switch_pass(lanes) -> bool:
 
 
 def init_batched_state(L: int, max_sets: int, max_ways: int, pred0,
-                       asid0=None):
+                       asid0=None, *, with_ctlb: bool = False,
+                       with_dp: bool = False):
+    """``with_ctlb``/``with_dp`` size the cache-backed tier and the
+    dead-entry counter table: full geometry when some lane in the batch
+    is ``cache-tlb``/``dead-protect``, degenerate ``(1, 1)``-style arrays
+    otherwise (the step indexes them shape-generically and its lane flags
+    gate every read/write, so absent kinds pay one inert element)."""
     def packed(shape, init_tag):
         a = np.zeros(shape, np.int32)
         a[..., 0] = init_tag
         return a
 
-    l2 = np.zeros((L, max_sets, max_ways, 6), np.int32)
+    l2 = np.zeros((L, max_sets, max_ways, 7), np.int32)
     l2[..., TAG] = -1
     l2[..., KCLS] = INVALID
     l2[..., PPN] = -1
+    cs, cw = (CTLB_SETS, CTLB_WAYS) if with_ctlb else (1, 1)
     return dict(
         t=np.zeros(L, np.int32),
         l1=packed((L, L1_SETS, L1_WAYS, 4), -1),
@@ -473,6 +513,8 @@ def init_batched_state(L: int, max_sets: int, max_ways: int, pred0,
         l2=l2,
         rmm=packed((L, RMM_ENTRIES, 5), -1),
         clus=packed((L, CLUS_SETS, CLUS_WAYS, 4), -1),
+        ctlb=packed((L, cs, cw, 4), -1),
+        dp=np.zeros((L, DP_TABLE if with_dp else 1), np.int32),
         pred=np.asarray(pred0, np.int32).copy(),
         asid=(np.zeros(L, np.int32) if asid0 is None
               else np.asarray(asid0, np.int32).copy()),
@@ -513,8 +555,10 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     kvals = lane["kvals"]
     use_pred = lane["use_pred"]
     is_colt, is_thp = lane["is_colt"], lane["is_thp"]
-    is_generic = ~is_colt & ~is_thp
+    is_subr = lane["is_subr"]
+    is_generic = ~is_colt & ~is_thp & ~is_subr
     has_rmm, has_cluster = lane["has_rmm"], lane["has_cluster"]
+    has_ctlb, use_dead = lane["has_ctlb"], lane["use_dead"]
     set_mask = lane["set_mask"]
     k_hat = lane["k_hat"]
     n_ways_total = st["l2"].shape[1]
@@ -536,8 +580,8 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
 
     t = st["t"]
     ppn_true, rs_v, rl_v, rmm_fill_ppn = (mrec[0], mrec[1], mrec[2], mrec[3])
-    fill_tag, fill_k, fill_contig, fill_ppn = (frec[0], frec[1], frec[2],
-                                               frec[3])
+    fill_tag, fill_k, fill_contig, fill_ppn, fill_aux = (
+        frec[0], frec[1], frec[2], frec[3], frec[4])
     new = dict(st)
 
     cur = st["asid"]
@@ -560,7 +604,7 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
 
     # ---------------- L2 probes (all kinds, selected) ---------------
     s2 = (vpn >> k_hat) & set_mask
-    row = st["l2"][s2]                  # [W, 6]
+    row = st["l2"][s2]                  # [W, 7]
     tags, kcls, contig, pbase = (row[:, TAG], row[:, KCLS],
                                  row[:, CONTIG], row[:, PPN])
     valid = (kcls != INVALID) & (row[:, L2_ASID] == cur)
@@ -588,6 +632,18 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
                         row_h[hw, PPN] + (vpn - (hv << 9)))
     thp_touch_ways = jnp.where(reg_ways.any(), reg_ways, huge_ways)
     thp_touch_set = jnp.where(reg_ways.any(), s2, s2h)
+
+    # subregion branch: one entry covers the aligned SUBR_PAGES window;
+    # the AUX bitmap says which offsets share the entry's VA->PA delta
+    sub_base = vpn & ~jnp.int32(SUBR_PAGES - 1)
+    sub_off = vpn & jnp.int32(SUBR_PAGES - 1)
+    sub_cover = valid & (kcls == KSUBR) & (tags == sub_base) & \
+        (((row[:, AUX] >> sub_off) & 1) == 1)
+    subr_hit = sub_cover.any()
+    subr_way = jnp.argmax(sub_cover)
+    subr_reg = subr_hit & (contig[subr_way] == 1)
+    subr_coal = subr_hit & (contig[subr_way] > 1)
+    subr_ppn = pbase[subr_way] + sub_off
 
     # generic branch: regular probe + padded aligned-probe chain
     gen_reg = reg_ways.any()
@@ -617,20 +673,24 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
 
     # per-lane branch selection
     reg_hit = jnp.where(is_colt, colt_reg,
-                        jnp.where(is_thp, thp_reg, gen_reg))
-    coal_hit = jnp.where(is_generic, gen_coal, colt_coal & is_colt)
+                        jnp.where(is_thp, thp_reg,
+                                  jnp.where(is_subr, subr_reg, gen_reg)))
+    coal_hit = jnp.where(is_generic, gen_coal,
+                         (colt_coal & is_colt) | (subr_coal & is_subr))
     l2_hit = reg_hit | coal_hit
     l2_ppn_val = jnp.where(
         is_colt, colt_ppn,
         jnp.where(is_thp, thp_ppn,
-                  jnp.where(gen_reg, pbase[rw], coal_ppn)))
+                  jnp.where(is_subr, subr_ppn,
+                            jnp.where(gen_reg, pbase[rw], coal_ppn))))
     pred_ok = jnp.where(use_pred & gen_coal
                         & (hit_k == first_probe_k), 1, 0)
     touch_set = jnp.where(is_thp, thp_touch_set, s2)
     tw = jnp.where(
         is_colt, colt_way,
         jnp.where(is_thp, jnp.argmax(thp_touch_ways),
-                  jnp.where(gen_reg, rw, coal_way)))
+                  jnp.where(is_subr, subr_way,
+                            jnp.where(gen_reg, rw, coal_way))))
     probes_used = jnp.where(is_generic, probes_used, 0)
 
     # ---------------- side structures (gated) -----------------------
@@ -648,8 +708,17 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
     c_ways = (crow[:, 0] == cwd) & (bit == 1) & (crow[:, 3] == cur)
     cl_hit = has_cluster & c_ways.any()
 
-    side_hit = rmm_hit | cl_hit
-    side_ppn = jnp.where(rmm_hit, rmm_ppn_val, ppn_true)
+    # cache-backed tier (Victima lineage): probed only past an L1+L2 miss
+    ctlb_sets = st["ctlb"].shape[0]     # degenerate (1, 1) when unused
+    sct = vpn & jnp.int32(ctlb_sets - 1)
+    trow = st["ctlb"][sct]
+    t_ways = (trow[:, 0] == vpn) & (trow[:, 3] == cur)
+    ctlb_hit = has_ctlb & ~l1_served & ~l2_hit & t_ways.any()
+    ctlb_way = jnp.argmax(t_ways)
+
+    side_hit = rmm_hit | cl_hit | ctlb_hit
+    side_ppn = jnp.where(rmm_hit, rmm_ppn_val,
+                         jnp.where(ctlb_hit, trow[ctlb_way, 1], ppn_true))
 
     hit_any = l1_served | l2_hit | side_hit
     walk = ~hit_any
@@ -662,11 +731,22 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
                   jnp.where(coal_hit,
                             LAT_COAL + LAT_EXTRA_PROBE *
                             jnp.maximum(probes_used - 1, 0),
-                            jnp.where(side_hit, LAT_COAL,
+                            jnp.where(side_hit,
+                                      jnp.where(ctlb_hit, LAT_CTLB,
+                                                LAT_COAL),
                                       lane["miss_chain"]
                                       + LAT_WALK))))
 
     # ---------------- L2 fill (precomputed record; LRU victim) ------
+    # dead-protect: a walk whose vpn's counter is still 0 (never
+    # re-referenced) bypasses the L2 fill; the counter saturates at 3
+    dp_n = st["dp"].shape[0]            # degenerate (1,) when unused
+    dp_idx = vpn & jnp.int32(dp_n - 1)
+    dp_ctr = st["dp"][dp_idx]
+    dp_bypass = use_dead & walk & (dp_ctr == 0)
+    new["dp"] = _cond_set(st["dp"], dp_idx, jnp.minimum(dp_ctr + 1, 3),
+                          use_dead & wr)
+
     served_huge = is_thp & (fill_k == HUGE)
     fill_set = jnp.where(served_huge, s2h, s2)
     frow = st["l2"][fill_set]
@@ -676,13 +756,30 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
                                 jnp.int32(NEG)),
                       jnp.int32(BIG))
     victim = jnp.argmin(score)
+    fill_wr = wr & ~dp_bypass
     evicted_contig = jnp.where(valid_row[victim],
                                frow[victim, CONTIG], 0)
-    fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t, cur])
-    l2n = _cond_set(st["l2"], (fill_set, victim), fill_vec, wr)
+    fill_vec = jnp.stack([fill_tag, fill_k, fill_contig, fill_ppn, t, cur,
+                          fill_aux])
+    l2n = _cond_set(st["l2"], (fill_set, victim), fill_vec, fill_wr)
     new["l2"] = _cond_set(l2n, (touch_set, tw, LRU), t,
                           l2_hit & ~walk & ~l1_served & active)
-    cov_delta = jnp.where(wr, fill_contig - evicted_contig, 0)
+    cov_delta = jnp.where(fill_wr, fill_contig - evicted_contig, 0)
+
+    # Victima move: a valid L2 victim drops into the cache-backed tier
+    mv = fill_wr & has_ctlb & valid_row[victim]
+    ev_tag = frow[victim, TAG]
+    sct_v = ev_tag & jnp.int32(ctlb_sets - 1)
+    vrow_t = st["ctlb"][sct_v][:, 0] >= 0
+    victim_t = jnp.argmin(jnp.where(vrow_t, st["ctlb"][sct_v][:, 2],
+                                    jnp.int32(NEG)))
+    ctlb_vec = jnp.stack([ev_tag, frow[victim, PPN], t,
+                          frow[victim, L2_ASID]])
+    ctn = _cond_set(st["ctlb"], (sct_v, victim_t), ctlb_vec, mv)
+    new["ctlb"] = _cond_set(ctn, (sct, ctlb_way, 2), t,
+                            ctlb_hit & active)
+    cov_delta = cov_delta + jnp.where(
+        mv, 1 - vrow_t[victim_t].astype(jnp.int32), 0)
 
     # ---------------- side fills (gated) ----------------------------
     rmm_len = st["rmm"][:, 1]
@@ -738,7 +835,9 @@ def step_access(lane, st, vpn, mrec, frec, bm, active):
          & act).astype(jnp.int32),
         (walk & act).astype(jnp.int32),
         jnp.where(coal_hit & ~l1_served & act, probes_used, 0),
-        jnp.where(~l1_served & act, pred_ok, 0),
+        # dead-protect rides C_PRED: bypassed fills count as predictions
+        jnp.where(~l1_served & act, pred_ok, 0)
+        + (dp_bypass & act).astype(jnp.int32),
         jnp.where(act, cyc, 0),
         cov_delta,
         jnp.int32(0),
@@ -764,7 +863,7 @@ def shoot_lane(lane, st, dc, do):
     dirty vpn of the entered epoch (``dc`` = the epoch's dirty-bitmap
     prefix sums, ``[P+1]``), charge one shootdown plus a per-entry
     invalidation, and release the dropped reach."""
-    is_thp = lane["is_thp"]
+    is_thp, is_subr = lane["is_thp"], lane["is_subr"]
     Pn = dc.shape[0] - 1
 
     def rng_dirty(lo, ln):
@@ -777,11 +876,17 @@ def shoot_lane(lane, st, dc, do):
     tagv, kv, cgv = l2[..., TAG], l2[..., KCLS], l2[..., CONTIG]
     # k == HUGE is a 2MB entry (tag = vpn >> 9) only on THP lanes;
     # K-bit Aligned lanes use k = 9 as a plain alignment class.
+    # Subregion entries cover their whole SUBR_PAGES window (conservative:
+    # a dirty page under a cleared bitmap bit still drops the entry — a
+    # cleared bit can only miss, never serve stale).
     huge2 = is_thp & (kv == HUGE)
+    subr2 = is_subr & (kv == KSUBR)
     stale2 = (kv != INVALID) & do & rng_dirty(
         jnp.maximum(jnp.where(huge2, tagv << 9, tagv), 0),
         jnp.where(huge2, 512,
-                  jnp.where(kv == REGULAR, 1, jnp.maximum(cgv, 1))))
+                  jnp.where(subr2, SUBR_PAGES,
+                            jnp.where(kv == REGULAR, 1,
+                                      jnp.maximum(cgv, 1)))))
     new["l2"] = l2.at[..., KCLS].set(jnp.where(stale2, INVALID, kv))
     n_inv = stale2.sum(dtype=jnp.int32)
     cov_loss = jnp.where(stale2, cgv, 0).sum(dtype=jnp.int32)
@@ -813,6 +918,15 @@ def shoot_lane(lane, st, dc, do):
     stalec = (cb != 0) & do & rng_dirty(jnp.maximum(ct, 0) << 3, 8)
     new["clus"] = cl.at[..., 1].set(jnp.where(stalec, 0, cb))
     n_inv = n_inv + stalec.sum(dtype=jnp.int32)
+
+    # cache-backed tier holds 4KB translations: tag-range-1 stale pass
+    # (the dead-entry counter table holds predictions, nothing to drop)
+    ctb = st["ctlb"]
+    tt = ctb[..., 0]
+    stalet = (tt >= 0) & do & rng_dirty(jnp.maximum(tt, 0), 1)
+    new["ctlb"] = ctb.at[..., 0].set(jnp.where(stalet, -1, tt))
+    n_inv = n_inv + stalet.sum(dtype=jnp.int32)
+    cov_loss = cov_loss + stalet.sum(dtype=jnp.int32)
 
     cnt = st["counters"]
     add = (jnp.zeros_like(cnt)
@@ -877,6 +991,15 @@ def switch_lane(st, new_asid, do_switch, flush_all, flush_asid):
     kc = kill(cb != 0, cl[..., 3])
     new["clus"] = cl.at[..., 1].set(jnp.where(kc, 0, cb))
     n_inv = n_inv + kc.sum(dtype=jnp.int32)
+
+    # cache-backed tier is ASID-tagged like everything else; the
+    # dead-entry counter table is a predictor and survives switches
+    ctb = st["ctlb"]
+    tt = ctb[..., 0]
+    kt = kill(tt >= 0, ctb[..., 3])
+    new["ctlb"] = ctb.at[..., 0].set(jnp.where(kt, -1, tt))
+    n_inv = n_inv + kt.sum(dtype=jnp.int32)
+    cov_loss = cov_loss + kt.sum(dtype=jnp.int32)
 
     new["asid"] = new_asid
     cnt = st["counters"]

@@ -50,8 +50,27 @@ from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
 
 REGULAR = -1
 HUGE = 9            # k-class used for 2MB entries (2^9 pages)
+KSUBR = 10          # k-class used for subregion entries (bitmapped window)
 INVALID = -2
 NEG = -(2 ** 30)
+
+# Subregion TLB (arXiv 2110.08613): one entry covers a fixed-size aligned
+# memory subregion with a per-entry contiguity bitmap — bit j serves page
+# ``base + j`` iff it is mapped with the same VA→PA delta as the fill page.
+SUBR_BITS = 4
+SUBR_PAGES = 1 << SUBR_BITS
+
+# L2-cache-backed TLB tier (Victima, arXiv 2310.04158): evicted L2 TLB
+# entries are victim-inserted into repurposed cache capacity — a much
+# larger but slower tier probed after the on-chip structures miss.
+CTLB_SETS, CTLB_WAYS = 256, 8
+LAT_CTLB = 24
+
+# Dead-entry protection (GPU TLB lineage, arXiv 2606.00486): a table of
+# saturating reuse counters; a fill whose counter is still zero is
+# predicted dead-on-arrival and bypasses the L2 (the walk is paid, the
+# capacity is not).  Counters learn from repeated walks to the same index.
+DP_TABLE = 256
 
 # Latencies (Table 2)
 LAT_L2_REG = 7
@@ -85,13 +104,23 @@ L1H_SETS, L1H_WAYS = 8, 4      # 32-entry 4-way 2MB array
 RMM_ENTRIES = 32
 CLUS_SETS, CLUS_WAYS = 64, 5   # 320-entry 5-way clustered TLB
 
+# Accelerator-lineage kinds run through the segment oracle and the batched
+# lane program only; ``run_method`` routes them past the legacy jitted
+# ``_simulate`` (which covers the original paper roster).
+ACCEL_KINDS = ("subregion", "cache-tlb", "dead-protect")
+
+#: every registered MethodSpec kind — docs/methods.md must document each
+#: one (enforced by scripts/check_docs_links.py).
+KINDS = ("base", "thp", "colt", "cluster", "rmm", "anchor",
+         "kaligned") + ACCEL_KINDS
+
 
 @dataclasses.dataclass(frozen=True)
 class MethodSpec:
     """Static (hashable) method configuration."""
 
     name: str
-    kind: str                      # base|thp|colt|cluster|rmm|anchor|kaligned
+    kind: str                      # one of KINDS
     K: Tuple[int, ...] = ()        # alignment classes, descending
     l2_sets: int = 128
     l2_ways: int = 8
@@ -106,6 +135,7 @@ class MethodSpec:
     ctx_policy: str = "flush"
 
     def __post_init__(self):
+        assert self.kind in KINDS, self.kind
         assert tuple(sorted(self.K, reverse=True)) == tuple(self.K)
         assert self.ctx_policy in ("flush", "tag"), self.ctx_policy
 
@@ -142,7 +172,9 @@ def miss_chain_cycles(spec: MethodSpec) -> int:
     """Cycles burned on the failed lookup chain before a walk (§3.5)."""
     if spec.K and spec.kind in ("kaligned", "anchor"):
         return LAT_COAL + LAT_EXTRA_PROBE * (len(spec.K) - 1)
-    if spec.kind == "colt" or spec.side is not None:
+    if spec.kind == "cache-tlb":
+        return LAT_CTLB                  # the cache-backed tier probes last
+    if spec.kind in ("colt", "subregion") or spec.side is not None:
         return LAT_COAL
     return LAT_L2_REG
 
@@ -511,6 +543,10 @@ def _simulate(spec: MethodSpec, ppn_map, run_start, run_len, huge_ok,
 
 def run_method(spec: MethodSpec, m: Mapping, trace: np.ndarray) -> SimResult:
     """Simulate one method over (mapping, trace) and collect paper metrics."""
+    if spec.kind in ACCEL_KINDS:
+        # accelerator-lineage kinds live in the segment oracle (which treats
+        # a static mapping as a single-segment world), not in ``_simulate``
+        return run_method_dynamic(spec, m, trace)
     ppn_map = jnp.asarray(m.ppn, jnp.int32)
     rs = jnp.asarray(m.run_start, jnp.int32)
     rl = jnp.asarray(m.run_len, jnp.int32)
@@ -653,6 +689,9 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
     is_thp = spec.kind == "thp"
     has_rmm = spec.side == "rmm"
     has_clus = spec.side == "cluster"
+    is_subr = spec.kind == "subregion"
+    has_ctlb = spec.kind == "cache-tlb"
+    use_dead = spec.kind == "dead-protect"
 
     # -- state ------------------------------------------------------------
     l1_tag = np.full((L1_SETS, L1_WAYS), -1, np.int64)
@@ -669,6 +708,7 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
     l2_ppn = np.full((spec.l2_sets, spec.l2_ways), -1, np.int64)
     l2_lru = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
     l2_asid = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
+    l2_aux = np.zeros((spec.l2_sets, spec.l2_ways), np.int64)
     rmm_start = np.full(RMM_ENTRIES, -1, np.int64)
     rmm_len = np.zeros(RMM_ENTRIES, np.int64)
     rmm_ppn = np.full(RMM_ENTRIES, -1, np.int64)
@@ -678,6 +718,11 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
     cl_bm = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
     cl_lru = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
     cl_asid = np.zeros((CLUS_SETS, CLUS_WAYS), np.int64)
+    ctlb_tag = np.full((CTLB_SETS, CTLB_WAYS), -1, np.int64)
+    ctlb_ppn = np.full((CTLB_SETS, CTLB_WAYS), -1, np.int64)
+    ctlb_lru = np.zeros((CTLB_SETS, CTLB_WAYS), np.int64)
+    ctlb_asid = np.zeros((CTLB_SETS, CTLB_WAYS), np.int64)
+    dp_ctr = np.zeros(DP_TABLE, np.int64)
     pred = int(Ks[0]) if Ks else 0
     cur_asid = segs[0].asid
 
@@ -710,9 +755,14 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
         # is the window base vpn.
         huge2 = is_thp & (l2_k == HUGE)
         lo2 = np.where(huge2, l2_tag << 9, l2_tag)
+        # a subregion entry covers its whole aligned window: invalidation is
+        # conservative over [tag, tag + SUBR_PAGES) (a cleared bitmap bit is
+        # only ever a miss, never a stale translation, so over-invalidating
+        # is safe and keeps the range query uniform)
         ln2 = np.where(huge2, 512,
-                       np.where(l2_k == REGULAR, 1,
-                                np.maximum(l2_contig, 1)))
+                       np.where(is_subr & (l2_k == KSUBR), SUBR_PAGES,
+                                np.where(l2_k == REGULAR, 1,
+                                         np.maximum(l2_contig, 1))))
         stale2 = valid2 & rng_dirty(np.maximum(lo2, 0), ln2)
         n_inv += int(stale2.sum())
         cov_loss += int(l2_contig[stale2].sum())
@@ -740,6 +790,14 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
         stalec = vc & rng_dirty(np.maximum(cl_tag, 0) << 3, 8)
         n_inv += int(stalec.sum())
         cl_bm[stalec] = 0
+
+        vt = ctlb_tag >= 0
+        stalet = vt & rng_dirty(np.maximum(ctlb_tag, 0), 1)
+        n_inv += int(stalet.sum())
+        cov_loss += int(stalet.sum())
+        ctlb_tag[stalet] = -1
+        # the dead-entry counter table holds predictions, not translations:
+        # nothing to invalidate
 
         n_shoot += n_inv
         cycles += LAT_SHOOTDOWN + LAT_INVALIDATE * n_inv
@@ -781,6 +839,10 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
             kc = kill(cl_bm != 0, cl_asid)
             n_inv += int(kc.sum())
             cl_bm[kc] = 0
+            kt = kill(ctlb_tag >= 0, ctlb_asid)
+            n_inv += int(kt.sum())
+            cov -= int(kt.sum())
+            ctlb_tag[kt] = -1
             n_shoot += n_inv
         if seg.switch:
             cycles += LAT_CTX_SWITCH
@@ -805,6 +867,7 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
         frec = seg.fill[vpn]
         fill_tag, fill_k, fill_contig, fill_ppn = (int(frec[0]), int(frec[1]),
                                                    int(frec[2]), int(frec[3]))
+        fill_aux = int(frec[4])
 
         # ---------------- L1 ---------------------------------------------
         s1 = vpn & (L1_SETS - 1)
@@ -856,6 +919,19 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
                           else int(l2_ppn[s2h, hw]) + (vpn - (hv << 9)))
             touch_set = s2 if any_reg else s2h
             tw = rw if any_reg else hw
+        elif is_subr:
+            # subregion entry: tag is the aligned window base; the per-entry
+            # bitmap (AUX plane) says which window pages it serves
+            base = vpn & ~(SUBR_PAGES - 1)
+            off = vpn & (SUBR_PAGES - 1)
+            cover = valid & (kcls == KSUBR) & (tags == base) & \
+                (((l2_aux[s2] >> off) & 1) == 1)
+            l2h = bool(cover.any())
+            way = int(np.argmax(cover))
+            reg_hit = l2h and int(contig[way]) == 1
+            coal_hit = l2h and int(contig[way]) > 1
+            l2_ppn_val = int(pbase[way]) + off
+            touch_set, tw = s2, way
         else:
             reg_ways = (kcls == REGULAR) & (tags == vpn) & valid
             reg_hit = bool(reg_ways.any())
@@ -906,6 +982,15 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
             if bool(c_ways.any()):
                 side_hit = True
                 side_ppn = ppn_true
+        ctlb_hit = False
+        sct = vpn & (CTLB_SETS - 1)
+        ctlb_way = 0
+        if has_ctlb and not (l1_served or l2h):
+            t_ways = (ctlb_tag[sct] == vpn) & (ctlb_asid[sct] == cur_asid)
+            if bool(t_ways.any()):
+                side_hit = ctlb_hit = True
+                ctlb_way = int(np.argmax(t_ways))
+                side_ppn = int(ctlb_ppn[sct, ctlb_way])
 
         walk = not (l1_served or l2h or side_hit)
 
@@ -917,29 +1002,53 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
         elif coal_hit:
             cyc = LAT_COAL + LAT_EXTRA_PROBE * max(probes_used - 1, 0)
         elif side_hit:
-            cyc = LAT_COAL
+            cyc = LAT_CTLB if ctlb_hit else LAT_COAL
         else:
             cyc = miss_chain + LAT_WALK
 
         # ---------------- L2 fill ----------------------------------------
         served_huge = is_thp and fill_k == HUGE
+        dp_bypass = False
+        if use_dead and walk:
+            dp_idx = vpn & (DP_TABLE - 1)
+            dp_bypass = int(dp_ctr[dp_idx]) == 0   # never re-referenced yet
+            dp_ctr[dp_idx] = min(int(dp_ctr[dp_idx]) + 1, 3)
         evict = False
-        if walk:
+        if walk and not dp_bypass:
             fill_set = s2h if served_huge else s2
             valid_row = l2_k[fill_set] != INVALID
             score = np.where(valid_row, l2_lru[fill_set], NEG)
             victim = int(np.argmin(score))
             evict = bool(valid_row[victim])
             evicted = int(l2_contig[fill_set, victim]) if evict else 0
+            if has_ctlb and evict:
+                # Victima move: the evicted on-chip entry drops into the
+                # cache-backed tier instead of dying (its own LRU victim
+                # within the tag-indexed set pays the 1-page coverage loss)
+                ev_tag = int(l2_tag[fill_set, victim])
+                ev_ppn = int(l2_ppn[fill_set, victim])
+                ev_asid = int(l2_asid[fill_set, victim])
+                sct_v = ev_tag & (CTLB_SETS - 1)
+                vrow_t = ctlb_tag[sct_v] >= 0
+                victim_t = int(np.argmin(np.where(vrow_t, ctlb_lru[sct_v],
+                                                  NEG)))
+                cov += 1 - (1 if vrow_t[victim_t] else 0)
+                ctlb_tag[sct_v, victim_t] = ev_tag
+                ctlb_ppn[sct_v, victim_t] = ev_ppn
+                ctlb_lru[sct_v, victim_t] = t
+                ctlb_asid[sct_v, victim_t] = ev_asid
             l2_tag[fill_set, victim] = fill_tag
             l2_k[fill_set, victim] = fill_k
             l2_contig[fill_set, victim] = fill_contig
             l2_ppn[fill_set, victim] = fill_ppn
             l2_lru[fill_set, victim] = t
             l2_asid[fill_set, victim] = cur_asid
+            l2_aux[fill_set, victim] = fill_aux
             cov += fill_contig - evicted
         elif l2h and not l1_served:
             l2_lru[touch_set, tw] = t
+        if ctlb_hit:
+            ctlb_lru[sct, ctlb_way] = t
 
         # ---------------- side fills -------------------------------------
         if has_rmm:
@@ -1012,6 +1121,8 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
             n_probe += probes_used
         if not l1_served:
             n_pred += pred_ok
+        if dp_bypass:
+            n_pred += 1            # dead-protect: bypassed fills ride C_PRED
         cycles += cyc
         slot = min(t // sample_every, N_COV_SAMPLES - 1)
         if t % sample_every == sample_every - 1:

@@ -515,8 +515,10 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
         sub = [cells[i] for i in group]
         lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(
             sub, device_count=jax.local_device_count())
-        st0 = _init_batched_state(L, max_sets, max_ways, lanes["pred0"],
-                                  lanes["asid0"])
+        st0 = _init_batched_state(
+            L, max_sets, max_ways, lanes["pred0"], lanes["asid0"],
+            with_ctlb=any(c.spec.kind == "cache-tlb" for c in sub),
+            with_dp=any(c.spec.kind == "dead-protect" for c in sub))
         stF, ppns = _simulate_lanes(lanes, stacks, st0, seg_bounds,
                                     backend=backend, tb=tb)
         counters = np.asarray(stF["counters"])

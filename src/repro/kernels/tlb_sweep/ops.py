@@ -24,7 +24,7 @@ import numpy as np
 from ...core.lane_program import build_block_plan, needs_switch_pass
 from .tlb_sweep import N_PARAM_FIELDS, PARAM_KEYS, make_tlb_sweep_call
 
-_CALL_CACHE: Dict[Tuple[int, int], object] = {}
+_CALL_CACHE: Dict[Tuple[int, ...], object] = {}
 
 # The kernel unrolls the intra-block dependency chain in its body, so its
 # compile time scales with the block size; beyond ~8 steps the bigger body
@@ -73,9 +73,14 @@ def run_lanes_pallas(lanes, stacks, st0, seg_bounds, tb: int,
         trace[:, np.clip(plan.tpos, 0, T - 1)], dtype=np.int32)
 
     sets, ways = np.asarray(st0["l2"]).shape[1:3]
-    call = _CALL_CACHE.get((sets, ways))
+    # cache-backed-tier / dead-entry-table geometry rides along from the
+    # batched init (degenerate 1s when no lane uses them)
+    ctlb_sets, ctlb_ways = np.asarray(st0["ctlb"]).shape[1:3]
+    dp_n = np.asarray(st0["dp"]).shape[1]
+    geo = (sets, ways, ctlb_sets, ctlb_ways, dp_n)
+    call = _CALL_CACHE.get(geo)
     if call is None:
-        call = _CALL_CACHE[(sets, ways)] = make_tlb_sweep_call(sets, ways)
+        call = _CALL_CACHE[geo] = make_tlb_sweep_call(*geo)
 
     i32 = lambda a: np.asarray(a, np.int32)  # noqa: E731
     ppn_pad, counters, cov = call(

@@ -46,10 +46,11 @@ from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
 # exactly one place.
 PARAM_KEYS = ("is_colt", "is_thp", "has_rmm", "has_cluster", "use_pred",
               "set_mask", "n_ways", "k_hat", "miss_chain", "pred0",
-              "asid0", "t_real", "sample_every")
+              "asid0", "t_real", "sample_every", "is_subr", "has_ctlb",
+              "use_dead")
 (F_IS_COLT, F_IS_THP, F_HAS_RMM, F_HAS_CLUSTER, F_USE_PRED, F_SET_MASK,
  F_N_WAYS, F_K_HAT, F_MISS_CHAIN, F_PRED0, F_ASID0, F_T_REAL,
- F_SAMPLE_EVERY,
+ F_SAMPLE_EVERY, F_IS_SUBR, F_HAS_CTLB, F_USE_DEAD,
  ) = range(len(PARAM_KEYS))
 N_PARAM_FIELDS = len(PARAM_KEYS)
 
@@ -58,6 +59,8 @@ def _lane_dict(p, kvals):
     """Per-lane scalar dict consumed by step_access/shoot_lane."""
     return dict(
         is_colt=p[F_IS_COLT] == 1, is_thp=p[F_IS_THP] == 1,
+        is_subr=p[F_IS_SUBR] == 1, has_ctlb=p[F_HAS_CTLB] == 1,
+        use_dead=p[F_USE_DEAD] == 1,
         has_rmm=p[F_HAS_RMM] == 1, has_cluster=p[F_HAS_CLUSTER] == 1,
         use_pred=p[F_USE_PRED] == 1, set_mask=p[F_SET_MASK],
         n_ways=p[F_N_WAYS], k_hat=p[F_K_HAT], miss_chain=p[F_MISS_CHAIN],
@@ -75,7 +78,8 @@ def _tlb_sweep_kernel(
         # outputs
         ppn_ref, cnt_ref, cov_ref,
         # scratch: the lane's entire TLB state, resident across blocks
-        l1_ref, l1h_ref, l2_ref, rmm_ref, cl_ref, misc_ref,
+        l1_ref, l1h_ref, l2_ref, rmm_ref, cl_ref, ctlb_ref, dp_ref,
+        misc_ref,
         *, tb: int, with_switch: bool):
     b = pl.program_id(1)
     p = params_ref[0]
@@ -92,6 +96,8 @@ def _tlb_sweep_kernel(
                        .at[..., PPN].set(-1))
         rmm_ref[...] = jnp.zeros_like(rmm_ref).at[..., 0].set(-1)
         cl_ref[...] = jnp.zeros_like(cl_ref).at[..., 0].set(-1)
+        ctlb_ref[...] = jnp.zeros_like(ctlb_ref).at[..., 0].set(-1)
+        dp_ref[...] = jnp.zeros_like(dp_ref)
         misc_ref[0] = jnp.int32(0)            # t (active steps processed)
         misc_ref[1] = p[F_PRED0]              # alignment predictor
         misc_ref[2] = p[F_ASID0]              # live ASID
@@ -101,7 +107,8 @@ def _tlb_sweep_kernel(
     def read_state():
         return dict(t=misc_ref[0], pred=misc_ref[1], asid=misc_ref[2],
                     l1=l1_ref[...], l1h=l1h_ref[...], l2=l2_ref[...],
-                    rmm=rmm_ref[...], clus=cl_ref[...], counters=cnt_ref[0],
+                    rmm=rmm_ref[...], clus=cl_ref[...], ctlb=ctlb_ref[...],
+                    dp=dp_ref[...], counters=cnt_ref[0],
                     cov_samples=cov_ref[0])
 
     def write_state(st):
@@ -113,6 +120,8 @@ def _tlb_sweep_kernel(
         l2_ref[...] = st["l2"]
         rmm_ref[...] = st["rmm"]
         cl_ref[...] = st["clus"]
+        ctlb_ref[...] = st["ctlb"]
+        dp_ref[...] = st["dp"]
         cnt_ref[0] = st["counters"]
         cov_ref[0] = st["cov_samples"]
 
@@ -158,15 +167,18 @@ def _tlb_sweep_kernel(
     ppn_ref[0] = jnp.stack(outs)
 
 
-def make_tlb_sweep_call(sets: int, ways: int):
+def make_tlb_sweep_call(sets: int, ways: int, ctlb_sets: int = 1,
+                        ctlb_ways: int = 1, dp_n: int = 1):
     """Build the jitted pallas_call wrapper for one L2 geometry.
 
     The returned callable invokes the kernel over the ``(lanes, blocks)``
     grid and returns ``(ppn_pad [L, NB*tb], counters [L, N_COUNTERS],
     cov_samples [L, N_COV_SAMPLES])`` — padded-timeline outputs that
     :mod:`.ops` maps back to trace order via the block plan.  The L2
-    geometry parameterizes the scratch allocation, so it is a closure
-    argument rather than an array shape.
+    geometry — and the cache-backed-tier / dead-entry-table geometry,
+    degenerate ``1`` when the batch has no such lane — parameterizes the
+    scratch allocation, so it is a closure argument rather than an array
+    shape.
     """
 
     @functools.partial(jax.jit,
@@ -205,7 +217,7 @@ def make_tlb_sweep_call(sets: int, ways: int):
                 pl.BlockSpec((1, P, 4),                       # map record
                              lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
                              (smap[l, bseg[b]], 0, 0)),
-                pl.BlockSpec((1, P, 4),                       # fill record
+                pl.BlockSpec((1, P, 5),                       # fill record
                              lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
                              (sf[l, bseg[b]], 0, 0)),
                 pl.BlockSpec((1, Pc),                         # cluster bitmap
@@ -223,9 +235,11 @@ def make_tlb_sweep_call(sets: int, ways: int):
             scratch_shapes=[
                 pltpu.VMEM((L1_SETS, L1_WAYS, 4), jnp.int32),
                 pltpu.VMEM((L1H_SETS, L1H_WAYS, 4), jnp.int32),
-                pltpu.VMEM((sets, ways, 6), jnp.int32),
+                pltpu.VMEM((sets, ways, 7), jnp.int32),
                 pltpu.VMEM((RMM_ENTRIES, 5), jnp.int32),
                 pltpu.VMEM((CLUS_SETS, CLUS_WAYS, 4), jnp.int32),
+                pltpu.VMEM((ctlb_sets, ctlb_ways, 4), jnp.int32),
+                pltpu.VMEM((dp_n,), jnp.int32),      # dead-entry counters
                 pltpu.SMEM((3,), jnp.int32),         # t, predictor, asid
             ],
         )

@@ -6,11 +6,12 @@ synthetic (Table-3 families, demand paging, paper-benchmark analogues),
 workload-derived (KV-cache serving churn, paged-attention gather order,
 training data pipeline, checkpoint shards), adversarial (compaction,
 THP splitting, NUMA interleave), dynamic (live mapping-event streams),
-and multitenant (ASID-tagged address spaces under KVScheduler-derived
-context-switch schedules).
+multitenant (ASID-tagged address spaces under KVScheduler-derived
+context-switch schedules), and accelerator (the kv-gather recording
+interleaved at accelerator concurrency).
 """
-from . import (adversarial, dynamic, multitenant, synthetic,  # noqa: F401
-               workload)
+from . import (accelerator, adversarial, dynamic, multitenant,  # noqa: F401
+               synthetic, workload)
 from .base import (FAMILIES, Scenario, ScenarioData, ScenarioRequest,
                    clear_materialized_cache, get_scenario, list_scenarios,
                    register, scenario)

@@ -40,7 +40,8 @@ import numpy as np
 
 from ..core.page_table import DynamicMapping, Mapping, MultiTenantMapping
 
-FAMILIES = ("synthetic", "workload", "adversarial", "dynamic", "multitenant")
+FAMILIES = ("synthetic", "workload", "adversarial", "dynamic", "multitenant",
+            "accelerator")
 
 
 @dataclasses.dataclass(frozen=True)

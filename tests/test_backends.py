@@ -6,7 +6,8 @@ one tunable execution detail, the block size.  None of them may change a
 single counter: every combination of
 
     backend ∈ {xla (TB = 1, 3, 8), pallas (interpret)}
-  × method kind ∈ all 8 (base/thp/colt/cluster/rmm/anchor/kaligned ±pred)
+  × method kind ∈ all 11 (base/thp/colt/cluster/rmm/anchor/kaligned ±pred
+                          + subregion/cache-tlb/dead-protect)
   × world ∈ {static demand mapping, dynamic remap world}
 
 must be bit-exact — including shootdown counters and every translated
@@ -22,8 +23,9 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import demand_mapping, generate_trace
-from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
-                                  colt_spec, kaligned_spec, rmm_spec,
+from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,
+                                  cluster_spec, colt_spec, dead_protect_spec,
+                                  kaligned_spec, rmm_spec, subregion_spec,
                                   thp_spec)
 from repro.core.lane_program import TRACE_FLOOR, bucket_trace_len
 from repro.core.page_table import MappingEvent, build_dynamic_mapping
@@ -36,7 +38,8 @@ COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
 
 ALL_KINDS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
              anchor_spec(6), kaligned_spec([9, 6, 4]),
-             kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+             kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
+             subregion_spec(), cache_tlb_spec(), dead_protect_spec()]
 
 
 def _assert_equal(got, want, ctx):
@@ -133,7 +136,10 @@ def test_ref_backend_parity(worlds, oracles):
     for world, trace, wants in ((m, tr, static_want), (dyn, dtr, dyn_want)):
         cells = [SweepCell(s, world, trace) for s in ALL_KINDS]
         lanes, stacks, (L, sets, ways), seg_bounds = pack_lanes(cells)
-        st0 = init_batched_state(L, sets, ways, lanes["pred0"])
+        st0 = init_batched_state(
+            L, sets, ways, lanes["pred0"],
+            with_ctlb=bool(np.asarray(lanes["has_ctlb"]).any()),
+            with_dp=bool(np.asarray(lanes["use_dead"]).any()))
         stF, ppns = run_lanes_ref(lanes, stacks, st0, seg_bounds)
         counters = np.asarray(stF["counters"])
         cov = np.asarray(stF["cov_samples"])

@@ -27,8 +27,9 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import demand_mapping
-from repro.core.baselines import (anchor_spec, base_spec, cluster_spec,
-                                  colt_spec, kaligned_spec, rmm_spec,
+from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,
+                                  cluster_spec, colt_spec, dead_protect_spec,
+                                  kaligned_spec, rmm_spec, subregion_spec,
                                   thp_spec)
 from repro.core.determine_k import determine_k
 from repro.core.lane_program import init_batched_state, pack_lanes
@@ -43,7 +44,8 @@ COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
 
 SPECS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
          anchor_spec(6), kaligned_spec([9, 6, 4]),
-         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred")]
+         kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
+         subregion_spec(), cache_tlb_spec(), dead_protect_spec()]
 
 WORLD_KINDS = ("static", "dynamic", "multitenant")
 
@@ -148,7 +150,10 @@ def _run_ref(cell):
     from repro.core.lane_program import (C_COAL, C_CYC, C_L1, C_PRED,
                                          C_PROBE, C_REG, C_SHOOT, C_WALK)
     lanes, stacks, (L, sets, ways), seg_bounds = pack_lanes([cell])
-    st0 = init_batched_state(L, sets, ways, lanes["pred0"], lanes["asid0"])
+    st0 = init_batched_state(
+        L, sets, ways, lanes["pred0"], lanes["asid0"],
+        with_ctlb=bool(np.asarray(lanes["has_ctlb"]).any()),
+        with_dp=bool(np.asarray(lanes["use_dead"]).any()))
     stF, ppns = run_lanes_ref(lanes, stacks, st0, seg_bounds)
     counters = np.asarray(stF["counters"])[0]
     fields = {C_L1: "l1_hits", C_REG: "l2_regular_hits",

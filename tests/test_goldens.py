@@ -57,8 +57,8 @@ def test_goldens_exist_and_cover_every_kind():
     assert len(GOLDEN_FILES) >= 10
     gs = [_load(p) for p in GOLDEN_FILES]
     kinds = {g["spec"]["kind"] for g in gs}
-    assert {"base", "thp", "colt", "cluster", "rmm", "anchor",
-            "kaligned"} <= kinds
+    assert {"base", "thp", "colt", "cluster", "rmm", "anchor", "kaligned",
+            "subregion", "cache-tlb", "dead-protect"} <= kinds
     # the kaligned pair covers predictor on AND off
     preds = {g["spec"]["use_predictor"] for g in gs
              if g["spec"]["kind"] == "kaligned"}
