@@ -60,6 +60,9 @@ BENCHES: List = [
     ("tlb_multitenant",
      "Multi-tenant address spaces: ASID tags vs flush-on-switch",
      tlb_suite.bench_multitenant),
+    ("tlb_nested",
+     "Nested guest→host worlds: shootdown vs hw-coherence",
+     tlb_suite.bench_nested),
     ("tlb_accelerator",
      "Accelerator-scale methods: subregion / cache-TLB / dead-protect",
      tlb_suite.bench_accelerator),
@@ -119,6 +122,17 @@ def _derived_metric(name: str, rows: List[Dict[str, Any]]) -> str:
                              if r["policy"] == "flush"])
             return (f"mean |K|=3 rel: tag={tag:.3f} vs flush={flush:.3f}"
                     f" over {len(rel) // 2} scenarios")
+        if name == "tlb_nested":
+            import numpy as np
+            cyc = [r for r in rows if r["metric"] == "stall_cycles"]
+            sd = np.mean([r["|K|=3"] for r in cyc
+                          if r["policy"] == "shootdown"])
+            hw = np.mean([r["|K|=3"] for r in cyc
+                          if r["policy"] == "hw-coherence"])
+            return (f"mean |K|=3 stall cycles: shootdown={sd:.0f} vs"
+                    f" hw-coherence={hw:.0f}"
+                    f" ({1 - hw / max(sd, 1e-9):.1%} saved)"
+                    f" over {len(cyc) // 2} scenarios")
         if name == "tlb_accelerator":
             import numpy as np
             rel = [r for r in rows if r["metric"] == "rel_misses"]

@@ -60,6 +60,11 @@ DYNAMIC_MAX_PAGES = 1 << 16     # per-epoch records are E× the static cost
 # n_tenants× the static cost, and the python scheduling drivers cap cheap
 MULTITENANT_MAX_PAGES = 1 << 15
 
+# nested worlds swept by bench_nested: every (guest epoch × host epoch)
+# union segment materializes a composed view, so records scale with the
+# product of both event streams
+NESTED_MAX_PAGES = 1 << 15
+
 
 def _scenario_world(name: str, trace_len: int, max_pages: int):
     data = get_scenario(name).materialize(n_pages=max_pages,
@@ -391,6 +396,61 @@ def bench_multitenant(trace_len=120_000, quick=True,
             rows.append({"scenario": name, "policy": policy,
                          "metric": "shootdowns",
                          **{k: v.shootdowns for k, v in cols.items()}})
+    return rows
+
+
+def bench_nested(trace_len=120_000, quick=True,
+                 max_pages=MAX_PAGES_DEFAULT, backend="auto"):
+    """Nested guest→host translation worlds, each scenario swept under BOTH
+    translation-coherence policies.
+
+    Every registered ``nested`` scenario (per-VM guest page tables composed
+    over a host layer the hypervisor rewrites mid-trace, VM schedules from
+    the serving stack's KVScheduler; see :mod:`repro.scenarios.nested`)
+    runs the full method suite twice — ``coh_policy="shootdown"`` (every
+    host/guest remap storm pays the fixed IPI cost plus per-entry
+    invalidation) and ``"hw-coherence"`` (a coherence-participating TLB
+    drops the same entries for only the per-entry cost) — through ONE
+    ``run_sweep`` call per world.  Both policies invalidate identical
+    entry sets, so walks/hits are bit-identical and only cycles move: the
+    ``rel_misses`` rows are policy-invariant by construction while the
+    ``stall_cycles`` rows isolate exactly the coherence tax.  K for the
+    K-bit Aligned rows comes from the merged *composed* contiguity
+    histogram (what Algorithm 3 sees through both levels).  Rows: per
+    (scenario, policy) relative misses (Base = 1.0), invalidated-entry
+    counts, and total translation stall cycles.
+    """
+    names = tuple(sc.name for sc in list_scenarios("nested"))
+    rows = []
+    for name in names:
+        d = _scenario_world(name, trace_len, min(max_pages,
+                                                 NESTED_MAX_PAGES))
+        # one plan (= one run_sweep) per world, as in bench_multitenant:
+        # nested lanes segment on that world's union grid (guest epochs ∪
+        # host epochs ∪ VM switches) and batching worlds would pad all
+        # lanes to the union shape
+        plan = SweepPlan()
+        for policy in ("shootdown", "hw-coherence"):
+            _add_suite(
+                plan, d.world, d.trace, f"{name}::{policy}",
+                ANCHOR_GRID_QUICK, psis=(2, 3),
+                k_hist=d.meta["contiguity_histogram"],
+                transform=lambda s, p=policy: dataclasses.replace(
+                    s, coh_policy=p))
+        res = plan.run(backend=backend)
+        for policy in ("shootdown", "hw-coherence"):
+            cols = res[f"{name}::{policy}"]
+            base = cols["Base"].walks
+            rows.append({"scenario": name, "policy": policy,
+                         "metric": "rel_misses",
+                         **{k: round(v.walks / max(base, 1), 4)
+                            for k, v in cols.items()}})
+            rows.append({"scenario": name, "policy": policy,
+                         "metric": "shootdowns",
+                         **{k: v.shootdowns for k, v in cols.items()}})
+            rows.append({"scenario": name, "policy": policy,
+                         "metric": "stall_cycles",
+                         **{k: v.cycles for k, v in cols.items()}})
     return rows
 
 

@@ -98,7 +98,8 @@ def render_dryrun(final_dir, base_dir=None):
 
 
 SCENARIO_SECTIONS = ("tlb_scenario_contiguity", "tlb_scenarios",
-                     "tlb_dynamic", "tlb_multitenant", "tlb_accelerator")
+                     "tlb_dynamic", "tlb_multitenant", "tlb_nested",
+                     "tlb_accelerator")
 
 
 def _md_cell(v) -> str:
@@ -182,6 +183,25 @@ def render_tlb(path):
               " SAME policy; `shootdowns` rows count flushed/invalidated"
               " entries — see `docs/scenarios.md`.\n")
         _md_table(mt)
+
+    nest = sections.get("tlb_nested", {}).get("rows")
+    if nest:
+        print("## Nested guest→host translation: shootdown vs"
+              " hw-coherence\n")
+        print("Two-level worlds: per-VM guest page tables composed over a"
+              " host layer the hypervisor rewrites mid-trace (migration,"
+              " defragmentation, ballooning), with VM schedules from the"
+              " serving stack's KVScheduler.  Every scenario is swept"
+              " under both translation-coherence policies: `shootdown`"
+              " charges the fixed IPI latency plus per-entry invalidation"
+              " on each remap storm, `hw-coherence` drops the SAME entry"
+              " set for only the per-entry cost.  `rel_misses` rows are"
+              " walks relative to Base (policy-invariant by construction"
+              " — both policies invalidate identically); `shootdowns`"
+              " rows count invalidated entries; `stall_cycles` rows"
+              " isolate the coherence tax — see `docs/scenarios.md` and"
+              " `docs/methods.md`.\n")
+        _md_table(nest)
 
     acc = sections.get("tlb_accelerator", {}).get("rows")
     if acc:

@@ -33,10 +33,13 @@ from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,  # noq
                                   cluster_spec, colt_spec, dead_protect_spec,
                                   kaligned_spec, rmm_spec, subregion_spec,
                                   thp_spec)
-from repro.core.page_table import (build_multitenant_mapping,  # noqa: E402
-                                   make_mapping)
+from repro.core.page_table import (MappingEvent,  # noqa: E402
+                                   build_dynamic_mapping,
+                                   build_multitenant_mapping,
+                                   build_nested_mapping, make_mapping)
 from repro.core.simulator import (run_method_dynamic,  # noqa: E402
-                                  run_method_multitenant)
+                                  run_method_multitenant,
+                                  run_method_nested)
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "tests", "goldens")
@@ -197,11 +200,74 @@ def _golden_worlds():
             f"ctx_policy={policy}: tag keeps A resident across B's "
             "quantum but must invalidate A's entries at C's takeover; "
             "flush refaults every quantum")
+
+    # nested, both coherence policies: ONE guest whose OWN epoch at t=6
+    # remaps vpns 16..19 (vpn 0's entry survives that turnover — the dirty
+    # set misses it) and then a HOST remap at t=10 moves frames 0..3, which
+    # kills vpn 0's composed entry even though the guest table never
+    # changed it.  The two goldens share world AND trace, so their diff is
+    # exactly the coh_policy cost model: identical walks/hits/shootdowns,
+    # cycles apart by LAT_SHOOTDOWN per dirty turnover.
+    guest = build_dynamic_mapping(
+        np.arange(32, dtype=np.int64),
+        [(6, [MappingEvent("remap", 16, 4, ppn=40)])], name="g")
+    host = build_dynamic_mapping(
+        np.arange(48, dtype=np.int64),
+        [(10, [MappingEvent("remap", 0, 4, ppn=50)])], name="h")
+    nw = build_nested_mapping([guest], host, [(0, 0, 0)], name="nested")
+    tr = [0, 0, 1, 16, 0, 16, 0, 16, 0, 1, 0, 0, 1, 16]
+    out["nested-host-remap"] = (
+        base_spec(), nw, tr,
+        "guest epoch at t=6 dirties only vpns 16..19, so vpn 0 hits "
+        "across it; the host remap of frames 0..3 at t=10 then forces "
+        "vpn 0 (and 1) to walk again to host frames 50/51 while vpn 16 "
+        "(guest frame 40) survives untouched")
+    out["nested-coherence-vs-shootdown"] = (
+        dataclasses.replace(base_spec(), coh_policy="hw-coherence"), nw, tr,
+        "same world and trace as nested-host-remap under hw-coherence: "
+        "the SAME entries die at both turnovers (walk sequence and "
+        "shootdown counts bit-equal) but no IPI latency is charged — "
+        "cycles differ by exactly LAT_SHOOTDOWN per dirty turnover")
+
+    # nested + multi-tenant combined: a host epoch lands INSIDE a VM
+    # quantum.  Tagged entries survive the VM switches, but the host remap
+    # at t=8 (during B's quantum) moves A's frames 0..3, dirtying guest
+    # vpns 0..3 — and the shootdown is VPN-keyed and ASID-blind
+    # (conservative), so B's resident entries for the same vpns die too
+    # even though B's frames never moved.
+    ga = make_mapping(np.arange(16, dtype=np.int64), name="ga")
+    gb = make_mapping(np.arange(16, dtype=np.int64) + 16, name="gb")
+    host = build_dynamic_mapping(
+        np.arange(40, dtype=np.int64),
+        [(8, [MappingEvent("remap", 0, 4, ppn=60)])], name="h2")
+    nw2 = build_nested_mapping(
+        [ga, gb], host, [(0, 0, 0), (4, 1, 1), (12, 0, 0)],
+        name="nested-mt")
+    tr = [0, 1, 0, 1, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 0, 2]
+    out["nested-mt-combined"] = (
+        dataclasses.replace(base_spec(), ctx_policy="tag"), nw2, tr,
+        "A runs vpns 0/1, B runs 0..3 (frames 16+); the host moves A's "
+        "frames 0..3 at t=8 inside B's quantum, so the VPN-keyed "
+        "shootdown refaults B's second quantum AND, back on A at t=12, "
+        "A's tagged entries — vpns 0/1 walk to frames 60/61")
     return out
 
 
 def _world_json(world):
-    from repro.core.page_table import Mapping, MultiTenantMapping
+    from repro.core.page_table import (Mapping, MultiTenantMapping,
+                                      NestedMapping)
+
+    def layer(d):
+        return {"boundaries": list(d.boundaries),
+                "epochs": [m.ppn.tolist() for m in d.epochs]}
+
+    if isinstance(world, NestedMapping):
+        return {"kind": "nested",
+                "guests": [layer(g) for g in world.guests],
+                "host": layer(world.host),
+                "boundaries": list(world.boundaries),
+                "guest_ids": list(world.guest_ids),
+                "asids": list(world.asids)}
     if isinstance(world, MultiTenantMapping):
         return {"kind": "multitenant",
                 "tenants": [t.ppn.tolist() for t in world.tenants],
@@ -219,13 +285,16 @@ def _spec_json(spec):
 
 
 def make_golden(name, spec, world, trace, note):
-    from repro.core.page_table import MultiTenantMapping
+    from repro.core.page_table import MultiTenantMapping, NestedMapping
     trace = np.asarray(trace, np.int64)
     assert trace.shape[0] <= 16, f"{name}: goldens must stay hand-checkable"
     steps, events = [], []
-    runner = (run_method_multitenant
-              if isinstance(world, MultiTenantMapping)
-              else run_method_dynamic)
+    if isinstance(world, NestedMapping):
+        runner = run_method_nested
+    elif isinstance(world, MultiTenantMapping):
+        runner = run_method_multitenant
+    else:
+        runner = run_method_dynamic
     r = runner(spec, world, trace, on_step=steps.append,
                on_event=events.append)
     return {

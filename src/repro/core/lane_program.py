@@ -38,13 +38,13 @@ every lane must match :func:`repro.core.simulator.run_method` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
-                         cluster_bitmap, huge_page_backed,
+                         NestedMapping, cluster_bitmap, huge_page_backed,
                          next_pow2 as _next_pow2)
 from .simulator import (CLUS_SETS, CLUS_WAYS, CTLB_SETS, CTLB_WAYS, DP_TABLE,
                         HUGE, INVALID, KSUBR, L1_SETS, L1_WAYS,
@@ -102,7 +102,7 @@ N_COUNTERS = 9
 # change.
 STEP_KEYS = ("kvals", "use_pred", "is_colt", "is_thp", "has_rmm",
              "has_cluster", "set_mask", "n_ways", "k_hat", "miss_chain",
-             "sample_every", "is_subr", "has_ctlb", "use_dead")
+             "sample_every", "is_subr", "has_ctlb", "use_dead", "coh_hw")
 
 
 TRACE_LINEAR_BUCKET = 1 << 14
@@ -269,10 +269,15 @@ class _WorldPlan:
 
     ``sources`` are the distinct Mappings records are built from (epoch
     snapshots of a dynamic world; tenant address spaces of a multi-tenant
-    one; the single mapping of a static one).  Per schedule segment ``i``:
+    one; deduped composed guest-over-host views of a nested one; the
+    single mapping of a static one).  Per schedule segment ``i``:
     ``src_idx[i]`` is the live source, ``asids[i]`` the live ASID,
-    ``switch[i]`` whether entering it changes the address space, and
-    ``recycled[i]`` whether its ASID was last held by a different tenant.
+    ``switch[i]`` whether entering it changes the address space,
+    ``recycled[i]`` whether its ASID was last held by a different tenant,
+    and ``dirty[i]`` the vpn dirty bitmap the coherence pass must sweep on
+    entering it (``None`` when nothing turned stale — dynamic worlds dirty
+    by guest vpn, nested worlds by composed diff so host-level remaps
+    surface too).
     """
 
     sources: Tuple[Mapping, ...]
@@ -281,20 +286,40 @@ class _WorldPlan:
     asids: Tuple[int, ...]
     switch: Tuple[bool, ...]
     recycled: Tuple[bool, ...]
+    dirty: Tuple[Optional[np.ndarray], ...]
 
 
 def _world_plan(world) -> _WorldPlan:
     if isinstance(world, DynamicMapping):
         n = world.n_epochs
+        dirty = (None,) + tuple(
+            world.dirty(e) if world.dirty_count(e) else None
+            for e in range(1, n))
         return _WorldPlan(world.epochs, world.boundaries, tuple(range(n)),
-                          (0,) * n, (False,) * n, (False,) * n)
+                          (0,) * n, (False,) * n, (False,) * n, dirty)
     if isinstance(world, MultiTenantMapping):
         n = world.n_segments
         return _WorldPlan(world.tenants, world.boundaries, world.tenant_ids,
                           world.asids,
                           tuple(world.switches(s) for s in range(n)),
-                          world.recycled)
-    return _WorldPlan((world,), (0,), (0,), (0,), (False,), (False,))
+                          world.recycled, (None,) * n)
+    if isinstance(world, NestedMapping):
+        segs = world.plan_segments()
+        sources: List[Mapping] = []
+        src_of: Dict[int, int] = {}
+        src_idx: List[int] = []
+        for ns in segs:
+            if id(ns.mapping) not in src_of:      # composed views memoized
+                src_of[id(ns.mapping)] = len(sources)
+                sources.append(ns.mapping)
+            src_idx.append(src_of[id(ns.mapping)])
+        return _WorldPlan(tuple(sources), tuple(ns.lo for ns in segs),
+                          tuple(src_idx), tuple(ns.asid for ns in segs),
+                          tuple(ns.switch for ns in segs),
+                          tuple(ns.recycled for ns in segs),
+                          tuple(ns.dirty for ns in segs))
+    return _WorldPlan((world,), (0,), (0,), (0,), (False,), (False,),
+                      (None,))
 
 
 def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
@@ -370,18 +395,19 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
                     clus_rec_id[(w, e)] = len(clus_recs)
                     clus_recs.append(rec)
 
-    # dirty records (prefix sums): one per (world, epoch >= 1) with >=1 dirty
+    # dirty records (prefix sums): one per (world, segment) whose plan
+    # carries a dirty bitmap (dynamic epochs e >= 1 with churn; nested
+    # segments whose composed view diverged at either level)
     dirty_recs: List[np.ndarray] = [np.zeros(P + 1, np.int32)]
     dirty_rec_id: Dict[Tuple[int, int], int] = {}
-    for w, m in enumerate(worlds):
-        if not isinstance(m, DynamicMapping):
-            continue
-        for e in range(1, m.n_epochs):
-            if m.dirty_count(e) == 0:
+    for w, p in plans.items():
+        for e, d in enumerate(p.dirty):
+            if d is None:
                 continue
             dc = np.zeros(P + 1, np.int32)
-            np.cumsum(m.dirty(e), out=dc[1: m.n_pages + 1])
-            dc[m.n_pages + 1:] = dc[m.n_pages]
+            nd = min(int(d.shape[0]), P)   # beyond P no entry can cover
+            np.cumsum(d[:nd], out=dc[1: nd + 1])
+            dc[nd + 1:] = dc[nd]
             dirty_rec_id[(w, e)] = len(dirty_recs)
             dirty_recs.append(dc)
 
@@ -406,7 +432,7 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
     lanes = dict(
         is_colt=np.zeros(L, bool), is_thp=np.zeros(L, bool),
         is_subr=np.zeros(L, bool), has_ctlb=np.zeros(L, bool),
-        use_dead=np.zeros(L, bool),
+        use_dead=np.zeros(L, bool), coh_hw=np.zeros(L, bool),
         has_rmm=np.zeros(L, bool),
         has_cluster=np.zeros(L, bool), use_pred=np.zeros(L, bool),
         kvals=np.full((L, maxk), -1, np.int32),
@@ -435,6 +461,7 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
         lanes["is_subr"][i] = s.kind == "subregion"
         lanes["has_ctlb"][i] = s.kind == "cache-tlb"
         lanes["use_dead"][i] = s.kind == "dead-protect"
+        lanes["coh_hw"][i] = s.coh_policy == "hw-coherence"
         lanes["has_rmm"][i] = s.side == "rmm"
         lanes["has_cluster"][i] = s.side == "cluster"
         lanes["use_pred"][i] = s.use_predictor
@@ -861,8 +888,12 @@ def shoot_lane(lane, st, dc, do):
     """Translation coherence on epoch turnover (gated by ``do``): drop
     every entry — in every structure — whose covered vpn range contains a
     dirty vpn of the entered epoch (``dc`` = the epoch's dirty-bitmap
-    prefix sums, ``[P+1]``), charge one shootdown plus a per-entry
-    invalidation, and release the dropped reach."""
+    prefix sums, ``[P+1]``), charge the coherence cost, and release the
+    dropped reach.  Both ``coh_policy`` values drop the identical entry
+    set; they differ only in cycles — IPI-style ``shootdown`` pays the
+    ``LAT_SHOOTDOWN`` broadcast stall plus ``LAT_INVALIDATE`` per entry,
+    directory-tracked ``hw-coherence`` (``lane['coh_hw']``) pays only the
+    targeted per-entry invalidations."""
     is_thp, is_subr = lane["is_thp"], lane["is_subr"]
     Pn = dc.shape[0] - 1
 
@@ -931,7 +962,8 @@ def shoot_lane(lane, st, dc, do):
     cnt = st["counters"]
     add = (jnp.zeros_like(cnt)
            .at[C_SHOOT].set(n_inv)
-           .at[C_CYC].set(jnp.where(do, LAT_SHOOTDOWN, 0)
+           .at[C_CYC].set(jnp.where(do & ~lane["coh_hw"],
+                                    LAT_SHOOTDOWN, 0)
                           + n_inv * LAT_INVALIDATE)
            .at[C_COV].set(-cov_loss))
     new["counters"] = cnt + add

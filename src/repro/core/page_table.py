@@ -28,7 +28,7 @@ structure holding an entry that covers a dirty vpn must invalidate it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -439,6 +439,237 @@ def build_multitenant_mapping(tenants: Sequence[Mapping],
         asids.append(int(asid))
     return MultiTenantMapping(tuple(tenants), tuple(bounds), tuple(tids),
                               tuple(asids), name=name)
+
+
+# ---------------------------------------------------------------------------
+# Nested (guest → host) translation: two-level worlds under virtualization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NestedSegment:
+    """One union-grid segment of a nested world.
+
+    The union grid is the merge of the VM schedule boundaries, every
+    guest's epoch boundaries, and the host's epoch boundaries: within one
+    segment nothing about the composed translation or the running VM
+    changes.  ``mapping`` is the *composed* guest-VPN → host-PPN view of
+    the scheduled guest, and ``dirty`` (when not ``None``) is the set of
+    guest VPNs — unioned over ALL guests, coherence is ASID-blind — whose
+    composed translation died entering this segment.
+    """
+
+    lo: int
+    guest_id: int
+    asid: int
+    switch: bool
+    recycled: bool
+    mapping: Mapping
+    dirty: Optional[np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class NestedMapping:
+    """Two-level (guest → host) translation worlds: each tenant is a VM.
+
+    ``guests[i]`` is VM ``i``'s guest page table as a
+    :class:`DynamicMapping` over guest VPNs: ``guests[i].epochs[e].ppn[v]``
+    is a *guest* PPN.  ``host`` is the hypervisor's table mapping guest
+    PPNs to host PPNs, itself a :class:`DynamicMapping` — host-level
+    remap/compaction/balloon events rewrite frames the guests never
+    touched.  A translation the TLB may cache is the *composition*
+    ``host.ppn[guest.ppn[v]]``, so contiguity (what K-bit alignment
+    exploits) can fracture at either level, and a host event dirties
+    composed translations **by host-side position** — every guest VPN
+    whose backing guest PPN the host moved, across every VM.
+
+    The VM schedule mirrors :class:`MultiTenantMapping`: during trace
+    steps ``[boundaries[s], boundaries[s+1])`` guest ``guest_ids[s]`` runs
+    under ASID ``asids[s]`` (vCPU tags), with ``recycled`` derived the
+    same way.  :meth:`plan_segments` flattens all three time axes into one
+    union grid consumed by both the oracle
+    (:func:`repro.core.simulator.run_method_nested`) and the batched lane
+    engine — the composed dirty sets are computed HERE, once, so every
+    executor invalidates identically.
+
+    *How* an invalidation is paid is not a property of the world but of
+    :attr:`repro.core.simulator.MethodSpec.coh_policy`: IPI-style
+    ``"shootdown"`` or directory-tracked ``"hw-coherence"``.
+    """
+
+    guests: Tuple[DynamicMapping, ...]
+    host: DynamicMapping
+    boundaries: Tuple[int, ...]      # strictly ascending, [0] == 0
+    guest_ids: Tuple[int, ...]       # per segment: index into guests
+    asids: Tuple[int, ...]           # per segment: ASID (vCPU tag)
+    name: str = "nested"
+    recycled: Tuple[bool, ...] = ()  # derived: segment reuses a dead ASID
+
+    def __post_init__(self):
+        assert len(self.guests) >= 1
+        ns = len(self.boundaries)
+        assert len(self.guest_ids) == ns and len(self.asids) == ns
+        assert ns >= 1 and self.boundaries[0] == 0
+        assert all(a < b for a, b in zip(self.boundaries,
+                                         self.boundaries[1:])), \
+            "schedule boundaries must be strictly ascending"
+        assert all(0 <= g < len(self.guests) for g in self.guest_ids)
+        assert all(a >= 0 for a in self.asids)
+        # same invariant as MultiTenantMapping: a resident VM keeps its
+        # ASID until descheduled
+        assert all(self.asids[s] == self.asids[s - 1]
+                   for s in range(1, ns)
+                   if self.guest_ids[s] == self.guest_ids[s - 1]), \
+            "adjacent same-guest segments must share one ASID"
+        if not self.recycled:
+            holder: Dict[int, int] = {}
+            rec = []
+            for s in range(ns):
+                a, g = self.asids[s], self.guest_ids[s]
+                rec.append(a in holder and holder[a] != g)
+                holder[a] = g
+            object.__setattr__(self, "recycled", tuple(rec))
+        assert len(self.recycled) == ns
+        object.__setattr__(self, "_composed_cache", {})
+        object.__setattr__(self, "_segments_cache", None)
+
+    @property
+    def n_pages(self) -> int:
+        """Largest guest footprint (engines pad every record to it)."""
+        return max(g.n_pages for g in self.guests)
+
+    @property
+    def n_guests(self) -> int:
+        return len(self.guests)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.boundaries)
+
+    def segment_at(self, t: int) -> int:
+        """Index of the schedule segment live at trace step ``t``."""
+        return int(np.searchsorted(self.boundaries, t, side="right") - 1)
+
+    def switches(self, s: int) -> bool:
+        return s > 0 and self.guest_ids[s] != self.guest_ids[s - 1]
+
+    def n_switches(self) -> int:
+        return sum(self.switches(s) for s in range(self.n_segments))
+
+    def composed(self, guest_id: int, g_epoch: int, h_epoch: int) -> Mapping:
+        """The composed guest-VPN → host-PPN :class:`Mapping` (memoized).
+
+        A guest VPN is mapped iff the guest maps it AND its guest PPN
+        falls inside the host table AND the host maps that frame;
+        contiguity runs are recomputed on the composition, so a
+        host-level fracture breaks a composed chunk even where the guest
+        side stayed perfectly contiguous.
+        """
+        key = (guest_id, g_epoch, h_epoch)
+        hit = self._composed_cache.get(key)
+        if hit is None:
+            g = self.guests[guest_id].epochs[g_epoch].ppn
+            h = self.host.epochs[h_epoch].ppn
+            gp = np.clip(g, 0, h.shape[0] - 1)
+            ok = (g != UNMAPPED) & (g < h.shape[0])
+            hit = make_mapping(
+                np.where(ok, h[gp], UNMAPPED),
+                name=f"{self.name}:g{guest_id}e{g_epoch}h{h_epoch}")
+            self._composed_cache[key] = hit
+        return hit
+
+    def composed_at(self, t: int) -> Mapping:
+        """The scheduled guest's composed view live at trace step ``t``."""
+        gid = self.guest_ids[self.segment_at(t)]
+        return self.composed(gid, self.guests[gid].epoch_at(t),
+                             self.host.epoch_at(t))
+
+    def _dirty_at(self, lo: int) -> Optional[np.ndarray]:
+        """Union composed dirty set entering the union-grid boundary ``lo``
+        (``None`` when no composed translation died).  ASID-blind by
+        design: a shootdown invalidates a stale range for whichever VM
+        cached it, exactly like the single-space dynamic worlds."""
+        he0, he1 = self.host.epoch_at(lo - 1), self.host.epoch_at(lo)
+        dirty = np.zeros(self.n_pages, bool)
+        hit = False
+        for gid, g in enumerate(self.guests):
+            ge0, ge1 = g.epoch_at(lo - 1), g.epoch_at(lo)
+            if ge0 == ge1 and he0 == he1:
+                continue
+            prev = self.composed(gid, ge0, he0).ppn
+            cur = self.composed(gid, ge1, he1).ppn
+            d = (prev != UNMAPPED) & (prev != cur)
+            if d.any():
+                dirty[: d.shape[0]] |= d
+                hit = True
+        return dirty if hit else None
+
+    def plan_segments(self) -> Tuple[NestedSegment, ...]:
+        """Flatten schedule × guest epochs × host epochs into the union
+        grid (memoized).  Both the oracle and the lane engine consume
+        exactly this plan, so a dirty set or a switch can never differ
+        between executors."""
+        if self._segments_cache is not None:
+            return self._segments_cache
+        grid = set(self.boundaries) | set(self.host.boundaries)
+        for g in self.guests:
+            grid.update(g.boundaries)
+        segs = []
+        prev_gid = None
+        for lo in sorted(grid):
+            s = self.segment_at(lo)
+            gid = self.guest_ids[s]
+            comp = self.composed(gid, self.guests[gid].epoch_at(lo),
+                                 self.host.epoch_at(lo))
+            segs.append(NestedSegment(
+                lo=int(lo), guest_id=gid, asid=self.asids[s],
+                switch=prev_gid is not None and gid != prev_gid,
+                recycled=self.recycled[s] and lo == self.boundaries[s],
+                mapping=comp,
+                dirty=self._dirty_at(lo) if lo > 0 else None))
+            prev_gid = gid
+        out = tuple(segs)
+        object.__setattr__(self, "_segments_cache", out)
+        return out
+
+    def merged_contiguity_histogram(self) -> Dict[int, int]:
+        """Union histogram over the initial composed views — what a
+        hypervisor aggregating per-VM contiguity stats feeds Algorithm 3."""
+        hist: Dict[int, int] = {}
+        for gid in range(self.n_guests):
+            for size, freq in contiguity_histogram(
+                    self.composed(gid, 0, 0)).items():
+                hist[size] = hist.get(size, 0) + freq
+        return hist
+
+
+def _as_dynamic_layer(m) -> DynamicMapping:
+    if isinstance(m, DynamicMapping):
+        return m
+    return DynamicMapping((m,), (0,), name=m.name)
+
+
+def build_nested_mapping(guests, host,
+                         schedule: Sequence[Tuple[int, int, int]],
+                         name: str = "nested") -> NestedMapping:
+    """Build a :class:`NestedMapping` from ``(t, guest_id, asid)`` triples
+    (strictly ascending ``t``, first at 0; consecutive identical segments
+    merged like :func:`build_multitenant_mapping`).  ``guests`` entries and
+    ``host`` may be plain :class:`Mapping`\\ s — each is wrapped as a
+    single-epoch :class:`DynamicMapping` layer."""
+    assert schedule and schedule[0][0] == 0
+    bounds: List[int] = []
+    gids: List[int] = []
+    asids: List[int] = []
+    for t, gid, asid in schedule:
+        if bounds and gids[-1] == gid and asids[-1] == asid:
+            continue
+        bounds.append(int(t))
+        gids.append(int(gid))
+        asids.append(int(asid))
+    return NestedMapping(tuple(_as_dynamic_layer(g) for g in guests),
+                         _as_dynamic_layer(host), tuple(bounds),
+                         tuple(gids), tuple(asids), name=name)
 
 
 def cluster_bitmap(m: Mapping, cluster_bits: int = 3) -> np.ndarray:

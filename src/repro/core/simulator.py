@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
-                         cluster_bitmap, huge_page_backed)
+                         NestedMapping, cluster_bitmap, huge_page_backed)
 
 REGULAR = -1
 HUGE = 9            # k-class used for 2MB entries (2^9 pages)
@@ -83,6 +83,15 @@ LAT_WALK = 50
 # (IPI receipt + kernel entry), plus a per-entry invalidation port write
 # for every TLB entry — in ANY structure — whose covered range contains a
 # dirty vpn.  Charged once per epoch transition per TLB.
+#
+# WHICH entries die is fixed by correctness; what the turnover *stalls* is
+# ``MethodSpec.coh_policy``: IPI-style ``"shootdown"`` pays LAT_SHOOTDOWN
+# per turnover (broadcast receipt + kernel entry, even when nothing
+# matches) plus LAT_INVALIDATE per killed entry, while directory-tracked
+# ``"hw-coherence"`` pays only the per-entry port writes — the directory
+# already knows which TLBs cache the dirty range, so there is no
+# broadcast stall.  Counters and translations are bit-identical between
+# the two policies; only cycles differ.
 LAT_SHOOTDOWN = 200
 LAT_INVALIDATE = 8
 
@@ -133,11 +142,21 @@ class MethodSpec:
     #: ASIDs pay a targeted invalidation).  Irrelevant on single-address-
     #: space worlds: entries and probes then all carry ASID 0.
     ctx_policy: str = "flush"
+    #: translation-coherence policy on remap turnovers (dynamic/nested
+    #: worlds): ``"shootdown"`` is the IPI model — LAT_SHOOTDOWN broadcast
+    #: stall per turnover plus LAT_INVALIDATE per killed entry —
+    #: ``"hw-coherence"`` is the directory-tracked model (Yan et al.) —
+    #: targeted per-entry invalidations only, no broadcast stall.  The
+    #: invalidated-entry set (and so every counter and translation) is
+    #: identical under both; only cycles differ.
+    coh_policy: str = "shootdown"
 
     def __post_init__(self):
         assert self.kind in KINDS, self.kind
         assert tuple(sorted(self.K, reverse=True)) == tuple(self.K)
         assert self.ctx_policy in ("flush", "tag"), self.ctx_policy
+        assert self.coh_policy in ("shootdown", "hw-coherence"), \
+            self.coh_policy
 
 
 @dataclasses.dataclass
@@ -667,6 +686,43 @@ def run_method_multitenant(spec: MethodSpec, world: MultiTenantMapping,
                          on_event=on_event)
 
 
+def run_method_nested(spec: MethodSpec, world: NestedMapping,
+                      trace: np.ndarray, on_step=None, on_event=None
+                      ) -> SimResult:
+    """Simulate one method over a nested (guest → host) world, pure python.
+
+    Segments are the union grid of
+    :meth:`~repro.core.page_table.NestedMapping.plan_segments` — VM
+    schedule × guest epochs × host epochs — so one oracle loop discharges
+    the dynamic × multi-tenant combination: a VM switch is a context
+    switch under ``spec.ctx_policy``, and a guest- or host-level remap is
+    a coherence turnover over the *composed* dirty set, charged under
+    ``spec.coh_policy``.  The sweep engine's nested lanes must match this
+    bit for bit (``tests/test_nested.py``, the extended fuzzer)."""
+    from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
+
+    assert isinstance(world, NestedMapping)
+    fkey = _fill_profile_key(spec)
+    has_clus = spec.side == "cluster"
+    fill_of: dict = {}
+    clus_of: dict = {}
+    segs = []
+    for ns in world.plan_segments():
+        m = ns.mapping
+        key = id(m)                      # composed views are memoized
+        if key not in fill_of:
+            fill_of[key] = _fill_profile(m, fkey, m.n_pages)
+            clus_of[key] = cluster_bitmap(m) if has_clus else None
+        segs.append(_OracleSegment(
+            lo=ns.lo, m=m, fill=fill_of[key], clus=clus_of[key],
+            asid=ns.asid, switch=ns.switch,
+            flush_all=ns.switch and spec.ctx_policy == "flush",
+            flush_asid=ns.recycled and spec.ctx_policy == "tag",
+            dirty=ns.dirty))
+    return _run_segments(spec, segs, trace, on_step=on_step,
+                         on_event=on_event)
+
+
 def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
                   on_step=None, on_event=None) -> SimResult:
     """The shared oracle loop: one TLB, a segment schedule, ASID tags.
@@ -800,7 +856,11 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
         # nothing to invalidate
 
         n_shoot += n_inv
-        cycles += LAT_SHOOTDOWN + LAT_INVALIDATE * n_inv
+        if spec.coh_policy == "hw-coherence":
+            # directory-tracked: targeted port writes only, no IPI stall
+            cycles += LAT_INVALIDATE * n_inv
+        else:
+            cycles += LAT_SHOOTDOWN + LAT_INVALIDATE * n_inv
         cov -= cov_loss
         if on_event is not None:
             on_event(dict(t=t, kind="shootdown", invalidated=n_inv))
@@ -858,7 +918,10 @@ def _run_segments(spec: MethodSpec, segs, trace: np.ndarray,
                     or seg.asid != cur_asid:
                 ctx_switch(t, seg)
             if seg.dirty is not None:
-                shootdown(t, seg.dirty, seg.m.n_pages)
+                # the dirty array fixes the vpn range it covers (nested
+                # worlds union dirty sets over ALL guests, whose footprint
+                # may exceed the scheduled guest's)
+                shootdown(t, seg.dirty, int(seg.dirty.shape[0]))
         seg = segs[seg_i]
         m = seg.m
         n_pages = m.n_pages

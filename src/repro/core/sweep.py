@@ -72,7 +72,8 @@ from .lane_program import (
     LANE_SHARE_MAX, STEP_KEYS, build_block_plan,
     init_batched_state as _init_batched_state, needs_switch_pass,
     pack_lanes as _pack_lanes, shoot_lane, step_access, switch_lane)
-from .page_table import DynamicMapping, Mapping, MultiTenantMapping
+from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
+                         NestedMapping)
 from .simulator import MethodSpec, SimResult
 
 # Default trace-steps-per-block of the time-blocked XLA backend.  Override
@@ -119,7 +120,11 @@ class SweepCell:
       invalidation), **or** a
       :class:`~repro.core.page_table.MultiTenantMapping` whose schedule
       segments it (ASID-tagged context switching; the flush-vs-tag policy
-      is ``spec.ctx_policy``); get one from a registered scenario
+      is ``spec.ctx_policy``), **or** a
+      :class:`~repro.core.page_table.NestedMapping` whose segment grid is
+      the union of its VM schedule, guest epochs and host epochs (two-level
+      translation; the shootdown-vs-hw-coherence knob is
+      ``spec.coh_policy``); get one from a registered scenario
       (:mod:`repro.scenarios`) or the generators in
       :mod:`repro.core.mappings`.
     * ``trace``   — 1-D integer array of VPNs (every entry must be a mapped
@@ -130,7 +135,7 @@ class SweepCell:
     """
 
     spec: MethodSpec
-    mapping: "Mapping | DynamicMapping | MultiTenantMapping"
+    mapping: "Mapping | DynamicMapping | MultiTenantMapping | NestedMapping"
     trace: np.ndarray
 
     def __post_init__(self):
@@ -139,6 +144,10 @@ class SweepCell:
             assert all(0 < b < self.trace.shape[0]
                        for b in self.mapping.boundaries[1:]), \
                 "segment boundaries must fall inside the trace"
+        elif isinstance(self.mapping, NestedMapping):
+            assert all(0 < ns.lo < self.trace.shape[0]
+                       for ns in self.mapping.plan_segments()[1:]), \
+                "segment boundaries must fall inside the trace"
 
     @property
     def epochs(self) -> Tuple[Mapping, ...]:
@@ -146,18 +155,29 @@ class SweepCell:
             return self.mapping.epochs
         if isinstance(self.mapping, MultiTenantMapping):
             return self.mapping.tenants
+        if isinstance(self.mapping, NestedMapping):
+            # distinct composed guest-over-host views, schedule order
+            seen, out = set(), []
+            for ns in self.mapping.plan_segments():
+                if id(ns.mapping) not in seen:
+                    seen.add(id(ns.mapping))
+                    out.append(ns.mapping)
+            return tuple(out)
         return (self.mapping,)
 
     @property
     def boundaries(self) -> Tuple[int, ...]:
         if isinstance(self.mapping, (DynamicMapping, MultiTenantMapping)):
             return self.mapping.boundaries
+        if isinstance(self.mapping, NestedMapping):
+            return tuple(ns.lo for ns in self.mapping.plan_segments())
         return (0,)
 
     @property
     def is_segmented(self) -> bool:
         """True when the lane rides a multi-segment timeline (mid-trace
-        remap epochs or multi-tenant scheduling quanta)."""
+        remap epochs, multi-tenant scheduling quanta, or the union grid
+        of a nested guest/host world)."""
         return len(self.boundaries) > 1
 
 
@@ -392,6 +412,20 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
         h.update(repr((tuple(mt.boundaries), tuple(mt.tenant_ids),
                        tuple(mt.asids), tuple(mt.recycled))).encode())
         for m in mt.tenants:
+            h.update(digest(m.ppn).encode())
+    elif isinstance(cell.mapping, NestedMapping):
+        nm = cell.mapping
+        # both levels fold in: the VM schedule, every guest's event stream
+        # AND the host's — two worlds differing only in a host-side remap
+        # (which guests never observe directly) must never collide
+        h.update(repr((tuple(nm.boundaries), tuple(nm.guest_ids),
+                       tuple(nm.asids), tuple(nm.recycled))).encode())
+        for g in nm.guests:
+            h.update(repr(tuple(g.boundaries)).encode())
+            for m in g.epochs:
+                h.update(digest(m.ppn).encode())
+        h.update(repr(tuple(nm.host.boundaries)).encode())
+        for m in nm.host.epochs:
             h.update(digest(m.ppn).encode())
     else:
         h.update(digest(cell.mapping.ppn).encode())

@@ -47,10 +47,10 @@ from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
 PARAM_KEYS = ("is_colt", "is_thp", "has_rmm", "has_cluster", "use_pred",
               "set_mask", "n_ways", "k_hat", "miss_chain", "pred0",
               "asid0", "t_real", "sample_every", "is_subr", "has_ctlb",
-              "use_dead")
+              "use_dead", "coh_hw")
 (F_IS_COLT, F_IS_THP, F_HAS_RMM, F_HAS_CLUSTER, F_USE_PRED, F_SET_MASK,
  F_N_WAYS, F_K_HAT, F_MISS_CHAIN, F_PRED0, F_ASID0, F_T_REAL,
- F_SAMPLE_EVERY, F_IS_SUBR, F_HAS_CTLB, F_USE_DEAD,
+ F_SAMPLE_EVERY, F_IS_SUBR, F_HAS_CTLB, F_USE_DEAD, F_COH_HW,
  ) = range(len(PARAM_KEYS))
 N_PARAM_FIELDS = len(PARAM_KEYS)
 
@@ -60,7 +60,7 @@ def _lane_dict(p, kvals):
     return dict(
         is_colt=p[F_IS_COLT] == 1, is_thp=p[F_IS_THP] == 1,
         is_subr=p[F_IS_SUBR] == 1, has_ctlb=p[F_HAS_CTLB] == 1,
-        use_dead=p[F_USE_DEAD] == 1,
+        use_dead=p[F_USE_DEAD] == 1, coh_hw=p[F_COH_HW] == 1,
         has_rmm=p[F_HAS_RMM] == 1, has_cluster=p[F_HAS_CLUSTER] == 1,
         use_pred=p[F_USE_PRED] == 1, set_mask=p[F_SET_MASK],
         n_ways=p[F_N_WAYS], k_hat=p[F_K_HAT], miss_chain=p[F_MISS_CHAIN],

@@ -7,11 +7,12 @@ workload-derived (KV-cache serving churn, paged-attention gather order,
 training data pipeline, checkpoint shards), adversarial (compaction,
 THP splitting, NUMA interleave), dynamic (live mapping-event streams),
 multitenant (ASID-tagged address spaces under KVScheduler-derived
-context-switch schedules), and accelerator (the kv-gather recording
-interleaved at accelerator concurrency).
+context-switch schedules), accelerator (the kv-gather recording
+interleaved at accelerator concurrency), and nested (guest→host two-level
+translation worlds with host-side remap storms).
 """
 from . import (accelerator, adversarial, dynamic, multitenant,  # noqa: F401
-               synthetic, workload)
+               nested, synthetic, workload)
 from .base import (FAMILIES, Scenario, ScenarioData, ScenarioRequest,
                    clear_materialized_cache, get_scenario, list_scenarios,
                    register, scenario)

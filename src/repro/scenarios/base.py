@@ -38,10 +38,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.page_table import DynamicMapping, Mapping, MultiTenantMapping
+from ..core.page_table import (DynamicMapping, Mapping, MultiTenantMapping,
+                               NestedMapping)
 
 FAMILIES = ("synthetic", "workload", "adversarial", "dynamic", "multitenant",
-            "accelerator")
+            "accelerator", "nested")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,9 +78,13 @@ class ScenarioData:
     :class:`~repro.core.page_table.MultiTenantMapping` (tenant address
     spaces + context-switch schedule with ASID assignments); ``mapping``
     is tenant 0's space and each trace entry must be mapped in the tenant
-    scheduled at that step.  Sweep either by passing ``data.world`` (the
-    segmented world when present, else the static mapping) to
-    :class:`repro.core.sweep.SweepCell`.
+    scheduled at that step.  ``nested`` scenarios carry a
+    :class:`~repro.core.page_table.NestedMapping` (guest page tables
+    composed over a host layer + a VM schedule); ``mapping`` is the first
+    scheduled VM's initial composed view and each trace entry must be
+    mapped in the composed view live at that step.  Sweep either by
+    passing ``data.world`` (the segmented world when present, else the
+    static mapping) to :class:`repro.core.sweep.SweepCell`.
     """
 
     scenario: str
@@ -88,6 +93,7 @@ class ScenarioData:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     dynamic: Optional[DynamicMapping] = None
     multitenant: Optional[MultiTenantMapping] = None
+    nested: Optional[NestedMapping] = None
 
     @property
     def world(self):
@@ -96,6 +102,8 @@ class ScenarioData:
             return self.dynamic
         if self.multitenant is not None:
             return self.multitenant
+        if self.nested is not None:
+            return self.nested
         return self.mapping
 
 

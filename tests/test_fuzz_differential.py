@@ -2,13 +2,17 @@
 
 The simulator has four implementations of one semantics: the pure-python
 oracles (``run_method`` / ``run_method_dynamic`` /
-``run_method_multitenant``), the step-at-a-time pure-JAX reference
-(``kernels/tlb_sweep/ref.py``), the time-blocked XLA backend, and the
-Pallas kernel.  The fuzzer draws random ``(mapping events, trace, method
-kind, ctx policy, block size, tenant schedule)`` tuples and asserts all
+``run_method_multitenant`` / ``run_method_nested``), the step-at-a-time
+pure-JAX reference (``kernels/tlb_sweep/ref.py``), the time-blocked XLA
+backend, and the Pallas kernel.  The fuzzer draws random ``(mapping
+events, trace, method kind, ctx policy, coherence policy, block size,
+tenant schedule)`` tuples — including nested worlds composing random
+guest event streams over a random host event stream — and asserts all
 four agree counter-for-counter and PPN-for-PPN — any divergence is a bug
 in exactly one layer, which is what makes the redundancy worth its
-maintenance cost.
+maintenance cost.  ``test_nested_zero_stale_translation`` additionally
+pins the coherence property itself: after any host remap, no structure
+ever serves the old host PPN for an affected composed translation.
 
 The bottom of the file pins the three bugs fixed en route in PRs 2–3 as
 named seed-corpus regressions, each reproducing its original trigger:
@@ -34,8 +38,10 @@ from repro.core.baselines import (anchor_spec, base_spec, cache_tlb_spec,
 from repro.core.determine_k import determine_k
 from repro.core.lane_program import init_batched_state, pack_lanes
 from repro.core.page_table import (MappingEvent, build_dynamic_mapping,
-                                   build_multitenant_mapping, make_mapping)
-from repro.core.simulator import (run_method_dynamic, run_method_multitenant)
+                                   build_multitenant_mapping,
+                                   build_nested_mapping, make_mapping)
+from repro.core.simulator import (run_method_dynamic, run_method_multitenant,
+                                  run_method_nested)
 from repro.core.sweep import SweepCell, run_sweep
 
 COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
@@ -47,7 +53,7 @@ SPECS = [base_spec(), thp_spec(), colt_spec(), cluster_spec(), rmm_spec(),
          kaligned_spec([6, 4], use_predictor=False, name="ka-nopred"),
          subregion_spec(), cache_tlb_spec(), dead_protect_spec()]
 
-WORLD_KINDS = ("static", "dynamic", "multitenant")
+WORLD_KINDS = ("static", "dynamic", "multitenant", "nested")
 
 
 def _mapped_trace(m, n, rng):
@@ -93,6 +99,67 @@ def _gen_world(world_kind: str, seed: int):
             parts.append(p)
         return dyn, np.concatenate(parts)
 
+    if world_kind == "nested":
+        # nested: 1-2 guests, each optionally with its own event stream,
+        # composed over a host layer with its own random event stream; the
+        # VM schedule draws ASIDs from a pool smaller than the guest count
+        n_g = int(rng.integers(1, 3))
+        guests, fresh = [], 0
+        for i in range(n_g):
+            g0 = demand_mapping(n, seed=(seed + 3 * i) % 971)
+            fresh = max(fresh, int(g0.ppn.max()) + 2)
+            if rng.integers(0, 2):
+                evs = []
+                for _ in range(int(rng.integers(1, 3))):
+                    kind = str(rng.choice(["remap", "unmap", "map",
+                                           "compact"]))
+                    start = int(rng.integers(0, n - 64))
+                    ln = int(rng.integers(1, 32))
+                    if kind == "unmap":
+                        evs.append(MappingEvent("unmap", start, ln))
+                    else:
+                        evs.append(MappingEvent(kind, start, ln, ppn=fresh))
+                        fresh += ln + 1
+                guests.append(build_dynamic_mapping(
+                    g0.ppn, [(int(rng.integers(60, 200)), evs)],
+                    name=f"fzg{seed}_{i}"))
+            else:
+                guests.append(g0)
+        hsize = fresh + 8            # host covers every guest PPN
+        h_evs, hfresh = [], hsize
+        for _ in range(int(rng.integers(1, 3))):
+            kind = str(rng.choice(["remap", "unmap", "compact"]))
+            start = int(rng.integers(0, hsize - 64))
+            ln = int(rng.integers(1, 64))
+            if kind == "unmap":
+                h_evs.append(MappingEvent("unmap", start, ln))
+            else:
+                h_evs.append(MappingEvent(kind, start, ln, ppn=hfresh))
+                hfresh += ln + 1
+        host = build_dynamic_mapping(
+            np.arange(hsize, dtype=np.int64),
+            [(int(rng.integers(80, 240)), h_evs)], name=f"fzh{seed}")
+        sched, t = [], 0
+        for _ in range(int(rng.integers(2, 5))):
+            gid = int(rng.integers(0, n_g))
+            if sched and sched[-1][1] == gid:
+                asid = sched[-1][2]  # a resident VM keeps its vCPU ASID
+            else:
+                asid = int(rng.integers(0, max(n_g - 1, 1)))
+            sched.append((t, gid, asid))
+            t += 70
+        world = build_nested_mapping(guests, host, sched, name=f"fzn{seed}")
+        segs = world.plan_segments()
+        total = max(sg.lo for sg in segs) + 90
+        bounds = [sg.lo for sg in segs] + [total]
+        parts = []
+        for s, sg in enumerate(segs):
+            p = _mapped_trace(sg.mapping, bounds[s + 1] - bounds[s], rng)
+            if p is None:
+                return None          # a host unmap emptied a composed view
+            parts.append(p)
+        return world, np.concatenate(parts)
+
     # multitenant: 2-3 tenants, 5-7 segments, ASIDs drawn from a pool
     # SMALLER than the tenant count so recycling happens organically
     n_ten = int(rng.integers(2, 4))
@@ -133,7 +200,9 @@ def _gen_world(world_kind: str, seed: int):
 
 
 def _oracle(spec, world, trace):
-    from repro.core.page_table import MultiTenantMapping
+    from repro.core.page_table import MultiTenantMapping, NestedMapping
+    if isinstance(world, NestedMapping):
+        return run_method_nested(spec, world, trace)
     if isinstance(world, MultiTenantMapping):
         return run_method_multitenant(spec, world, trace)
     return run_method_dynamic(spec, world, trace)   # handles static too
@@ -165,12 +234,14 @@ def _run_ref(cell):
             cov, np.asarray(ppns)[0, : cell.trace.shape[0]])
 
 
-def _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas):
+def _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas,
+                 coh="shootdown"):
     gen = _gen_world(world_kind, seed)
     if gen is None:
         return                       # degenerate draw: nothing mapped
     world, trace = gen
-    spec = dataclasses.replace(SPECS[spec_i], ctx_policy=policy)
+    spec = dataclasses.replace(SPECS[spec_i], ctx_policy=policy,
+                               coh_policy=coh)
     cell = SweepCell(spec, world, trace)
     want = _oracle(spec, world, trace)
 
@@ -192,30 +263,72 @@ def _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas):
 
 @given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
        st.sampled_from(["flush", "tag"]), st.integers(1, 12),
-       st.sampled_from(WORLD_KINDS))
+       st.sampled_from(WORLD_KINDS),
+       st.sampled_from(["shootdown", "hw-coherence"]))
 @settings(max_examples=4, deadline=None)
-def test_differential_oracle_ref_xla(seed, spec_i, policy, tb, world_kind):
+def test_differential_oracle_ref_xla(seed, spec_i, policy, tb, world_kind,
+                                     coh):
     """oracle == step-reference == time-blocked XLA for random tuples."""
-    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=False)
+    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=False,
+                 coh=coh)
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
        st.sampled_from(["flush", "tag"]), st.integers(1, 8))
 @settings(max_examples=2, deadline=None)
 def test_differential_pallas_multitenant(seed, spec_i, policy, tb):
-    """The full four-way diff including the Pallas kernel, on the newest
-    (multi-tenant) world kind — the one most likely to regress."""
+    """The full four-way diff including the Pallas kernel, on the
+    multi-tenant world kind."""
     _check_tuple(seed, spec_i, policy, tb, "multitenant", with_pallas=True)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
+       st.sampled_from(["shootdown", "hw-coherence"]), st.integers(1, 8))
+@settings(max_examples=2, deadline=None)
+def test_differential_pallas_nested(seed, spec_i, coh, tb):
+    """The full four-way diff including the Pallas kernel, on the newest
+    (nested guest→host) world kind — the one most likely to regress."""
+    _check_tuple(seed, spec_i, "tag", tb, "nested", with_pallas=True,
+                 coh=coh)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1))
+@settings(max_examples=4, deadline=None)
+def test_nested_zero_stale_translation(seed, spec_i):
+    """Zero-stale property: after any host remap, NO structure ever serves
+    the old host PPN for an affected composed translation — every returned
+    PPN equals what the composed view live at that step says, oracle and
+    step-reference alike."""
+    gen = _gen_world("nested", seed)
+    if gen is None:
+        return
+    world, trace = gen
+    spec = SPECS[spec_i]
+    res = run_method_nested(spec, world, trace)
+    _, _, ref_ppn = _run_ref(SweepCell(spec, world, trace))
+    segs = world.plan_segments()
+    bounds = [sg.lo for sg in segs] + [trace.shape[0]]
+    for s, sg in enumerate(segs):
+        lo, hi = bounds[s], bounds[s + 1]
+        live = np.asarray(sg.mapping.ppn)[trace[lo:hi]]
+        np.testing.assert_array_equal(
+            res.ppn[lo:hi], live,
+            err_msg=f"oracle served a stale translation in segment {s}")
+        np.testing.assert_array_equal(
+            ref_ppn[lo:hi], live,
+            err_msg=f"reference served a stale translation in segment {s}")
 
 
 @pytest.mark.slow
 @given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1),
        st.sampled_from(["flush", "tag"]), st.integers(1, 16),
-       st.sampled_from(WORLD_KINDS))
+       st.sampled_from(WORLD_KINDS),
+       st.sampled_from(["shootdown", "hw-coherence"]))
 @settings(max_examples=8, deadline=None)
-def test_differential_full(seed, spec_i, policy, tb, world_kind):
+def test_differential_full(seed, spec_i, policy, tb, world_kind, coh):
     """Slow lane: more examples, every world kind, all four engines."""
-    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=True)
+    _check_tuple(seed, spec_i, policy, tb, world_kind, with_pallas=True,
+                 coh=coh)
 
 
 # ---------------------------------------------------------------------------

@@ -19,9 +19,11 @@ import os
 import numpy as np
 import pytest
 
-from repro.core.page_table import (MultiTenantMapping, make_mapping)
+from repro.core.page_table import (DynamicMapping, MultiTenantMapping,
+                                   NestedMapping, make_mapping)
 from repro.core.simulator import (MethodSpec, run_method_dynamic,
-                                  run_method_multitenant)
+                                  run_method_multitenant,
+                                  run_method_nested)
 from repro.core.sweep import SweepCell, run_sweep
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -37,10 +39,23 @@ def _load(path):
         return json.load(f)
 
 
+def _layer(d, name):
+    return DynamicMapping(
+        tuple(make_mapping(np.asarray(p, np.int64), name=f"{name}e{e}")
+              for e, p in enumerate(d["epochs"])),
+        tuple(d["boundaries"]), name=name)
+
+
 def _rebuild(g):
     spec = MethodSpec(**{**g["spec"], "K": tuple(g["spec"]["K"])})
     w = g["world"]
-    if w["kind"] == "multitenant":
+    if w["kind"] == "nested":
+        world = NestedMapping(
+            tuple(_layer(d, f"g{i}") for i, d in enumerate(w["guests"])),
+            _layer(w["host"], "host"), tuple(w["boundaries"]),
+            tuple(w["guest_ids"]), tuple(w["asids"]), name=g["name"])
+        runner = run_method_nested
+    elif w["kind"] == "multitenant":
         world = MultiTenantMapping(
             tuple(make_mapping(np.asarray(p, np.int64), name=f"t{i}")
                   for i, p in enumerate(w["tenants"])),
@@ -54,7 +69,7 @@ def _rebuild(g):
 
 
 def test_goldens_exist_and_cover_every_kind():
-    assert len(GOLDEN_FILES) >= 10
+    assert len(GOLDEN_FILES) >= 16
     gs = [_load(p) for p in GOLDEN_FILES]
     kinds = {g["spec"]["kind"] for g in gs}
     assert {"base", "thp", "colt", "cluster", "rmm", "anchor", "kaligned",
@@ -67,7 +82,30 @@ def test_goldens_exist_and_cover_every_kind():
     mt_pol = {g["spec"]["ctx_policy"] for g in gs
               if g["world"]["kind"] == "multitenant"}
     assert mt_pol == {"flush", "tag"}
+    # one nested golden per translation-coherence policy
+    coh = {g["spec"]["coh_policy"] for g in gs
+           if g["world"]["kind"] == "nested"}
+    assert coh == {"shootdown", "hw-coherence"}
     assert all(len(g["trace"]) <= 16 for g in gs)
+
+
+def test_nested_coherence_pair_differs_only_in_cycles():
+    """The nested coherence pair shares world and trace, so their diff IS
+    the coh_policy cost model: identical walks/hits/shootdowns/events and
+    a cycle gap of exactly LAT_SHOOTDOWN per dirty turnover."""
+    from repro.core.simulator import LAT_SHOOTDOWN
+    sd = _load(os.path.join(GOLDEN_DIR, "nested-host-remap.json"))
+    hw = _load(os.path.join(GOLDEN_DIR,
+                            "nested-coherence-vs-shootdown.json"))
+    assert sd["world"] == hw["world"] and sd["trace"] == hw["trace"]
+    assert sd["events"] == hw["events"]      # same entries die, same steps
+    for f, v in sd["final"].items():
+        if f != "cycles":
+            assert hw["final"][f] == pytest.approx(v), f
+    n_turnovers = sum(e["kind"] == "shootdown" for e in sd["events"])
+    assert n_turnovers == 2                  # one guest + one host epoch
+    assert sd["final"]["cycles"] - hw["final"]["cycles"] == \
+        LAT_SHOOTDOWN * n_turnovers
 
 
 @pytest.mark.parametrize("path", GOLDEN_FILES,

@@ -1,0 +1,166 @@
+"""Nested guest→host translation worlds: unit + regression tests.
+
+Three layers of confidence on top of the differential fuzzer:
+
+* :class:`~repro.core.page_table.NestedMapping` semantics pinned by hand:
+  the union segment grid (VM schedule ∪ host epochs ∪ every guest's
+  epochs), composed-view correctness, and host-event dirty sets hitting
+  guests that never ran an OS event of their own.
+* A seed-corpus cache regression: :func:`repro.core.sweep.cell_key` must
+  fold BOTH translation levels' epoch PPNs — two nested worlds differing
+  only in a host-side remap (which guests never observe directly) map the
+  same guest tables and traces, so a key reading only the guest level
+  would silently serve one world's cached results for the other.
+* A hand-checkable parity + coherence-cost check: oracle == step-ref ==
+  XLA on a nested world under both ``coh_policy`` values, with
+  ``hw-coherence`` dropping the identical entry set for strictly fewer
+  stall cycles than ``shootdown``.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import demand_mapping
+from repro.core.baselines import base_spec, kaligned_spec
+from repro.core.page_table import (UNMAPPED, MappingEvent,
+                                   build_dynamic_mapping,
+                                   build_nested_mapping)
+from repro.core.simulator import run_method_nested
+from repro.core.sweep import SweepCell, cell_key, run_sweep
+
+N = 512
+
+
+def _world(host_dest_off=5, guest_dest=None, n=N):
+    """A 2-guest nested world: g0 runs a guest remap at t=120, the host
+    runs a remap at t=200 (g1 never runs any event of its own)."""
+    g0_base = demand_mapping(n, seed=11)
+    g1 = demand_mapping(n, seed=13, thp=True)
+    fresh = guest_dest if guest_dest is not None else \
+        int(g0_base.ppn.max()) + 2
+    g0 = build_dynamic_mapping(
+        g0_base.ppn, [(120, [MappingEvent("remap", 40, 30, ppn=fresh)])],
+        name="g0")
+    hmax = max(int(np.max(np.asarray(m.ppn))) for m in
+               (g0.epochs[0], g0.epochs[1], g1)) + 40
+    h0 = np.arange(hmax, dtype=np.int64)
+    # the remap window straddles both guests' frame ranges (g0 low, g1
+    # from 512 up) so one host event dirties composed views of both
+    host = build_dynamic_mapping(
+        h0, [(200, [MappingEvent("remap", 480, 96,
+                                 ppn=hmax + host_dest_off)])],
+        name="host")
+    return build_nested_mapping(
+        [g0, g1], host, [(0, 0, 0), (90, 1, 1), (180, 0, 0), (260, 1, 1)],
+        name="nw")
+
+
+def _trace(world, total=330, seed=5):
+    rng = np.random.default_rng(seed)
+    segs = world.plan_segments()
+    bounds = [s.lo for s in segs] + [total]
+    parts = []
+    for s, seg in enumerate(segs):
+        mv = np.flatnonzero(np.asarray(seg.mapping.ppn) >= 0)
+        parts.append(mv[rng.integers(0, mv.size, bounds[s + 1] - bounds[s])])
+    return np.concatenate(parts).astype(np.int64)
+
+
+def test_union_segment_grid():
+    """Segment boundaries are the union of the VM schedule (0/90/180/260),
+    g0's guest epoch (120) and the host epoch (200) — including epochs of
+    worlds not scheduled at that instant."""
+    world = _world()
+    segs = world.plan_segments()
+    assert [s.lo for s in segs] == [0, 90, 120, 180, 200, 260]
+    # t=120: g0's OWN epoch turns over while g0 is scheduled — no switch
+    assert [s.guest_id for s in segs] == [0, 1, 1, 0, 0, 1]
+    assert [s.switch for s in segs] == [False, True, False, True, False,
+                                        True]
+    # g0's remap at 120 lands while g1 is scheduled — the dirty set is
+    # ASID-blind (g0's entries may still be cached under its ASID), so the
+    # boundary carries g0's composed diff even though g1's view is clean
+    d120 = segs[2].dirty
+    assert d120 is not None
+    before = np.asarray(world.composed(0, 0, 0).ppn)
+    after = np.asarray(world.composed(0, 1, 0).ppn)
+    np.testing.assert_array_equal(
+        d120, (before != UNMAPPED) & (before != after))
+
+
+def test_composed_view_is_host_of_guest():
+    world = _world()
+    g1 = world.guests[1].epochs[0].ppn
+    for he, host_m in enumerate(world.host.epochs):
+        c = np.asarray(world.composed(1, 0, he).ppn)
+        h = np.asarray(host_m.ppn)
+        g = np.asarray(g1)
+        ok = (g != UNMAPPED) & (g < h.shape[0])
+        np.testing.assert_array_equal(c[ok], h[g[ok]])
+        assert (c[~ok] == UNMAPPED).all()
+
+
+def test_host_event_dirties_untouched_guest():
+    """The host remap at t=200 dirties composed translations of BOTH
+    guests — including g1, which never ran a guest event."""
+    world = _world()
+    seg = next(s for s in world.plan_segments() if s.lo == 200)
+    assert seg.dirty is not None and seg.dirty.any()
+    # the dirty set is exactly the vpns whose composed translation moved,
+    # for ANY guest, comparing the views live just before vs just after
+    expect = np.zeros(world.n_pages, bool)
+    for gid, ge in ((0, 1), (1, 0)):     # guest epochs live at t=200
+        before = np.asarray(world.composed(gid, ge, 0).ppn)
+        after = np.asarray(world.composed(gid, ge, 1).ppn)
+        d = (before != UNMAPPED) & (before != after)
+        expect[: d.shape[0]] |= d        # guest footprints differ in size
+    np.testing.assert_array_equal(seg.dirty, expect)
+    # g1 alone has moved translations: host coherence reaches guests that
+    # never touched their own page tables
+    b1 = np.asarray(world.composed(1, 0, 0).ppn)
+    a1 = np.asarray(world.composed(1, 0, 1).ppn)
+    assert ((b1 != UNMAPPED) & (b1 != a1)).any()
+
+
+def test_cell_key_folds_both_translation_levels():
+    """Seed corpus: the sweep cache key must distinguish nested worlds
+    that differ ONLY in a host-side event (same guest tables, same trace)
+    — and equally ones differing only in a guest-side event — or cached
+    cells alias across host layouts."""
+    spec = base_spec()
+    base = _world()
+    trace = _trace(base)
+    k_base = cell_key(SweepCell(spec, base, trace))
+    # same guests, same trace, different host remap destination
+    k_host = cell_key(SweepCell(spec, _world(host_dest_off=200), trace))
+    assert k_host != k_base
+    # different guest remap destination
+    k_guest = cell_key(SweepCell(spec, _world(guest_dest=2000), trace))
+    assert k_guest != k_base and k_guest != k_host
+    # deterministic rebuild of the identical world hits the same key
+    assert cell_key(SweepCell(spec, _world(), trace)) == k_base
+
+
+def test_nested_parity_and_coherence_cost():
+    """oracle == XLA sweep on a nested world under both coh_policy values;
+    both policies invalidate the identical entry set (walks/hits/
+    shootdowns bit-equal) and hw-coherence pays strictly fewer cycles."""
+    world = _world()
+    trace = _trace(world)
+    res = {}
+    for coh in ("shootdown", "hw-coherence"):
+        spec = dataclasses.replace(kaligned_spec([9, 6, 4]), coh_policy=coh)
+        want = run_method_nested(spec, world, trace)
+        got = run_sweep([SweepCell(spec, world, trace)], cache=False,
+                        backend="xla", block_size=6).results[0]
+        for f in ("accesses", "l1_hits", "l2_regular_hits",
+                  "l2_coalesced_hits", "walks", "aligned_probes",
+                  "pred_correct", "cycles", "coverage_mean", "shootdowns"):
+            assert getattr(got, f) == getattr(want, f), (coh, f)
+        np.testing.assert_array_equal(got.ppn, want.ppn)
+        res[coh] = want
+    sd, hw = res["shootdown"], res["hw-coherence"]
+    assert hw.walks == sd.walks and hw.shootdowns == sd.shootdowns
+    np.testing.assert_array_equal(hw.ppn, sd.ppn)
+    assert hw.shootdowns > 0          # the world actually invalidates
+    assert hw.cycles < sd.cycles      # ... and hw-coherence is cheaper

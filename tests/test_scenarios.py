@@ -51,6 +51,16 @@ def test_every_scenario_materializes_valid_world(name):
             seg = d.trace[bounds[s]: bounds[s + 1]]
             assert (seg < m.n_pages).all() and (m.ppn[seg] >= 0).all(), \
                 f"trace hit a vpn unmapped in its tenant (segment {s})"
+    elif d.nested is not None:
+        nw = d.nested
+        assert d.trace.max() < nw.n_pages
+        segs = nw.plan_segments()
+        bounds = [sg.lo for sg in segs] + [d.trace.shape[0]]
+        for s, sg in enumerate(segs):
+            seg = d.trace[bounds[s]: bounds[s + 1]]
+            m = sg.mapping
+            assert (seg < m.n_pages).all() and (m.ppn[seg] >= 0).all(), \
+                f"trace hit a vpn unmapped in its composed view (segment {s})"
     elif d.dynamic is not None:
         assert d.trace.max() < d.mapping.n_pages
         bounds = list(d.dynamic.boundaries) + [d.trace.shape[0]]
