@@ -7,9 +7,11 @@ before the existence check, so ``file.py#L123``-style references stay
 checkable as files.
 
 Additionally enforces that ``docs/methods.md`` documents EVERY MethodSpec
-kind registered in ``src/repro/core/simulator.py`` (the ``KINDS`` tuple,
-parsed textually so the check needs no jax import): adding a kind without
-documenting its entry format and semantics fails CI.
+kind registered in ``src/repro/core/simulator.py``.  The kind registry is
+resolved through the shared static parser in ``repro.analysis.kinds``
+(AST-based, no jax import) — the same one the contract checker uses, so
+the two can never drift.  Adding a kind without documenting its entry
+format and semantics fails CI.
 
 Exit code 1 with a listing when any link is broken or any kind is
 undocumented.
@@ -22,6 +24,12 @@ import os
 import re
 import subprocess
 import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis import kinds as _kinds  # noqa: E402
+from repro.analysis.framework import Repo  # noqa: E402
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_SCHEMES = ("http://", "https://", "mailto:")
@@ -50,34 +58,17 @@ def md_files(root: str):
 
 
 def registered_kinds(root: str):
-    """The simulator's KINDS tuple, read textually (no jax import)."""
-    sim = os.path.join(root, "src", "repro", "core", "simulator.py")
-    with open(sim, encoding="utf-8") as f:
-        text = f.read()
-    kinds = []
-    for name in ("ACCEL_KINDS", "KINDS"):
-        m = re.search(rf"^{name}\s*(?::[^=]+)?=\s*\(([^)]*)\)", text,
-                      re.MULTILINE)
-        assert m, f"cannot locate {name} in simulator.py"
-        kinds.extend(re.findall(r'"([^"]+)"', m.group(1)))
-    # KINDS is written "(...classic...) + ACCEL_KINDS"; the paren capture
-    # holds only the classic literals and the ACCEL_KINDS pass collected
-    # the rest — dedup defensively, keep order
-    seen = set()
-    return [k for k in kinds if not (k in seen or seen.add(k))]
+    """The simulator's KINDS tuple, via the shared AST parser."""
+    return _kinds.registered_kinds(Repo(root))
 
 
 def check_methods_doc(root: str) -> list:
     """Every registered kind must appear as ``kind: `<name>``` in
     docs/methods.md — the complete-methods-reference contract."""
-    doc = os.path.join(root, "docs", "methods.md")
-    if not os.path.exists(doc):
+    if not os.path.exists(os.path.join(root, "docs", "methods.md")):
         return ["docs/methods.md missing"]
-    with open(doc, encoding="utf-8") as f:
-        text = f.read()
     return [f"docs/methods.md does not document kind `{k}`"
-            for k in registered_kinds(root)
-            if f"`{k}`" not in text]
+            for k in _kinds.undocumented_kinds(Repo(root))]
 
 
 def check(root: str) -> int:

@@ -85,6 +85,28 @@ def committed_trajectory() -> list:
     return data
 
 
+def _step_summary(entry: dict, baseline, status: str, failed: bool) -> None:
+    """Append the measured entry (and, when the gate is unarmed, the
+    ready-to-commit baseline JSON) to the GitHub Actions step summary."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = ["## Tier-1 wall-time budget", "",
+             f"- measured: **{entry['wall_s']}s** on `{entry['host']}` "
+             f"at `{entry['git_sha']}`",
+             f"- status: {'**BUDGET EXCEEDED** — ' if failed else ''}"
+             f"{status}"]
+    if baseline is None:
+        lines += ["", "Gate **not armed** for this host class — commit "
+                  "this entry to `BENCH_tier1.json` to arm it:", "",
+                  "```json", json.dumps(entry), "```"]
+    try:
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write("\n".join(lines) + "\n\n")
+    except OSError:
+        pass
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     pytest_args: list = []
@@ -147,6 +169,7 @@ def main(argv=None) -> int:
                   f"new BENCH_tier1.json entry in this PR.",
                   file=sys.stderr)
     print(f"tier-1 wall={wall}s [{status}]")
+    _step_summary(entry, baseline, status, failed)
 
     if not args.no_append:
         traj = load_trajectory()

@@ -1,0 +1,31 @@
+"""Static contract checker for the four-executor TLB simulation.
+
+AST-based analyses that prove, at lint time, what the fuzzer and goldens
+prove dynamically: the pure-python oracle, the step reference, the XLA
+scan and the Pallas kernel stay registered, dispatched and cache-keyed
+in sync.  Stdlib-only by design — see :mod:`repro.analysis.framework`.
+
+Run via ``scripts/check_contracts.py``; passes are documented in
+``docs/analysis.md``.
+"""
+from . import (pass_cache_key, pass_kind_dispatch, pass_latency,
+               pass_plane_layout, pass_purity)
+from .framework import (Finding, Repo, Suppression, has_errors,
+                        load_suppressions, run_passes)
+from .kinds import registered_kinds, spec_factories, undocumented_kinds
+
+ALL_PASSES = (
+    pass_kind_dispatch,
+    pass_plane_layout,
+    pass_latency,
+    pass_purity,
+    pass_cache_key,
+)
+
+PASS_BY_RULE = {p.RULE: p for p in ALL_PASSES}
+
+__all__ = [
+    "ALL_PASSES", "PASS_BY_RULE", "Finding", "Repo", "Suppression",
+    "has_errors", "load_suppressions", "registered_kinds", "run_passes",
+    "spec_factories", "undocumented_kinds",
+]

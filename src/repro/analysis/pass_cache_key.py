@@ -1,0 +1,250 @@
+"""Pass: the on-disk result cache can never serve stale results.
+
+``cell_key`` must fold every semantic input of a sweep cell; anything it
+misses silently serves yesterday's counters after today's change.  The
+contract, checked statically against ``sweep.py``:
+
+* **spec**: ``cell_key`` hashes ``repr(cell.spec)``, which covers every
+  ``MethodSpec`` dataclass field automatically — so the pass verifies the
+  ``repr(...)`` fold is still there and that no field opts out with
+  ``repr=False``.  (Adding a spec field therefore never needs a checker
+  update; removing the repr fold turns this pass red.)
+* **worlds**: each ``isinstance`` branch of ``cell_key`` must read the
+  world attributes declared in ``WORLD_KEY_ATTRS`` — the semantic content
+  of each mapping type.  ``_WorldPlan``'s fields in ``lane_program.py``
+  are diffed against ``WORLDPLAN_FOLDS``: each field must be declared
+  either folded (with the attribute evidence above) or derived from
+  folded data; a new field fails until classified.
+* **execution knobs**: ``run_sweep`` keyword parameters must stay within
+  ``EXEC_KNOB_ALLOWLIST`` — knobs proven bit-exactness-neutral (any
+  backend/block size may serve any cached cell).  A new parameter fails
+  until it is either folded into ``cell_key`` or allowlisted here with
+  that proof.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .framework import Finding, Repo, missing_file
+
+RULE = "cache-key"
+
+SWEEP = "src/repro/core/sweep.py"
+SIMULATOR = "src/repro/core/simulator.py"
+LANE_PROGRAM = "src/repro/core/lane_program.py"
+
+# Execution-only run_sweep parameters: bit-exactness across their values
+# is enforced by tests/test_backends.py, so they are excluded from the
+# key by design.
+EXEC_KNOB_ALLOWLIST = {"cells", "cache", "cache_dir", "backend",
+                       "block_size"}
+
+# Attribute reads each cell_key world branch must make.  Keyed by the
+# isinstance() class name of the branch; "" is the final else (static
+# mapping) branch.
+WORLD_KEY_ATTRS: Dict[str, Set[str]] = {
+    "DynamicMapping": {"boundaries", "epochs", "ppn"},
+    "MultiTenantMapping": {"boundaries", "tenant_ids", "asids",
+                           "recycled", "tenants", "ppn"},
+    "NestedMapping": {"boundaries", "guest_ids", "asids", "recycled",
+                      "guests", "host", "epochs", "ppn"},
+    "": {"ppn"},
+}
+
+# _WorldPlan fields -> how the cache key covers them.  "folded" fields
+# are hashed via the world attributes above; "derived" fields are
+# computed at plan time purely from folded data, so hashing them again
+# would be redundant.
+WORLDPLAN_FOLDS: Dict[str, str] = {
+    "sources": "folded: per-source ppn digests (epochs/tenants/"
+               "guests/host)",
+    "bounds": "folded: world boundaries tuples",
+    "src_idx": "folded: tenant_ids/guest_ids schedule identity",
+    "asids": "folded: asids tuples",
+    "switch": "derived: recomputed from tenant_ids/boundaries",
+    "recycled": "folded: recycled tuples",
+    "dirty": "derived: recomputed from consecutive epoch ppn diffs",
+}
+
+
+def _function(tree: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _dataclass_fields(tree: ast.AST, cls: str) -> List[ast.AnnAssign]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return [n for n in node.body if isinstance(n, ast.AnnAssign)]
+    return []
+
+
+def _branch_attrs(fn: ast.FunctionDef) -> Dict[str, Set[str]]:
+    """isinstance-class-name -> attribute names read in that cell_key
+    branch (the trailing else keyed "")."""
+    out: Dict[str, Set[str]] = {}
+
+    def attrs_in(body) -> Set[str]:
+        got: Set[str] = set()
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Attribute):
+                    got.add(node.attr)
+        return got
+
+    def class_of(test: ast.expr) -> Optional[str]:
+        if (isinstance(test, ast.Call) and isinstance(test.func, ast.Name)
+                and test.func.id == "isinstance" and len(test.args) == 2):
+            cls = test.args[1]
+            if isinstance(cls, ast.Name):
+                return cls.id
+            if isinstance(cls, ast.Attribute):
+                return cls.attr
+        return None
+
+    def walk_chain(stmt: ast.If):
+        cls = class_of(stmt.test)
+        if cls is not None:
+            out[cls] = attrs_in(stmt.body)
+        orelse = stmt.orelse
+        if len(orelse) == 1 and isinstance(orelse[0], ast.If):
+            walk_chain(orelse[0])
+        elif orelse:
+            out[""] = attrs_in(orelse)
+
+    for stmt in fn.body:
+        if isinstance(stmt, ast.If) and class_of(stmt.test) is not None:
+            walk_chain(stmt)
+    return out
+
+
+def run(repo: Repo) -> List[Finding]:
+    sweep_tree = repo.tree(SWEEP)
+    sim_tree = repo.tree(SIMULATOR)
+    lane_tree = repo.tree(LANE_PROGRAM)
+    findings: List[Finding] = []
+    if sweep_tree is None:
+        return [missing_file(SWEEP, RULE, "file absent or unparseable")]
+
+    key_fn = _function(sweep_tree, "cell_key")
+    if key_fn is None:
+        return [missing_file(SWEEP, RULE, "cell_key() not found")]
+
+    # -- spec fold: repr(cell.spec) ------------------------------------
+    has_spec_repr = any(
+        isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+        and node.func.id == "repr" and node.args
+        and isinstance(node.args[0], ast.Attribute)
+        and node.args[0].attr == "spec"
+        for node in ast.walk(key_fn))
+    if not has_spec_repr:
+        findings.append(Finding(
+            file=SWEEP, line=key_fn.lineno, rule=RULE, severity="error",
+            message="cell_key no longer folds repr(cell.spec)",
+            hint="the dataclass repr is what makes every MethodSpec "
+                 "field cache-relevant automatically"))
+
+    if sim_tree is not None:
+        for field in _dataclass_fields(sim_tree, "MethodSpec"):
+            val = field.value
+            if not isinstance(val, ast.Call):
+                continue
+            fname = val.func.attr if isinstance(val.func, ast.Attribute) \
+                else getattr(val.func, "id", "")
+            if fname != "field":
+                continue
+            for kw in val.keywords:
+                if (kw.arg == "repr"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is False):
+                    name = getattr(field.target, "id", "?")
+                    findings.append(Finding(
+                        file=SIMULATOR, line=field.lineno, rule=RULE,
+                        severity="error",
+                        message=f"MethodSpec.{name} sets repr=False and "
+                                f"escapes the cache key",
+                        hint="cell_key folds repr(spec); an unrepresented "
+                             "field can serve stale results"))
+    else:
+        findings.append(missing_file(SIMULATOR, RULE,
+                                     "file absent or unparseable"))
+
+    # -- world folds per isinstance branch -----------------------------
+    branches = _branch_attrs(key_fn)
+    for cls, want in WORLD_KEY_ATTRS.items():
+        got = branches.get(cls)
+        label = cls or "<static else>"
+        if got is None:
+            findings.append(Finding(
+                file=SWEEP, line=key_fn.lineno, rule=RULE,
+                severity="error",
+                message=f"cell_key has no {label} world branch",
+                hint="every mapping type needs an explicit content "
+                     "fold"))
+            continue
+        missing = want - got
+        if missing:
+            findings.append(Finding(
+                file=SWEEP, line=key_fn.lineno, rule=RULE,
+                severity="error",
+                message=f"cell_key {label} branch no longer reads "
+                        f"{sorted(missing)}",
+                hint="these world attributes are semantic inputs; "
+                     "dropping them from the key serves stale results"))
+    for cls in branches:
+        if cls not in WORLD_KEY_ATTRS:
+            findings.append(Finding(
+                file=SWEEP, line=key_fn.lineno, rule=RULE,
+                severity="error",
+                message=f"cell_key folds unknown world type {cls}",
+                hint="declare its required attributes in "
+                     "pass_cache_key.WORLD_KEY_ATTRS"))
+
+    # -- _WorldPlan fields all classified ------------------------------
+    if lane_tree is not None:
+        plan_fields = [getattr(f.target, "id", "?")
+                       for f in _dataclass_fields(lane_tree, "_WorldPlan")]
+        if not plan_fields:
+            findings.append(missing_file(LANE_PROGRAM, RULE,
+                                         "_WorldPlan dataclass not found"))
+        for name in plan_fields:
+            if name not in WORLDPLAN_FOLDS:
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE,
+                    severity="error",
+                    message=f"_WorldPlan.{name} is not classified in the "
+                            f"cache-key contract",
+                    hint="declare it folded (and fold it in cell_key) or "
+                         "derived in pass_cache_key.WORLDPLAN_FOLDS"))
+        for name in WORLDPLAN_FOLDS:
+            if name not in plan_fields:
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE,
+                    severity="warning",
+                    message=f"cache-key contract lists unknown "
+                            f"_WorldPlan field {name!r}",
+                    hint="remove its WORLDPLAN_FOLDS entry"))
+    else:
+        findings.append(missing_file(LANE_PROGRAM, RULE,
+                                     "file absent or unparseable"))
+
+    # -- run_sweep knobs stay allowlisted ------------------------------
+    rs = _function(sweep_tree, "run_sweep")
+    if rs is None:
+        findings.append(missing_file(SWEEP, RULE, "run_sweep() not found"))
+    else:
+        params = [a.arg for a in rs.args.args + rs.args.kwonlyargs]
+        for p in params:
+            if p not in EXEC_KNOB_ALLOWLIST:
+                findings.append(Finding(
+                    file=SWEEP, line=rs.lineno, rule=RULE,
+                    severity="error",
+                    message=f"run_sweep parameter {p!r} is neither "
+                            f"folded into cell_key nor allowlisted",
+                    hint="if it can change results, fold it into the "
+                         "key; if provably execution-only, add it to "
+                         "EXEC_KNOB_ALLOWLIST with that proof"))
+    return findings

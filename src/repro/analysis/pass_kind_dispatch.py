@@ -1,0 +1,368 @@
+"""Pass: every registered method kind is dispatched everywhere it must be.
+
+The repo's correctness story is four executors of one semantics; the
+fuzzer and goldens prove them bit-exact *dynamically*, but only for the
+kinds they were told about.  This pass closes the registration loop
+statically: for every kind in ``simulator.KINDS`` it demands
+
+* **dispatch evidence** in the pure-python oracle (``simulator.py``) and
+  in the shared lane program (``lane_program.py``) — the kind's selector
+  literal inside the named function, per the contract table below;
+* **flag plumbing** — kinds selected per lane by a boolean must carry it
+  through ``STEP_KEYS`` (lane program), ``PARAM_KEYS`` and ``_lane_dict``
+  (Pallas kernel), and the ``lanes`` dict built by ``pack_lanes``;
+* **a golden** under ``tests/goldens/`` whose ``spec.kind`` matches;
+* **test registration** — a spec factory for the kind in ``baselines.py``
+  that appears in both ``tests/test_backends.py::ALL_KINDS`` and
+  ``tests/test_fuzz_differential.py::SPECS``;
+* **documentation** in ``docs/methods.md`` (shared with
+  ``scripts/check_docs_links.py``).
+
+A kind with no entry in ``KIND_CONTRACTS`` fails too: adding a kind means
+declaring how it is dispatched, in this one table.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from typing import Dict, List, Optional, Set
+
+from .framework import Finding, Repo, missing_file
+from .kinds import (BASELINES, METHODS_DOC, SIMULATOR, registered_kinds,
+                    spec_factories, undocumented_kinds)
+
+RULE = "kind-dispatch"
+
+LANE_PROGRAM = "src/repro/core/lane_program.py"
+TLB_SWEEP = "src/repro/kernels/tlb_sweep/tlb_sweep.py"
+BACKENDS_TEST = "tests/test_backends.py"
+FUZZ_TEST = "tests/test_fuzz_differential.py"
+GOLDEN_DIR = "tests/goldens"
+
+# Per-kind dispatch contract.  ``oracle``/``lane``: (function, literal)
+# pairs — the selector literal must occur inside that function of
+# simulator.py / lane_program.py.  ``None`` means the kind rides the
+# generic datapath there (no kind-specific selector to check).  ``flag``:
+# the per-lane boolean that selects the kind's datapath in step_access,
+# or None for kinds driven by generic lane data (K classes, predictor).
+KIND_CONTRACTS: Dict[str, Dict] = {
+    "base": dict(oracle=None, lane=None, flag=None),
+    "thp": dict(oracle=[("_run_segments", "thp"), ("_simulate", "thp")],
+                lane=[("pack_lanes", "thp"), ("_fill_profile_key", "thp")],
+                flag="is_thp"),
+    "colt": dict(oracle=[("_run_segments", "colt"), ("_simulate", "colt")],
+                 lane=[("pack_lanes", "colt"),
+                       ("_fill_profile_key", "colt")],
+                 flag="is_colt"),
+    "cluster": dict(oracle=[("_run_segments", "cluster"),
+                            ("_simulate", "cluster")],
+                    lane=[("pack_lanes", "cluster")],
+                    flag="has_cluster"),
+    "rmm": dict(oracle=[("_run_segments", "rmm"), ("_simulate", "rmm")],
+                lane=[("pack_lanes", "rmm")],
+                flag="has_rmm"),
+    "anchor": dict(oracle=[("_simulate", "anchor"),
+                           ("miss_chain_cycles", "anchor")],
+                   lane=[("_fill_profile_key", "anchor")],
+                   flag=None),
+    "kaligned": dict(oracle=[("_simulate", "kaligned"),
+                             ("miss_chain_cycles", "kaligned")],
+                     lane=[("_fill_profile_key", "kaligned")],
+                     flag=None),
+    "subregion": dict(oracle=[("_run_segments", "subregion")],
+                      lane=[("pack_lanes", "subregion"),
+                            ("_fill_profile_key", "subregion")],
+                      flag="is_subr"),
+    "cache-tlb": dict(oracle=[("_run_segments", "cache-tlb")],
+                      lane=[("pack_lanes", "cache-tlb")],
+                      flag="has_ctlb"),
+    "dead-protect": dict(oracle=[("_run_segments", "dead-protect")],
+                         lane=[("pack_lanes", "dead-protect")],
+                         flag="use_dead"),
+}
+
+
+def _function(tree: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _literals_in(fn: ast.FunctionDef) -> Set[str]:
+    return {n.value for n in ast.walk(fn)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def _str_tuple(tree: ast.AST, name: str) -> Optional[List[str]]:
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name):
+            try:
+                val = ast.literal_eval(node.value)
+            except ValueError:
+                return None
+            if isinstance(val, tuple) and all(isinstance(v, str)
+                                              for v in val):
+                return list(val)
+    return None
+
+
+def _dict_keys_built(fn: ast.FunctionDef, var: str) -> Set[str]:
+    """Keys of the ``var = dict(...)`` literal plus ``var["k"] = ...`` and
+    ``var["k"][i] = ...`` writes inside ``fn``."""
+    keys: Set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == var
+                and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Name)
+                and node.value.func.id == "dict"):
+            keys.update(kw.arg for kw in node.value.keywords if kw.arg)
+        if isinstance(node, ast.Subscript):
+            tgt = node.value
+            while isinstance(tgt, ast.Subscript):
+                tgt = tgt.value
+            if (isinstance(tgt, ast.Name) and tgt.id == var
+                    and isinstance(node.slice, ast.Constant)
+                    and isinstance(node.slice.value, str)):
+                keys.add(node.slice.value)
+    return keys
+
+
+def _names_in(fn: ast.FunctionDef) -> Set[str]:
+    return {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+
+
+def _golden_kinds(repo: Repo) -> Set[str]:
+    out: Set[str] = set()
+    for name in repo.listdir(GOLDEN_DIR):
+        if not name.endswith(".json"):
+            continue
+        text = repo.text(f"{GOLDEN_DIR}/{name}")
+        try:
+            data = json.loads(text or "")
+        except json.JSONDecodeError:
+            continue
+        kind = (data.get("spec") or {}).get("kind")
+        if kind:
+            out.add(kind)
+    return out
+
+
+def _factory_calls(repo: Repo, rel: str, var: str) -> Optional[Set[str]]:
+    tree = repo.tree(rel)
+    if tree is None:
+        return None
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == var):
+            return {c.func.id for c in ast.walk(node.value)
+                    if isinstance(c, ast.Call)
+                    and isinstance(c.func, ast.Name)}
+    return None
+
+
+def run(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    sim_tree = repo.tree(SIMULATOR)
+    lane_tree = repo.tree(LANE_PROGRAM)
+    if sim_tree is None or lane_tree is None:
+        bad = SIMULATOR if sim_tree is None else LANE_PROGRAM
+        return [missing_file(bad, RULE, "file absent or unparseable")]
+    try:
+        kinds = registered_kinds(repo)
+    except ValueError as e:
+        return [missing_file(SIMULATOR, RULE, str(e))]
+
+    def fn_literals(tree, rel, name) -> Optional[Set[str]]:
+        fn = _function(tree, name)
+        if fn is None:
+            findings.append(Finding(
+                file=rel, line=0, rule=RULE, severity="error",
+                message=f"expected function {name}() not found",
+                hint="the kind-dispatch contract table names it; update "
+                     "KIND_CONTRACTS if it was renamed"))
+            return None
+        return _literals_in(fn)
+
+    lit_cache: Dict = {}
+
+    def check_evidence(kind, where, tree, rel):
+        for fname, literal in where or []:
+            key = (rel, fname)
+            if key not in lit_cache:
+                lit_cache[key] = fn_literals(tree, rel, fname)
+            lits = lit_cache[key]
+            if lits is not None and literal not in lits:
+                findings.append(Finding(
+                    file=rel, line=0, rule=RULE, severity="error",
+                    message=f"kind {kind!r}: selector literal {literal!r} "
+                            f"missing from {fname}()",
+                    hint="the executor no longer dispatches this kind "
+                         "here; restore the dispatch or update "
+                         "KIND_CONTRACTS"))
+
+    step_keys = _str_tuple(lane_tree, "STEP_KEYS")
+    tlb_tree = repo.tree(TLB_SWEEP)
+    param_keys = (_str_tuple(tlb_tree, "PARAM_KEYS")
+                  if tlb_tree is not None else None)
+    if step_keys is None:
+        findings.append(missing_file(LANE_PROGRAM, RULE,
+                                     "STEP_KEYS tuple not found"))
+    if param_keys is None:
+        findings.append(missing_file(TLB_SWEEP, RULE,
+                                     "PARAM_KEYS tuple not found"))
+
+    pack_fn = _function(lane_tree, "pack_lanes")
+    step_fn = _function(lane_tree, "step_access")
+    lanes_keys = (_dict_keys_built(pack_fn, "lanes")
+                  if pack_fn is not None else set())
+    step_names = _names_in(step_fn) if step_fn is not None else set()
+    step_strings = _literals_in(step_fn) if step_fn is not None else set()
+    lane_dict_fn = (_function(tlb_tree, "_lane_dict")
+                    if tlb_tree is not None else None)
+    lane_dict_keys: Set[str] = set()
+    if lane_dict_fn is not None:
+        for node in ast.walk(lane_dict_fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "dict"):
+                lane_dict_keys.update(kw.arg for kw in node.keywords
+                                      if kw.arg)
+
+    golden_kinds = _golden_kinds(repo)
+    factories = spec_factories(repo)
+    backends_calls = _factory_calls(repo, BACKENDS_TEST, "ALL_KINDS")
+    fuzz_calls = _factory_calls(repo, FUZZ_TEST, "SPECS")
+    if backends_calls is None:
+        findings.append(missing_file(BACKENDS_TEST, RULE,
+                                     "ALL_KINDS list not found"))
+    if fuzz_calls is None:
+        findings.append(missing_file(FUZZ_TEST, RULE,
+                                     "SPECS list not found"))
+
+    for kind in kinds:
+        contract = KIND_CONTRACTS.get(kind)
+        if contract is None:
+            findings.append(Finding(
+                file=SIMULATOR, line=0, rule=RULE, severity="error",
+                message=f"kind {kind!r} has no entry in the dispatch "
+                        f"contract table",
+                hint="declare its oracle/lane selectors and flag in "
+                     "repro.analysis.pass_kind_dispatch.KIND_CONTRACTS"))
+            continue
+        check_evidence(kind, contract["oracle"], sim_tree, SIMULATOR)
+        check_evidence(kind, contract["lane"], lane_tree, LANE_PROGRAM)
+
+        flag = contract["flag"]
+        if flag is not None:
+            for keys, rel, what in (
+                    (step_keys, LANE_PROGRAM, "STEP_KEYS"),
+                    (param_keys, TLB_SWEEP, "PARAM_KEYS")):
+                if keys is not None and flag not in keys:
+                    findings.append(Finding(
+                        file=rel, line=0, rule=RULE, severity="error",
+                        message=f"kind {kind!r}: lane flag {flag!r} "
+                                f"missing from {what}",
+                        hint="the flag must flow through both backends' "
+                             "per-lane scalar plumbing"))
+            if pack_fn is not None and flag not in lanes_keys:
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE, severity="error",
+                    message=f"kind {kind!r}: pack_lanes never sets "
+                            f"lanes[{flag!r}]",
+                    hint="every STEP_KEYS flag must be packed per lane"))
+            if (step_fn is not None and flag not in step_names
+                    and flag not in step_strings):
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE, severity="error",
+                    message=f"kind {kind!r}: step_access never reads "
+                            f"lane flag {flag!r}",
+                    hint="the shared step is the only datapath; a flag "
+                         "it ignores dispatches nothing"))
+            if lane_dict_fn is not None and flag not in lane_dict_keys:
+                findings.append(Finding(
+                    file=TLB_SWEEP, line=0, rule=RULE, severity="error",
+                    message=f"kind {kind!r}: _lane_dict omits flag "
+                            f"{flag!r}",
+                    hint="the Pallas kernel rebuilds the lane dict from "
+                         "its params row; every STEP_KEYS flag belongs "
+                         "there"))
+
+        if kind not in golden_kinds:
+            findings.append(Finding(
+                file=GOLDEN_DIR, line=0, rule=RULE, severity="error",
+                message=f"kind {kind!r} has no golden trace",
+                hint="add one via scripts/make_goldens.py"))
+        fnames = factories.get(kind, [])
+        if not fnames:
+            findings.append(Finding(
+                file=BASELINES, line=0, rule=RULE, severity="error",
+                message=f"kind {kind!r} has no spec factory",
+                hint="add a *_spec() factory so tests can register it"))
+        else:
+            for calls, rel, what in ((backends_calls, BACKENDS_TEST,
+                                      "ALL_KINDS"),
+                                     (fuzz_calls, FUZZ_TEST, "SPECS")):
+                if calls is not None and not set(fnames) & calls:
+                    findings.append(Finding(
+                        file=rel, line=0, rule=RULE, severity="error",
+                        message=f"kind {kind!r}: no factory of "
+                                f"{fnames} appears in {what}",
+                        hint="register the kind so the differential "
+                             "suites exercise it"))
+
+    for kind in undocumented_kinds(repo):
+        findings.append(Finding(
+            file=METHODS_DOC, line=0, rule=RULE, severity="error",
+            message=f"kind {kind!r} is not documented",
+            hint="add a `kind`-quoted section to docs/methods.md"))
+
+    # Stale contract entries (kind removed from KINDS but not from the
+    # table) — keep the table honest in both directions.
+    for kind in KIND_CONTRACTS:
+        if kind not in kinds:
+            findings.append(Finding(
+                file=SIMULATOR, line=0, rule=RULE, severity="warning",
+                message=f"contract table lists unregistered kind "
+                        f"{kind!r}",
+                hint="remove its KIND_CONTRACTS entry"))
+
+    # Scalar plumbing stays in sync: every step key except the kvals
+    # vector must have a params-row slot, and _lane_dict must rebuild
+    # exactly the STEP_KEYS dict.
+    if step_keys is not None and param_keys is not None:
+        for key in step_keys:
+            if key != "kvals" and key not in param_keys:
+                findings.append(Finding(
+                    file=TLB_SWEEP, line=0, rule=RULE, severity="error",
+                    message=f"STEP_KEYS entry {key!r} missing from "
+                            f"PARAM_KEYS",
+                    hint="the Pallas params row must carry every lane "
+                         "scalar"))
+    if step_keys is not None and lane_dict_fn is not None:
+        missing = set(step_keys) - lane_dict_keys
+        extra = lane_dict_keys - set(step_keys)
+        for key in sorted(missing | extra):
+            if key in missing:
+                msg = f"_lane_dict omits STEP_KEYS entry {key!r}"
+            else:
+                msg = f"_lane_dict key {key!r} is not in STEP_KEYS"
+            findings.append(Finding(
+                file=TLB_SWEEP, line=0, rule=RULE, severity="error",
+                message=msg,
+                hint="_lane_dict must rebuild exactly the STEP_KEYS "
+                     "lane dict"))
+    if step_keys is not None and pack_fn is not None:
+        for key in step_keys:
+            if key not in lanes_keys:
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE, severity="error",
+                    message=f"STEP_KEYS entry {key!r} is never packed by "
+                            f"pack_lanes",
+                    hint="add it to the lanes dict"))
+    return findings

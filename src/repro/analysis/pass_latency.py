@@ -1,0 +1,93 @@
+"""Pass: latency model constants are single-sourced from ``LAT_*``.
+
+The cycle model lives in the ``LAT_*`` constants of
+``src/repro/core/simulator.py``; both backends import them.  An integer
+literal in executor code that happens to equal one of those values is a
+magic-number duplicate waiting to go stale when the model is retuned —
+this pass flags it.
+
+Only *distinctive* latency values are matched: ``LAT_*`` values below
+``MIN_DISTINCTIVE`` (the 7/8-cycle probe costs) collide with way counts,
+bit masks and geometry constants everywhere, so flagging them would be
+pure noise.  The definition site itself (``LAT_X = <n>`` in
+simulator.py) is exempt, as are docstrings (string constants never
+match).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .framework import Finding, Repo, missing_file
+
+RULE = "latency-constants"
+
+SIMULATOR = "src/repro/core/simulator.py"
+EXECUTOR_FILES = (
+    SIMULATOR,
+    "src/repro/core/lane_program.py",
+    "src/repro/core/sweep.py",
+    "src/repro/kernels/tlb_sweep/tlb_sweep.py",
+    "src/repro/kernels/tlb_sweep/ops.py",
+    "src/repro/kernels/tlb_sweep/ref.py",
+)
+MIN_DISTINCTIVE = 10
+
+
+def lat_constants(repo: Repo) -> Dict[int, List[str]]:
+    """value -> LAT_* names defined with that value in simulator.py."""
+    tree = repo.tree(SIMULATOR)
+    out: Dict[int, List[str]] = {}
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id.startswith("LAT_")):
+            continue
+        try:
+            val = ast.literal_eval(node.value)
+        except ValueError:
+            continue
+        if isinstance(val, int):
+            out.setdefault(val, []).append(node.targets[0].id)
+    return out
+
+
+def _definition_lines(tree: ast.AST) -> set:
+    lines = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id.startswith("LAT_")):
+            lines.update(range(node.lineno, (node.end_lineno or
+                                             node.lineno) + 1))
+    return lines
+
+
+def run(repo: Repo) -> List[Finding]:
+    values = {v: names for v, names in lat_constants(repo).items()
+              if v >= MIN_DISTINCTIVE}
+    if not values:
+        return [missing_file(SIMULATOR, RULE,
+                             "no LAT_* constants found in simulator.py")]
+    findings: List[Finding] = []
+    for rel in EXECUTOR_FILES:
+        tree = repo.tree(rel)
+        if tree is None:
+            continue
+        skip = _definition_lines(tree) if rel == SIMULATOR else set()
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Constant)
+                    and isinstance(node.value, int)
+                    and not isinstance(node.value, bool)):
+                continue
+            if node.value not in values or node.lineno in skip:
+                continue
+            names = " or ".join(values[node.value])
+            findings.append(Finding(
+                file=rel, line=node.lineno, rule=RULE, severity="error",
+                message=f"magic number {node.value} duplicates {names}",
+                hint=f"import and use {names} so a retuned cycle model "
+                     f"cannot go stale here"))
+    return findings

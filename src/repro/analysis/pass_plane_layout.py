@@ -1,0 +1,209 @@
+"""Pass: packed-plane layouts come from the one table, nowhere else.
+
+``src/repro/core/plane_layout.py`` is the single source of truth for the
+trailing-axis field tuples of every packed TLB plane and per-vpn record.
+This pass
+
+* literal-evals the table and re-checks its own invariant — every plane
+  carries ``asid``, and nothing but declared sidecar fields may follow
+  it (probes match on ASID; the context-switch pass clears by it);
+* flags any integer literal equal to a known plane/record width inside a
+  shape tuple passed to an allocation call (``np.zeros``/``np.full``,
+  ``pltpu.VMEM``/``SMEM``, ``pl.BlockSpec``, ``jax.ShapeDtypeStruct``,
+  the local ``packed`` helper) in the executor sources — widths must be
+  spelled ``PLANE_WIDTH[...]`` / ``*_REC_WIDTH`` so a table change
+  propagates everywhere;
+* checks the derived field-index unpacking in ``lane_program.py``
+  (``TAG, ... = range(PLANE_WIDTH["l2"])``) binds exactly one name per
+  L2 field;
+* checks the arity of every packed row ``jnp.stack([...])`` built in
+  ``step_access`` against its plane's width.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .framework import Finding, Repo, missing_file
+
+RULE = "plane-layout"
+
+LAYOUT = "src/repro/core/plane_layout.py"
+LANE_PROGRAM = "src/repro/core/lane_program.py"
+USE_SITES = (
+    LANE_PROGRAM,
+    "src/repro/kernels/tlb_sweep/tlb_sweep.py",
+    "src/repro/kernels/tlb_sweep/ops.py",
+    "src/repro/kernels/tlb_sweep/ref.py",
+)
+ALLOC_FUNCS = {"zeros", "full", "ones", "empty", "VMEM", "SMEM",
+               "BlockSpec", "ShapeDtypeStruct", "packed"}
+# step_access row vectors -> the plane each must match
+ROW_VECTORS = {"fill_vec": "l2", "l1_vec": "l1", "l1h_vec": "l1h",
+               "rmm_vec": "rmm", "cl_vec": "clus", "ctlb_vec": "ctlb"}
+
+
+def load_layout(repo: Repo) -> Optional[Dict[str, tuple]]:
+    """The ``*_FIELDS`` literals of the layout module, by name."""
+    tree = repo.tree(LAYOUT)
+    if tree is None:
+        return None
+    out: Dict[str, tuple] = {}
+    for node in getattr(tree, "body", []):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        name = node.targets[0].id
+        if not name.endswith("_FIELDS"):
+            continue
+        try:
+            out[name] = ast.literal_eval(node.value)
+        except ValueError:
+            continue
+    return out
+
+
+def _callee_name(func: ast.expr) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def run(repo: Repo) -> List[Finding]:
+    layout = load_layout(repo)
+    if layout is None or "PLANE_FIELDS" not in layout:
+        return [missing_file(LAYOUT, RULE,
+                             "layout table absent or not literal-evalable")]
+    findings: List[Finding] = []
+    planes: Dict[str, tuple] = layout["PLANE_FIELDS"]
+    sidecar = set(layout.get("SIDECAR_FIELDS", ("aux",)))
+
+    # -- table invariants ------------------------------------------------
+    for plane, fields in planes.items():
+        if "asid" not in fields:
+            findings.append(Finding(
+                file=LAYOUT, line=0, rule=RULE, severity="error",
+                message=f"plane {plane!r} has no 'asid' field",
+                hint="every plane must be ASID-tagged for multi-tenant "
+                     "worlds"))
+            continue
+        trailing = fields[fields.index("asid") + 1:]
+        bad = [f for f in trailing if f not in sidecar]
+        if bad:
+            findings.append(Finding(
+                file=LAYOUT, line=0, rule=RULE, severity="error",
+                message=f"plane {plane!r}: non-sidecar fields {bad} "
+                        f"follow 'asid'",
+                hint="asid must be the last field except declared "
+                     "SIDECAR_FIELDS"))
+
+    widths: Set[int] = {len(f) for f in planes.values()}
+    for rec in ("MAP_REC_FIELDS", "FILL_REC_FIELDS", "MISC_FIELDS"):
+        if rec in layout:
+            widths.add(len(layout[rec]))
+
+    # -- no hardcoded widths at allocation sites -------------------------
+    for rel in USE_SITES:
+        tree = repo.tree(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _callee_name(node.func) not in ALLOC_FUNCS:
+                continue
+            for arg in node.args:
+                if not isinstance(arg, (ast.Tuple, ast.List)):
+                    continue
+                if len(arg.elts) < 2 and _callee_name(node.func) not in \
+                        ("VMEM", "SMEM"):
+                    continue
+                for e in arg.elts:
+                    if (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)
+                            and not isinstance(e.value, bool)
+                            and e.value in widths
+                            and e is arg.elts[-1]):
+                        findings.append(Finding(
+                            file=rel, line=e.lineno, rule=RULE,
+                            severity="error",
+                            message=f"hardcoded plane/record width "
+                                    f"{e.value} in "
+                                    f"{_callee_name(node.func)}() shape",
+                            hint="spell it PLANE_WIDTH[...] / "
+                                 "*_REC_WIDTH from "
+                                 "repro.core.plane_layout"))
+
+    # -- derived index unpacking matches the table -----------------------
+    lane_tree = repo.tree(LANE_PROGRAM)
+    if lane_tree is not None:
+        l2_fields = planes.get("l2", ())
+        unpack = None
+        for node in ast.walk(lane_tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Tuple)
+                    and any(isinstance(t, ast.Name) and t.id == "TAG"
+                            for t in node.targets[0].elts)):
+                unpack = node
+                break
+        if unpack is None:
+            findings.append(Finding(
+                file=LANE_PROGRAM, line=0, rule=RULE, severity="error",
+                message="L2 field-index unpacking (TAG, ... = ...) not "
+                        "found",
+                hint="derive the indices from "
+                     "range(PLANE_WIDTH['l2'])"))
+        elif len(unpack.targets[0].elts) != len(l2_fields):
+            findings.append(Finding(
+                file=LANE_PROGRAM, line=unpack.lineno, rule=RULE,
+                severity="error",
+                message=f"L2 index unpacking binds "
+                        f"{len(unpack.targets[0].elts)} names but the "
+                        f"table declares {len(l2_fields)} fields",
+                hint="one name per PLANE_FIELDS['l2'] entry"))
+
+        # -- packed-row stack arity ------------------------------------
+        step_fn = None
+        for node in ast.walk(lane_tree):
+            if (isinstance(node, ast.FunctionDef)
+                    and node.name == "step_access"):
+                step_fn = node
+                break
+        seen_vecs: Set[str] = set()
+        if step_fn is not None:
+            for node in ast.walk(step_fn):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id in ROW_VECTORS):
+                    continue
+                name = node.targets[0].id
+                seen_vecs.add(name)
+                call = node.value
+                if not (isinstance(call, ast.Call)
+                        and _callee_name(call.func) == "stack"
+                        and call.args
+                        and isinstance(call.args[0],
+                                       (ast.List, ast.Tuple))):
+                    continue
+                plane = ROW_VECTORS[name]
+                want = len(planes.get(plane, ()))
+                got = len(call.args[0].elts)
+                if got != want:
+                    findings.append(Finding(
+                        file=LANE_PROGRAM, line=node.lineno, rule=RULE,
+                        severity="error",
+                        message=f"{name} stacks {got} fields but plane "
+                                f"{plane!r} is {want} wide",
+                        hint="keep the packed row in lockstep with "
+                             "PLANE_FIELDS"))
+            for name in sorted(set(ROW_VECTORS) - seen_vecs):
+                findings.append(Finding(
+                    file=LANE_PROGRAM, line=0, rule=RULE,
+                    severity="error",
+                    message=f"step_access no longer builds {name}",
+                    hint="renamed row vectors must be re-declared in "
+                         "pass_plane_layout.ROW_VECTORS"))
+    return findings

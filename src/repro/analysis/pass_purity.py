@@ -1,0 +1,400 @@
+"""Pass: traced code never concretizes tracers or calls host services.
+
+A lightweight name-level taint lint over the executor sources.  *Traced
+scopes* are functions that run under a jax trace: jitted entry points,
+``lax.scan``/``vmap``/``pmap``/``lax.cond`` bodies, Pallas kernels and
+their ``@pl.when``-gated regions, plus every function nested inside one.
+They are found two ways — autodetection (``jax.jit``/``functools.partial
+(jax.jit, ...)`` decorators and call sites, names passed to tracing
+APIs) and the explicit ``TRACED_ENTRIES`` table for functions whose
+tracing call site lives in *another* module (``step_access`` is vmapped
+from ``sweep.py``; the Pallas kernel is partial-wrapped before
+``pallas_call`` sees it).
+
+Within a traced scope, positional parameters are tracer-tainted (minus
+``static_argnums``/``static_argnames``; keyword-only parameters are
+static by convention in this repo) and taint propagates through
+assignments — except through the shape sanitizers (``.shape``,
+``.ndim``, ``.dtype``, ``len()``), which yield trace-time constants.
+Flagged on tainted values:
+
+* python control flow: ``if``/``while``/``assert``/conditional
+  expressions and ``and``/``or`` (these call ``__bool__`` and raise
+  ``TracerBoolConversionError`` at trace time — or worse, silently
+  specialize), and ``for`` directly over a traced array (a ``for`` over
+  a *call* result is presumed the probe-chain idiom: a static-length
+  python list of tracers, which unrolls legally);
+* host concretization: ``float()``/``int()``/``bool()``, ``.item()``,
+  ``.tolist()``;
+* host numpy on tracers: ``np.*`` calls with a tainted argument
+  (host-precomputing with numpy on *static* data is idiomatic and stays
+  legal);
+* and, taint-independent, any ``np.random``/``random``/``time`` call
+  inside a traced scope (host RNG/clocks burn into the trace).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .framework import Finding, Repo
+
+RULE = "traced-purity"
+
+EXECUTOR_FILES = (
+    "src/repro/core/simulator.py",
+    "src/repro/core/lane_program.py",
+    "src/repro/core/sweep.py",
+    "src/repro/kernels/tlb_sweep/tlb_sweep.py",
+    "src/repro/kernels/tlb_sweep/ops.py",
+    "src/repro/kernels/tlb_sweep/ref.py",
+)
+
+# Functions traced from another module (file -> function names).
+TRACED_ENTRIES: Dict[str, Tuple[str, ...]] = {
+    "src/repro/core/lane_program.py": ("step_access", "shoot_lane",
+                                       "switch_lane"),
+    "src/repro/kernels/tlb_sweep/tlb_sweep.py": ("_tlb_sweep_kernel",),
+}
+
+TRACING_CALLEES = {"jit", "vmap", "pmap", "scan", "cond", "while_loop",
+                   "fori_loop", "pallas_call", "checkpoint", "remat",
+                   "grad", "value_and_grad", "switch"}
+SANITIZER_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes"}
+CONCRETIZE_CALLS = {"float", "int", "bool", "complex"}
+CONCRETIZE_METHODS = {"item", "tolist", "__bool__", "__float__"}
+HOST_SERVICE_ROOTS = ("np.random", "numpy.random", "random", "time")
+NUMPY_ALIASES = {"np", "numpy"}
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _static_positions(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    """static_argnums / static_argnames literals of a jit-like call."""
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_broadcasted_argnums"):
+            try:
+                val = ast.literal_eval(kw.value)
+            except ValueError:
+                continue
+            nums.update([val] if isinstance(val, int) else val)
+        elif kw.arg == "static_argnames":
+            try:
+                val = ast.literal_eval(kw.value)
+            except ValueError:
+                continue
+            names.update([val] if isinstance(val, str) else val)
+    return nums, names
+
+
+@dataclasses.dataclass
+class _Entry:
+    fn: ast.FunctionDef
+    static_nums: Set[int]
+    static_names: Set[str]
+
+
+def _is_tracing_callee(func: ast.expr) -> bool:
+    name = _dotted(func)
+    if name is None:
+        return False
+    return name.split(".")[-1] in TRACING_CALLEES
+
+
+def _collect_entries(tree: ast.AST, rel: str) -> List[_Entry]:
+    funcs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            funcs.setdefault(node.name, node)
+
+    entries: Dict[str, _Entry] = {}
+
+    def add(name: str, nums: Set[int], names: Set[str]):
+        if name in funcs and name not in entries:
+            entries[name] = _Entry(funcs[name], nums, names)
+
+    for name in TRACED_ENTRIES.get(rel, ()):
+        add(name, set(), set())
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    inner = dec.args[0] if dec.args else None
+                    if (_is_tracing_callee(dec.func)
+                            or (inner is not None
+                                and _is_tracing_callee(inner))):
+                        nums, names = _static_positions(dec)
+                        add(node.name, nums, names)
+                elif (_dotted(dec) or "").split(".")[-1] in TRACING_CALLEES:
+                    add(node.name, set(), set())
+        if isinstance(node, ast.Call) and _is_tracing_callee(node.func):
+            nums, names = _static_positions(node)
+            for arg in ast.walk(node):
+                if (isinstance(arg, ast.Name) and arg.id in funcs
+                        and arg.id not in TRACING_CALLEES):
+                    add(arg.id, nums, names)
+    return list(entries.values())
+
+
+class _Scope:
+    """One traced function analyzed with a tainted-name set."""
+
+    def __init__(self, rel: str, fn: ast.FunctionDef, tainted: Set[str],
+                 findings: List[Finding]):
+        self.rel = rel
+        self.fn = fn
+        self.tainted = set(tainted)
+        self.findings = findings
+        self.nested: List[ast.FunctionDef] = []
+
+    # -- expression taint ------------------------------------------------
+    def taint(self, node: Optional[ast.expr]) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in SANITIZER_ATTRS:
+                return False
+            return self.taint(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.taint(node.value) or self.taint(node.slice)
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func) or ""
+            if name == "len":
+                return False
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            if isinstance(node.func, ast.Attribute):
+                args.append(node.func.value)
+            return any(self.taint(a) for a in args)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.taint(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.taint(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.taint(node.left) or self.taint(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.taint(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.taint(node.left) or any(self.taint(c)
+                                                for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.taint(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return (self.taint(node.test) or self.taint(node.body)
+                    or self.taint(node.orelse))
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return any(self.taint(g.iter) for g in node.generators) or \
+                self.taint(node.elt)
+        if isinstance(node, ast.Starred):
+            return self.taint(node.value)
+        return False
+
+    def flag(self, node: ast.AST, message: str, hint: str):
+        self.findings.append(Finding(
+            file=self.rel, line=getattr(node, "lineno", 0), rule=RULE,
+            severity="error", message=message, hint=hint))
+
+    # -- violation scan over one expression ------------------------------
+    def check_expr(self, node: Optional[ast.expr]):
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Lambda):
+                continue
+            if isinstance(sub, ast.IfExp) and self.taint(sub.test):
+                self.flag(sub, "conditional expression on traced value",
+                          "use jnp.where/lax.select")
+            if isinstance(sub, ast.BoolOp) and any(self.taint(v)
+                                                   for v in sub.values):
+                self.flag(sub, "python and/or on traced value",
+                          "use & / | on arrays")
+            if not isinstance(sub, ast.Call):
+                continue
+            name = _dotted(sub.func) or ""
+            root = name.split(".")[0]
+            if any(name == r or name.startswith(r + ".")
+                   for r in HOST_SERVICE_ROOTS):
+                self.flag(sub, f"host service call {name}() in traced "
+                               f"code",
+                          "precompute outside the trace or use jax.random")
+                continue
+            args = list(sub.args) + [kw.value for kw in sub.keywords]
+            any_tainted = any(self.taint(a) for a in args)
+            if name in CONCRETIZE_CALLS and any_tainted:
+                self.flag(sub, f"{name}() concretizes a traced value",
+                          "keep it an array; cast with jnp astype")
+            elif (isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in CONCRETIZE_METHODS
+                    and self.taint(sub.func.value)):
+                self.flag(sub, f".{sub.func.attr}() concretizes a traced "
+                               f"value",
+                          "keep it an array")
+            elif (root in NUMPY_ALIASES and len(name.split(".")) > 1
+                    and any_tainted):
+                self.flag(sub, f"host numpy call {name}() on traced "
+                               f"value",
+                          "use jnp.* inside traced code")
+
+    # -- statement walk with taint propagation ---------------------------
+    def assign_target(self, target: ast.expr, tainted: bool):
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self.assign_target(t, tainted)
+        elif isinstance(target, ast.Starred):
+            self.assign_target(target.value, tainted)
+        # subscript/attribute writes mutate an existing binding: keep it
+
+    def loop_targets(self, stmt: ast.For):
+        it = stmt.iter
+        if isinstance(it, ast.Call):
+            callee = _dotted(it.func) or ""
+            if callee == "range":
+                self.assign_target(stmt.target, False)
+                return
+            if callee == "enumerate" and isinstance(stmt.target,
+                                                    (ast.Tuple, ast.List)):
+                inner = any(self.taint(a) for a in it.args)
+                elts = stmt.target.elts
+                self.assign_target(elts[0], False)
+                for t in elts[1:]:
+                    self.assign_target(t, inner)
+                return
+        self.assign_target(stmt.target, self.taint(it))
+
+    def walk_block(self, body: Sequence[ast.stmt]):
+        for stmt in body:
+            if isinstance(stmt, ast.FunctionDef):
+                self.nested.append(stmt)
+                continue
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = stmt.value
+                self.check_expr(value)
+                tainted = self.taint(value)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                if isinstance(stmt, ast.AugAssign):
+                    tainted = tainted or self.taint(stmt.target)
+                for t in targets:
+                    self.assign_target(t, tainted)
+            elif isinstance(stmt, ast.If):
+                self.check_expr(stmt.test)
+                if self.taint(stmt.test):
+                    self.flag(stmt, "python branch on traced value",
+                              "use jnp.where/lax.cond; python `if` "
+                              "concretizes the tracer")
+                self.walk_block(stmt.body)
+                self.walk_block(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                self.check_expr(stmt.test)
+                if self.taint(stmt.test):
+                    self.flag(stmt, "python while on traced value",
+                              "use lax.while_loop")
+                self.walk_block(stmt.body)
+                self.walk_block(stmt.orelse)
+            elif isinstance(stmt, ast.For):
+                self.check_expr(stmt.iter)
+                # a Call iter (probe_order(...), zip/enumerate of one) is
+                # presumed to build a static-length python sequence of
+                # tracers — the repo's probe-chain unroll idiom; direct
+                # iteration over a traced array is the bug
+                if self.taint(stmt.iter) and not isinstance(stmt.iter,
+                                                            ast.Call):
+                    self.flag(stmt, "python for over traced array",
+                              "use lax.scan/fori_loop, or unroll over a "
+                              "static python list")
+                self.loop_targets(stmt)
+                self.walk_block(stmt.body)
+                self.walk_block(stmt.orelse)
+            elif isinstance(stmt, ast.Assert):
+                self.check_expr(stmt.test)
+                if self.taint(stmt.test):
+                    self.flag(stmt, "assert on traced value",
+                              "use checkify or drop the assert")
+            elif isinstance(stmt, ast.Return):
+                self.check_expr(stmt.value)
+            elif isinstance(stmt, ast.Expr):
+                self.check_expr(stmt.value)
+            elif isinstance(stmt, (ast.With,)):
+                for item in stmt.items:
+                    self.check_expr(item.context_expr)
+                self.walk_block(stmt.body)
+            elif isinstance(stmt, (ast.Try,)):
+                self.walk_block(stmt.body)
+                for h in stmt.handlers:
+                    self.walk_block(h.body)
+                self.walk_block(stmt.orelse)
+                self.walk_block(stmt.finalbody)
+
+    def run(self):
+        # two sweeps so loop-carried taint stabilizes; findings only kept
+        # from the second
+        snapshot = set(self.tainted)
+        sink: List[Finding] = []
+        real, self.findings = self.findings, sink
+        self.nested = []
+        self.walk_block(self.fn.body)
+        self.findings = real
+        carried = set(self.tainted)
+        self.tainted = snapshot | carried
+        self.nested = []
+        self.walk_block(self.fn.body)
+        return self.nested
+
+
+def _seed_params(fn: ast.FunctionDef, static_nums: Set[int],
+                 static_names: Set[str]) -> Set[str]:
+    tainted: Set[str] = set()
+    for i, arg in enumerate(fn.args.args):
+        if i in static_nums or arg.arg in static_names:
+            continue
+        tainted.add(arg.arg)
+    # keyword-only params are static config by repo convention (tb,
+    # with_switch, interpret, n_blocks)
+    return tainted
+
+
+def _analyze(rel: str, fn: ast.FunctionDef, closure: Set[str],
+             static_nums: Set[int], static_names: Set[str],
+             findings: List[Finding]):
+    tainted = closure | _seed_params(fn, static_nums, static_names)
+    scope = _Scope(rel, fn, tainted, findings)
+    nested = scope.run()
+    for sub in nested:
+        _analyze(rel, sub, scope.tainted, set(), set(), findings)
+
+
+def run(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel in EXECUTOR_FILES:
+        tree = repo.tree(rel)
+        if tree is None:
+            continue
+        for entry in _collect_entries(tree, rel):
+            _analyze(rel, entry.fn, set(), entry.static_nums,
+                     entry.static_names, findings)
+    # dedup: nested defs reachable from two entries report once
+    seen: Set[Tuple] = set()
+    out: List[Finding] = []
+    for f in findings:
+        key = (f.file, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out

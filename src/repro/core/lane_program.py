@@ -46,6 +46,8 @@ import numpy as np
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
                          NestedMapping, cluster_bitmap, huge_page_backed,
                          next_pow2 as _next_pow2)
+from .plane_layout import (FILL_REC_WIDTH, MAP_REC_WIDTH, PLANE_FIELDS,
+                           PLANE_WIDTH)
 from .simulator import (CLUS_SETS, CLUS_WAYS, CTLB_SETS, CTLB_WAYS, DP_TABLE,
                         HUGE, INVALID, KSUBR, L1_SETS, L1_WAYS,
                         L1H_SETS, L1H_WAYS, LAT_COAL, LAT_CTLB,
@@ -75,20 +77,18 @@ KMIN_SLOTS = 4
 # sizes onto {32, 64}
 FILL_REC_FLOOR = 32
 
-# packed-field indices.  Every structure carries the ASID its entry was
-# filled under as its LAST field: probes require an ASID match (trivially
-# true on single-address-space worlds, where everything is ASID 0), and
-# the context-switch pass (:func:`switch_lane`) clears by it.
-TAG, KCLS, CONTIG, PPN, LRU, L2_ASID, AUX = 0, 1, 2, 3, 4, 5, 6  # [S, W, 7]
-# L2 AUX holds per-kind sidecar data: the subregion contiguity bitmap
-# (bit j = page tag+j shares the entry's VA->PA delta); 0 for other kinds.
-# L1/L1H: [sets, ways, 4] = tag, ppn, lru, asid
-# RMM:    [32, 5]         = start, len, ppn, lru, asid
-# CLUS:   [64, 5, 4]      = tag, bitmap, lru, asid
-# CTLB:   [256, 8, 4]     = tag, ppn, lru, asid     (cache-backed tier)
-# fill record: [P, 5]     = tag, k, contig, ppn, aux (one per world epoch)
-# map record:  [P, 4]     = ppn, run_start, run_len, ppn[run_start]  (ditto)
-# dirty record: [P+1]     = prefix sum of the epoch's dirty-vpn bitmap
+# packed-field indices, derived from the one layout table
+# (:mod:`repro.core.plane_layout`).  Every structure carries the ASID its
+# entry was filled under as its last non-sidecar field: probes require an
+# ASID match (trivially true on single-address-space worlds, where
+# everything is ASID 0), and the context-switch pass
+# (:func:`switch_lane`) clears by it.  L2 AUX holds per-kind sidecar
+# data: the subregion contiguity bitmap (bit j = page tag+j shares the
+# entry's VA->PA delta); 0 for other kinds.
+TAG, KCLS, CONTIG, PPN, LRU, L2_ASID, AUX = range(PLANE_WIDTH["l2"])
+assert PLANE_FIELDS["l2"] == ("tag", "kcls", "contig", "ppn", "lru",
+                              "asid", "aux")
+# dirty record: [P+1] = prefix sum of the epoch's dirty-vpn bitmap
 # counters: [9] = l1_hits, reg_hits, coal_hits, walks, probes, pred_correct,
 #                 cycles, cov, shootdowns
 N_COUNTERS = 9
@@ -167,7 +167,7 @@ def _pad_stack(recs: List[np.ndarray], floor: int = REC_FLOOR,
 def _map_record(m: Mapping, P: int) -> np.ndarray:
     """[P, 4] int32: ppn, run_start, run_len, ppn[run_start] (RMM fill)."""
     n = m.n_pages
-    rec = np.zeros((P, 4), np.int32)
+    rec = np.zeros((P, MAP_REC_WIDTH), np.int32)
     rec[:, 0] = -1
     rec[:n, 0] = m.ppn
     rec[:n, 1] = m.run_start
@@ -248,7 +248,7 @@ def _fill_profile(m: Mapping, key, P: int) -> np.ndarray:
         fppn = np.where(mapped, ppn - (vpn - base), fppn)
         aux = np.where(mapped, bitmap, 0)
 
-    rec = np.zeros((P, 5), np.int32)
+    rec = np.zeros((P, FILL_REC_WIDTH), np.int32)
     rec[:n, 0] = tag
     rec[:n, 1] = kcls
     rec[:n, 2] = contig
@@ -528,19 +528,19 @@ def init_batched_state(L: int, max_sets: int, max_ways: int, pred0,
         a[..., 0] = init_tag
         return a
 
-    l2 = np.zeros((L, max_sets, max_ways, 7), np.int32)
+    l2 = np.zeros((L, max_sets, max_ways, PLANE_WIDTH["l2"]), np.int32)
     l2[..., TAG] = -1
     l2[..., KCLS] = INVALID
     l2[..., PPN] = -1
     cs, cw = (CTLB_SETS, CTLB_WAYS) if with_ctlb else (1, 1)
     return dict(
         t=np.zeros(L, np.int32),
-        l1=packed((L, L1_SETS, L1_WAYS, 4), -1),
-        l1h=packed((L, L1H_SETS, L1H_WAYS, 4), -1),
+        l1=packed((L, L1_SETS, L1_WAYS, PLANE_WIDTH["l1"]), -1),
+        l1h=packed((L, L1H_SETS, L1H_WAYS, PLANE_WIDTH["l1h"]), -1),
         l2=l2,
-        rmm=packed((L, RMM_ENTRIES, 5), -1),
-        clus=packed((L, CLUS_SETS, CLUS_WAYS, 4), -1),
-        ctlb=packed((L, cs, cw, 4), -1),
+        rmm=packed((L, RMM_ENTRIES, PLANE_WIDTH["rmm"]), -1),
+        clus=packed((L, CLUS_SETS, CLUS_WAYS, PLANE_WIDTH["clus"]), -1),
+        ctlb=packed((L, cs, cw, PLANE_WIDTH["ctlb"]), -1),
         dp=np.zeros((L, DP_TABLE if with_dp else 1), np.int32),
         pred=np.asarray(pred0, np.int32).copy(),
         asid=(np.zeros(L, np.int32) if asid0 is None

@@ -1,0 +1,52 @@
+"""Single source of truth for every packed plane / record layout.
+
+Every TLB structure the batched executors carry is a packed int32 array
+whose trailing axis is a fixed field tuple.  Those widths and field
+orders used to be duplicated as comments and bare literals across
+:mod:`repro.core.lane_program` and the Pallas kernel
+(``kernels/tlb_sweep``); they live here now, and both backends derive
+their allocation widths and field indices from this table.  The
+contract checker (``repro.analysis.pass_plane_layout``) parses this
+module with :func:`ast.literal_eval` — keep the ``*_FIELDS`` constants
+pure literals (no imports, no computed values feeding them) so the
+analyzer never needs jax to read them.
+
+Layout invariant: every plane carries the ASID its entry was filled
+under, and ``asid`` is the LAST field except for declared sidecar
+fields (see ``SIDECAR_FIELDS``) — probes require an ASID match and the
+context-switch pass clears by it, so a plane without a trailing ASID
+cannot participate in multi-tenant worlds.
+"""
+
+# Packed planes: name -> trailing-axis field tuple.
+PLANE_FIELDS = {
+    # L1 / gated 2MB L1 array: 4KB (resp. 2MB) translations.
+    "l1": ("tag", "ppn", "lru", "asid"),
+    "l1h": ("tag", "ppn", "lru", "asid"),
+    # Unified L2: every kind's entries share this layout.  ``aux`` is a
+    # per-kind sidecar (subregion contiguity bitmap; 0 for other kinds).
+    "l2": ("tag", "kcls", "contig", "ppn", "lru", "asid", "aux"),
+    # RMM range table.
+    "rmm": ("start", "len", "ppn", "lru", "asid"),
+    # Clustered side-TLB.
+    "clus": ("tag", "bitmap", "lru", "asid"),
+    # Cache-backed tier (Victima lineage).
+    "ctlb": ("tag", "ppn", "lru", "asid"),
+}
+
+# Fields allowed to follow ``asid`` (per-kind sidecar data).
+SIDECAR_FIELDS = ("aux",)
+
+# Precomputed per-vpn records gathered by the step (one row per page).
+MAP_REC_FIELDS = ("ppn", "run_start", "run_len", "run_start_ppn")
+FILL_REC_FIELDS = ("tag", "k", "contig", "ppn", "aux")
+
+# Pallas kernel SMEM misc scalars.
+MISC_FIELDS = ("t", "pred", "asid")
+
+# Derived widths (everything below is computed; the analyzer only
+# literal-evals the field tuples above).
+PLANE_WIDTH = {name: len(fields) for name, fields in PLANE_FIELDS.items()}
+MAP_REC_WIDTH = len(MAP_REC_FIELDS)
+FILL_REC_WIDTH = len(FILL_REC_FIELDS)
+MISC_WIDTH = len(MISC_FIELDS)

@@ -323,6 +323,7 @@ _FINGERPRINT_SOURCES = (
     "core/sweep.py",
     "core/lane_program.py",
     "core/page_table.py",
+    "core/plane_layout.py",
     "kernels/tlb_sweep/tlb_sweep.py",
     "kernels/tlb_sweep/ops.py",
 )

@@ -39,6 +39,8 @@ from ...core.lane_program import (CLUS_SETS, CLUS_WAYS, INVALID, KCLS, L1_SETS,
                                   L1_WAYS, L1H_SETS, L1H_WAYS, N_COUNTERS,
                                   N_COV_SAMPLES, PPN, RMM_ENTRIES, TAG,
                                   shoot_lane, step_access, switch_lane)
+from ...core.plane_layout import (FILL_REC_WIDTH, MAP_REC_WIDTH, MISC_WIDTH,
+                                  PLANE_WIDTH)
 
 # params row layout (int32): one row per lane, packed by ops.pack_params
 # from PARAM_KEYS — the F_* indices and PARAM_KEYS are the same ordering
@@ -214,10 +216,10 @@ def make_tlb_sweep_call(sets: int, ways: int, ctlb_sets: int = 1,
                 pl.BlockSpec((1, tb),                         # trace block
                              lambda l, b, tid, *s: (tid[l], b)),
                 pl.BlockSpec((tb,), lambda l, b, *s: (b,)),   # tpos block
-                pl.BlockSpec((1, P, 4),                       # map record
+                pl.BlockSpec((1, P, MAP_REC_WIDTH),           # map record
                              lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
                              (smap[l, bseg[b]], 0, 0)),
-                pl.BlockSpec((1, P, 5),                       # fill record
+                pl.BlockSpec((1, P, FILL_REC_WIDTH),          # fill record
                              lambda l, b, tid, smap, sf, sc, sd, bseg, *s:
                              (sf[l, bseg[b]], 0, 0)),
                 pl.BlockSpec((1, Pc),                         # cluster bitmap
@@ -233,14 +235,17 @@ def make_tlb_sweep_call(sets: int, ways: int, ctlb_sets: int = 1,
                 by_lane((1, N_COV_SAMPLES)),                      # cov
             ],
             scratch_shapes=[
-                pltpu.VMEM((L1_SETS, L1_WAYS, 4), jnp.int32),
-                pltpu.VMEM((L1H_SETS, L1H_WAYS, 4), jnp.int32),
-                pltpu.VMEM((sets, ways, 7), jnp.int32),
-                pltpu.VMEM((RMM_ENTRIES, 5), jnp.int32),
-                pltpu.VMEM((CLUS_SETS, CLUS_WAYS, 4), jnp.int32),
-                pltpu.VMEM((ctlb_sets, ctlb_ways, 4), jnp.int32),
+                pltpu.VMEM((L1_SETS, L1_WAYS, PLANE_WIDTH["l1"]), jnp.int32),
+                pltpu.VMEM((L1H_SETS, L1H_WAYS, PLANE_WIDTH["l1h"]),
+                           jnp.int32),
+                pltpu.VMEM((sets, ways, PLANE_WIDTH["l2"]), jnp.int32),
+                pltpu.VMEM((RMM_ENTRIES, PLANE_WIDTH["rmm"]), jnp.int32),
+                pltpu.VMEM((CLUS_SETS, CLUS_WAYS, PLANE_WIDTH["clus"]),
+                           jnp.int32),
+                pltpu.VMEM((ctlb_sets, ctlb_ways, PLANE_WIDTH["ctlb"]),
+                           jnp.int32),
                 pltpu.VMEM((dp_n,), jnp.int32),      # dead-entry counters
-                pltpu.SMEM((3,), jnp.int32),         # t, predictor, asid
+                pltpu.SMEM((MISC_WIDTH,), jnp.int32),  # t, predictor, asid
             ],
         )
         out_shapes = (

@@ -1,0 +1,422 @@
+"""Contract-checker tests: the live tree is clean, and each pass catches
+its seeded violation.
+
+Two fixture styles:
+
+* **clones** — the executor/test/docs files the passes read are copied
+  into a tmp tree and then mutated (the mutation tests from the PR
+  acceptance: removing a kind from one executor's dispatch must turn the
+  kind-dispatch pass red);
+* **minimal trees** — tiny hand-written ``simulator.py``-shaped files
+  for the latency and purity passes, which skip absent files.
+
+Every seeded violation asserts on the *specific* finding message, so a
+pass can neither go blind nor start flagging the wrong thing.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import analysis
+from repro.analysis import (framework, pass_cache_key, pass_kind_dispatch,
+                            pass_latency, pass_plane_layout, pass_purity)
+from repro.analysis.framework import Repo
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+CLONE_FILES = (
+    "src/repro/core/simulator.py",
+    "src/repro/core/lane_program.py",
+    "src/repro/core/sweep.py",
+    "src/repro/core/plane_layout.py",
+    "src/repro/core/baselines.py",
+    "src/repro/kernels/tlb_sweep/tlb_sweep.py",
+    "src/repro/kernels/tlb_sweep/ops.py",
+    "src/repro/kernels/tlb_sweep/ref.py",
+    "tests/test_backends.py",
+    "tests/test_fuzz_differential.py",
+    "docs/methods.md",
+)
+
+
+@pytest.fixture
+def clone(tmp_path):
+    """The real tree's analyzable subset, copied so tests can mutate it."""
+    for rel in CLONE_FILES:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(REPO_ROOT / rel, dst)
+    gdir = tmp_path / "tests" / "goldens"
+    gdir.mkdir(parents=True)
+    for g in sorted((REPO_ROOT / "tests" / "goldens").glob("*.json")):
+        shutil.copyfile(g, gdir / g.name)
+    return tmp_path
+
+
+def edit(root: Path, rel: str, old: str, new: str):
+    p = root / rel
+    text = p.read_text()
+    assert old in text, f"mutation anchor {old!r} not found in {rel}"
+    p.write_text(text.replace(old, new))
+
+
+def write(root: Path, rel: str, text: str):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+
+
+def errors(findings):
+    return [f for f in findings if f.severity == "error"]
+
+
+def messages(findings):
+    return [f.message for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# the live tree
+# ---------------------------------------------------------------------------
+
+def test_live_tree_is_clean():
+    active, _ = analysis.run_passes(Repo(str(REPO_ROOT)),
+                                    analysis.ALL_PASSES)
+    assert not framework.has_errors(active), \
+        "\n".join(f.render() for f in errors(active))
+
+
+def test_cli_exits_zero_and_writes_step_summary(tmp_path):
+    summary = tmp_path / "summary.md"
+    env = dict(os.environ, GITHUB_STEP_SUMMARY=str(summary))
+    r = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "check_contracts.py")],
+        capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 error(s)" in r.stdout
+    assert "## Contract checker" in summary.read_text()
+
+
+def test_registered_kinds_match_runtime_registry():
+    simulator = pytest.importorskip("repro.core.simulator")
+    assert tuple(analysis.registered_kinds(Repo(str(REPO_ROOT)))) == \
+        simulator.KINDS
+
+
+# ---------------------------------------------------------------------------
+# kind-dispatch: the mutation checks
+# ---------------------------------------------------------------------------
+
+def _mutate_literal_in_function(root: Path, rel: str, fname: str,
+                                kind: str):
+    """Rewrite every ``"<kind>"`` literal inside function ``fname`` so the
+    executor no longer dispatches that kind there."""
+    p = root / rel
+    src = p.read_text()
+    fn = next(n for n in ast.walk(ast.parse(src))
+              if isinstance(n, ast.FunctionDef) and n.name == fname)
+    lines = src.splitlines(keepends=True)
+    target, changed = f'"{kind}"', False
+    for i in range(fn.lineno - 1, fn.end_lineno):
+        if target in lines[i]:
+            lines[i] = lines[i].replace(target, f'"{kind}-off"')
+            changed = True
+    assert changed, f"{target} not found inside {fname}() of {rel}"
+    p.write_text("".join(lines))
+
+
+DISPATCHED = [(k, c) for k, c in pass_kind_dispatch.KIND_CONTRACTS.items()
+              if c["lane"]]
+
+
+@pytest.mark.parametrize("kind,contract", DISPATCHED,
+                         ids=[k for k, _ in DISPATCHED])
+def test_removing_lane_dispatch_turns_pass_red(clone, kind, contract):
+    fname, literal = contract["lane"][0]
+    _mutate_literal_in_function(clone, "src/repro/core/lane_program.py",
+                                fname, literal)
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any(f"kind {kind!r}" in f.message
+               and f"selector literal {literal!r}" in f.message
+               and fname in f.message for f in found), messages(found)
+
+
+def test_removing_oracle_dispatch_turns_pass_red(clone):
+    _mutate_literal_in_function(clone, "src/repro/core/simulator.py",
+                                "_run_segments", "thp")
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("kind 'thp'" in f.message and "_run_segments" in f.message
+               for f in found), messages(found)
+
+
+def test_missing_golden_detected(clone):
+    for g in (clone / "tests" / "goldens").glob("*.json"):
+        if json.loads(g.read_text()).get("spec", {}).get("kind") == "colt":
+            g.unlink()
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("kind 'colt' has no golden trace" in f.message
+               for f in found), messages(found)
+
+
+def test_unregistered_factory_detected(clone):
+    edit(clone, "tests/test_backends.py", "colt_spec(),", "")
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("kind 'colt'" in f.message and "ALL_KINDS" in f.message
+               for f in found), messages(found)
+
+
+def test_undocumented_kind_detected(clone):
+    edit(clone, "docs/methods.md", "`colt`", "`colt-renamed`")
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("kind 'colt' is not documented" in f.message
+               for f in found), messages(found)
+
+
+def test_flag_dropped_from_step_keys_detected(clone):
+    edit(clone, "src/repro/core/lane_program.py", '"is_colt", ', "")
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("lane flag 'is_colt' missing from STEP_KEYS" in f.message
+               for f in found), messages(found)
+
+
+def test_new_kind_without_contract_entry_detected(clone):
+    edit(clone, "src/repro/core/simulator.py",
+         'KINDS = ("base", "thp", "colt", "cluster", "rmm", "anchor",',
+         'KINDS = ("brandnew", "base", "thp", "colt", "cluster", "rmm", '
+         '"anchor",')
+    found = errors(pass_kind_dispatch.run(Repo(str(clone))))
+    assert any("kind 'brandnew' has no entry in the dispatch contract"
+               in f.message for f in found), messages(found)
+
+
+# ---------------------------------------------------------------------------
+# plane-layout
+# ---------------------------------------------------------------------------
+
+def test_hardcoded_plane_width_detected(clone):
+    edit(clone, "src/repro/core/lane_program.py",
+         'l1=packed((L, L1_SETS, L1_WAYS, PLANE_WIDTH["l1"]), -1),',
+         "l1=packed((L, L1_SETS, L1_WAYS, 4), -1),")
+    found = errors(pass_plane_layout.run(Repo(str(clone))))
+    assert any("hardcoded plane/record width 4" in f.message
+               and f.file == "src/repro/core/lane_program.py"
+               for f in found), messages(found)
+
+
+def test_asid_ordering_invariant_detected(clone):
+    edit(clone, "src/repro/core/plane_layout.py",
+         '"l1": ("tag", "ppn", "lru", "asid"),',
+         '"l1": ("tag", "ppn", "asid", "lru"),')
+    found = errors(pass_plane_layout.run(Repo(str(clone))))
+    assert any("non-sidecar fields ['lru'] follow 'asid'" in f.message
+               for f in found), messages(found)
+
+
+def test_stack_arity_drift_detected(clone):
+    edit(clone, "src/repro/core/plane_layout.py",
+         '"l1": ("tag", "ppn", "lru", "asid"),',
+         '"l1": ("tag", "ppn", "extra", "lru", "asid"),')
+    found = errors(pass_plane_layout.run(Repo(str(clone))))
+    assert any("l1_vec stacks 4 fields but plane 'l1' is 5 wide"
+               in f.message for f in found), messages(found)
+
+
+# ---------------------------------------------------------------------------
+# latency-constants (minimal tree)
+# ---------------------------------------------------------------------------
+
+LATENCY_FIXTURE = """\
+LAT_WALK = 50
+LAT_HIT = 1
+
+
+def miss_chain_cycles():
+    return 50 + 1
+"""
+
+
+def test_latency_magic_number_detected(tmp_path):
+    write(tmp_path, "src/repro/core/simulator.py", LATENCY_FIXTURE)
+    found = pass_latency.run(Repo(str(tmp_path)))
+    assert [f.message for f in errors(found)] == \
+        ["magic number 50 duplicates LAT_WALK"]
+    assert errors(found)[0].line == 6
+
+
+def test_latency_definition_and_small_values_exempt(tmp_path):
+    write(tmp_path, "src/repro/core/simulator.py",
+          "LAT_WALK = 50\nLAT_HIT = 1\nX = 1\n")
+    assert pass_latency.run(Repo(str(tmp_path))) == []
+
+
+# ---------------------------------------------------------------------------
+# traced-purity (minimal trees)
+# ---------------------------------------------------------------------------
+
+PURITY_FIXTURE = """\
+import numpy as np
+
+
+def step_access(state, x):
+    if x > 0:
+        state = float(x)
+    state = state + np.random.rand()
+    n = x.shape[0]
+    if n > 2:
+        state = state + 1
+    for v in probe_order(x):
+        state = state + v
+    for v in x:
+        state = state + v
+    return state
+"""
+
+
+def test_purity_violations_detected(tmp_path):
+    write(tmp_path, "src/repro/core/lane_program.py", PURITY_FIXTURE)
+    msgs = messages(pass_purity.run(Repo(str(tmp_path))))
+    assert "python branch on traced value" in msgs
+    assert "float() concretizes a traced value" in msgs
+    assert "host service call np.random.rand() in traced code" in msgs
+    assert "python for over traced array" in msgs
+    # sanitized branch (x.shape) and the probe-chain unroll (for over a
+    # call result) are legal — exactly one branch and one for flagged
+    assert msgs.count("python branch on traced value") == 1
+    assert msgs.count("python for over traced array") == 1
+
+
+STATIC_ARG_FIXTURE = """\
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def run(x, n):
+    if n:
+        x = x + 1
+    if x:
+        x = x + 2
+    return x
+"""
+
+
+def test_purity_respects_static_argnums(tmp_path):
+    write(tmp_path, "src/repro/core/sweep.py", STATIC_ARG_FIXTURE)
+    found = pass_purity.run(Repo(str(tmp_path)))
+    assert len(found) == 1 and found[0].line == 10, messages(found)
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+def test_dropped_spec_repr_fold_detected(clone):
+    edit(clone, "src/repro/core/sweep.py", "repr(cell.spec)", '"spec"')
+    found = errors(pass_cache_key.run(Repo(str(clone))))
+    assert any("no longer folds repr(cell.spec)" in f.message
+               for f in found), messages(found)
+
+
+def test_spec_field_opting_out_of_repr_detected(clone):
+    edit(clone, "src/repro/core/simulator.py",
+         "    kind: str                      # one of KINDS",
+         "    kind: str                      # one of KINDS\n"
+         "    leak: int = field(repr=False, default=0)")
+    found = errors(pass_cache_key.run(Repo(str(clone))))
+    assert any("MethodSpec.leak sets repr=False" in f.message
+               for f in found), messages(found)
+
+
+def test_new_run_sweep_knob_detected(clone):
+    edit(clone, "src/repro/core/sweep.py",
+         "block_size: Optional[int] = None) -> SweepResult:",
+         "block_size: Optional[int] = None,\n"
+         "              magic: int = 0) -> SweepResult:")
+    found = errors(pass_cache_key.run(Repo(str(clone))))
+    assert any("run_sweep parameter 'magic'" in f.message
+               for f in found), messages(found)
+
+
+def test_unclassified_worldplan_field_detected(clone):
+    edit(clone, "src/repro/core/lane_program.py",
+         "    dirty: Tuple[Optional[np.ndarray], ...]",
+         "    dirty: Tuple[Optional[np.ndarray], ...]\n"
+         "    shadow: int = 0")
+    found = errors(pass_cache_key.run(Repo(str(clone))))
+    assert any("_WorldPlan.shadow is not classified" in f.message
+               for f in found), messages(found)
+
+
+# ---------------------------------------------------------------------------
+# pass isolation: each seeded violation fires exactly its pass
+# ---------------------------------------------------------------------------
+
+def test_clone_fixture_is_clean(clone):
+    active, _ = analysis.run_passes(Repo(str(clone)), analysis.ALL_PASSES)
+    assert not framework.has_errors(active), \
+        "\n".join(f.render() for f in errors(active))
+
+
+ISOLATION_SEEDS = [
+    ("kind-dispatch", "src/repro/core/lane_program.py",
+     'lanes["is_colt"][i] = s.kind == "colt"',
+     'lanes["is_colt"][i] = s.kind == "colt-off"'),
+    ("plane-layout", "src/repro/core/lane_program.py",
+     'l1=packed((L, L1_SETS, L1_WAYS, PLANE_WIDTH["l1"]), -1),',
+     "l1=packed((L, L1_SETS, L1_WAYS, 4), -1),"),
+    ("cache-key", "src/repro/core/sweep.py",
+     "repr(cell.spec)", '"spec"'),
+]
+
+
+@pytest.mark.parametrize("rule,rel,old,new", ISOLATION_SEEDS,
+                         ids=[s[0] for s in ISOLATION_SEEDS])
+def test_seeded_violation_fires_exactly_its_pass(clone, rule, rel, old,
+                                                 new):
+    edit(clone, rel, old, new)
+    active, _ = analysis.run_passes(Repo(str(clone)), analysis.ALL_PASSES)
+    fired = {f.rule for f in errors(active)}
+    assert fired == {rule}, \
+        "\n".join(f.render() for f in errors(active))
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_silences_matching_finding(tmp_path):
+    write(tmp_path, "src/repro/core/simulator.py", LATENCY_FIXTURE)
+    write(tmp_path, framework.SUPPRESSION_FILE,
+          "latency-constants | src/repro/core/*.py | magic number 50 | "
+          "seeded for the suppression test\n")
+    active, suppressed = analysis.run_passes(Repo(str(tmp_path)),
+                                             [pass_latency])
+    assert active == []
+    assert len(suppressed) == 1 and suppressed[0].rule == \
+        "latency-constants"
+
+
+def test_unused_suppression_warns(tmp_path):
+    write(tmp_path, "src/repro/core/simulator.py",
+          "LAT_WALK = 50\n")
+    write(tmp_path, framework.SUPPRESSION_FILE,
+          "latency-constants | nowhere/*.py | magic number 99 | stale\n")
+    active, _ = analysis.run_passes(Repo(str(tmp_path)), [pass_latency])
+    assert any(f.rule == "suppressions" and f.severity == "warning"
+               and "matches no finding" in f.message for f in active)
+
+
+def test_malformed_suppression_is_an_error(tmp_path):
+    write(tmp_path, "src/repro/core/simulator.py", "LAT_WALK = 50\n")
+    write(tmp_path, framework.SUPPRESSION_FILE, "only | three | fields\n")
+    active, _ = analysis.run_passes(Repo(str(tmp_path)), [pass_latency])
+    assert any(f.rule == "suppressions" and f.severity == "error"
+               and "malformed" in f.message for f in active)

@@ -1,0 +1,166 @@
+"""Tests for the no-install CI gate scripts.
+
+``scripts/check_docs_links.py`` and ``scripts/check_tier_budget.py`` are
+loaded by file path (they are scripts, not package modules) and driven
+against tmp-dir fixture trees: broken-link, undocumented-kind,
+unarmed-host and over-budget cases, plus the GitHub step-summary output.
+The tier-budget tests stub the pytest subprocess and the clock — they
+test the gate logic, not the suite it times.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO_ROOT / "scripts" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def docs_links():
+    return load_script("check_docs_links")
+
+
+@pytest.fixture
+def tier_budget():
+    # function-scoped: each test monkeypatches its module globals
+    return load_script("check_tier_budget")
+
+
+# ---------------------------------------------------------------------------
+# check_docs_links
+# ---------------------------------------------------------------------------
+
+SIM_FIXTURE = """\
+ACCEL_KINDS = ("subregion",)
+KINDS = ("base", "thp") + ACCEL_KINDS
+"""
+
+
+def make_docs_tree(root: Path, *, methods: str, readme: str):
+    (root / "src" / "repro" / "core").mkdir(parents=True)
+    (root / "src" / "repro" / "core" / "simulator.py").write_text(
+        SIM_FIXTURE)
+    (root / "docs").mkdir()
+    (root / "docs" / "methods.md").write_text(methods)
+    (root / "README.md").write_text(readme)
+
+
+def test_docs_clean_tree_passes(tmp_path, docs_links, capsys):
+    make_docs_tree(tmp_path,
+                   methods="`base` `thp` `subregion`\n",
+                   readme="[methods](docs/methods.md)\n")
+    assert docs_links.check(str(tmp_path)) == 0
+    assert "0 broken" in capsys.readouterr().out
+
+
+def test_docs_broken_link_fails(tmp_path, docs_links, capsys):
+    make_docs_tree(tmp_path,
+                   methods="`base` `thp` `subregion`\n",
+                   readme="[gone](docs/nonexistent.md)\n")
+    assert docs_links.check(str(tmp_path)) == 1
+    assert "BROKEN" in capsys.readouterr().err
+
+
+def test_docs_undocumented_kind_fails(tmp_path, docs_links, capsys):
+    make_docs_tree(tmp_path,
+                   methods="`base` `subregion`\n",  # thp missing
+                   readme="[methods](docs/methods.md)\n")
+    assert docs_links.check(str(tmp_path)) == 1
+    err = capsys.readouterr().err
+    assert "UNDOCUMENTED" in err and "`thp`" in err
+
+
+def test_docs_kind_registry_uses_shared_parser(tmp_path, docs_links):
+    make_docs_tree(tmp_path, methods="x\n", readme="x\n")
+    assert docs_links.registered_kinds(str(tmp_path)) == \
+        ["base", "thp", "subregion"]
+
+
+# ---------------------------------------------------------------------------
+# check_tier_budget
+# ---------------------------------------------------------------------------
+
+def arm_tier_budget(tier_budget, monkeypatch, tmp_path, *, wall_s: float,
+                    baseline):
+    """Point the script at a tmp repo, stub pytest + the clock."""
+    bench = tmp_path / "BENCH_tier1.json"
+    if baseline is not None:
+        entry = {"git_sha": "seed", "host": tier_budget._host_sig(),
+                 "wall_s": baseline, "pytest_args": []}
+        bench.write_text(json.dumps([entry]) + "\n")
+    monkeypatch.setattr(tier_budget, "REPO", str(tmp_path))
+    monkeypatch.setattr(tier_budget, "BENCH_FILE", str(bench))
+
+    real_run = subprocess.run
+
+    def fake_run(cmd, **kw):
+        if "pytest" in cmd:
+            return subprocess.CompletedProcess(cmd, 0)
+        return real_run(cmd, **kw)  # git calls: fail normally in tmp
+
+    monkeypatch.setattr(tier_budget.subprocess, "run", fake_run)
+    ticks = iter([0.0, wall_s])
+    monkeypatch.setattr(tier_budget.time, "time", lambda: next(ticks))
+    return bench
+
+
+def test_unarmed_host_passes_with_ready_to_commit_entry(
+        tier_budget, monkeypatch, tmp_path, capsys):
+    bench = arm_tier_budget(tier_budget, monkeypatch, tmp_path,
+                            wall_s=10.0, baseline=None)
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert tier_budget.main(["--check"]) == 0
+    err = capsys.readouterr().err
+    assert "budget gate did NOT run" in err
+    assert '"wall_s": 10.0' in err  # the ready-to-commit entry
+    text = summary.read_text()
+    assert "not armed" in text and '"wall_s": 10.0' in text
+    # the run was still appended so a later commit can arm the gate
+    assert json.loads(bench.read_text())[0]["wall_s"] == 10.0
+
+
+def test_over_budget_fails(tier_budget, monkeypatch, tmp_path, capsys):
+    arm_tier_budget(tier_budget, monkeypatch, tmp_path,
+                    wall_s=10.0, baseline=1.0)
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert tier_budget.main(["--check", "--no-append"]) == 1
+    assert "BUDGET EXCEEDED" in capsys.readouterr().err
+    assert "BUDGET EXCEEDED" in summary.read_text()
+
+
+def test_within_budget_passes(tier_budget, monkeypatch, tmp_path, capsys):
+    arm_tier_budget(tier_budget, monkeypatch, tmp_path,
+                    wall_s=10.0, baseline=9.0)
+    assert tier_budget.main(["--check", "--no-append"]) == 0
+    assert "1.11x vs baseline" in capsys.readouterr().out
+
+
+def test_baseline_ignores_other_host_and_args(tier_budget, monkeypatch,
+                                              tmp_path, capsys):
+    bench = arm_tier_budget(tier_budget, monkeypatch, tmp_path,
+                            wall_s=10.0, baseline=None)
+    entries = [
+        {"git_sha": "x", "host": "other-host-1cpu", "wall_s": 0.1,
+         "pytest_args": []},
+        {"git_sha": "x", "host": tier_budget._host_sig(), "wall_s": 0.1,
+         "pytest_args": ["--cov=repro.core"]},
+    ]
+    bench.write_text(json.dumps(entries) + "\n")
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    assert tier_budget.main(["--check", "--no-append"]) == 0
+    assert "did NOT run" in capsys.readouterr().err
