@@ -23,7 +23,7 @@ import time
 from typing import Any, Dict, List
 
 from . import _env  # noqa: F401  (must precede jax-importing modules)
-from . import paged_kernel, roofline_summary, tlb_suite
+from . import chaos, paged_kernel, roofline_summary, tlb_suite
 from repro.core.sweep import resolve_backend
 from repro.scenarios import clear_materialized_cache
 
@@ -66,6 +66,9 @@ BENCHES: List = [
     ("tlb_accelerator",
      "Accelerator-scale methods: subregion / cache-TLB / dead-protect",
      tlb_suite.bench_accelerator),
+    ("tlb_chaos",
+     "Chaos harness: fault injection + recovery (recovered vs lost work)",
+     chaos.bench_chaos),
     ("dma_fragmentation", "TPU adaptation: descriptor model",
      paged_kernel.bench_dma_vs_fragmentation),
     ("dma_k_ablation", "TPU adaptation: |K| ablation",

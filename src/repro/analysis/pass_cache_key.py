@@ -44,6 +44,7 @@ EXEC_KNOB_ALLOWLIST = {"cells", "cache", "cache_dir", "backend",
 # isinstance() class name of the branch; "" is the final else (static
 # mapping) branch.
 WORLD_KEY_ATTRS: Dict[str, Set[str]] = {
+    "ParityWorld": {"faults", "base"},
     "DynamicMapping": {"boundaries", "epochs", "ppn"},
     "MultiTenantMapping": {"boundaries", "tenant_ids", "asids",
                            "recycled", "tenants", "ppn"},
@@ -65,6 +66,8 @@ WORLDPLAN_FOLDS: Dict[str, str] = {
     "switch": "derived: recomputed from tenant_ids/boundaries",
     "recycled": "folded: recycled tuples",
     "dirty": "derived: recomputed from consecutive epoch ppn diffs",
+    "parity": "derived: spliced from the ParityWorld faults tuple, which "
+              "cell_key folds verbatim",
 }
 
 

@@ -81,6 +81,26 @@ KIND_CONTRACTS: Dict[str, Dict] = {
                          flag="use_dead"),
 }
 
+# Per-policy dispatch contract, the ``*_policy`` analogue of the kind
+# table: every ``MethodSpec`` field named ``*_policy`` is an orthogonal
+# per-lane knob (context-switch handling, translation coherence,
+# soft-error recovery) that both executors must branch on.  ``oracle``/
+# ``lane``: (function, literal) pairs as in KIND_CONTRACTS.  A policy
+# field with no entry fails — adding a policy (as ``par_policy`` was for
+# the tlb-parity fault model) means declaring its dispatch evidence here.
+POLICY_CONTRACTS: Dict[str, Dict] = {
+    "ctx_policy": dict(
+        oracle=[("_segs_multitenant", "flush"), ("_segs_multitenant", "tag"),
+                ("_segs_nested", "flush"), ("_segs_nested", "tag")],
+        lane=[("pack_lanes", "flush"), ("pack_lanes", "tag")]),
+    "coh_policy": dict(
+        oracle=[("_run_segments", "hw-coherence")],
+        lane=[("pack_lanes", "hw-coherence")]),
+    "par_policy": dict(
+        oracle=[("run_method_parity", "parity")],
+        lane=[("pack_lanes", "ecc")]),
+}
+
 
 def _function(tree: ast.AST, name: str) -> Optional[ast.FunctionDef]:
     for node in ast.walk(tree):
@@ -315,6 +335,35 @@ def run(repo: Repo) -> List[Finding]:
                                 f"{fnames} appears in {what}",
                         hint="register the kind so the differential "
                              "suites exercise it"))
+
+    # -- MethodSpec *_policy knobs: declared and dispatched -------------
+    policy_fields: Set[str] = set()
+    for node in ast.walk(sim_tree):
+        if isinstance(node, ast.ClassDef) and node.name == "MethodSpec":
+            policy_fields = {
+                n.target.id for n in node.body
+                if isinstance(n, ast.AnnAssign)
+                and isinstance(n.target, ast.Name)
+                and n.target.id.endswith("_policy")}
+    for field in sorted(policy_fields):
+        contract = POLICY_CONTRACTS.get(field)
+        if contract is None:
+            findings.append(Finding(
+                file=SIMULATOR, line=0, rule=RULE, severity="error",
+                message=f"MethodSpec.{field} has no entry in the policy "
+                        f"dispatch contract table",
+                hint="declare its oracle/lane selector literals in "
+                     "repro.analysis.pass_kind_dispatch.POLICY_CONTRACTS"))
+            continue
+        check_evidence(field, contract["oracle"], sim_tree, SIMULATOR)
+        check_evidence(field, contract["lane"], lane_tree, LANE_PROGRAM)
+    for field in POLICY_CONTRACTS:
+        if field not in policy_fields:
+            findings.append(Finding(
+                file=SIMULATOR, line=0, rule=RULE, severity="warning",
+                message=f"policy contract table lists unknown MethodSpec "
+                        f"field {field!r}",
+                hint="remove its POLICY_CONTRACTS entry"))
 
     for kind in undocumented_kinds(repo):
         findings.append(Finding(

@@ -44,8 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
-                         NestedMapping, cluster_bitmap, huge_page_backed,
-                         next_pow2 as _next_pow2)
+                         NestedMapping, ParityWorld, cluster_bitmap,
+                         huge_page_backed, next_pow2 as _next_pow2)
 from .plane_layout import (FILL_REC_WIDTH, MAP_REC_WIDTH, PLANE_FIELDS,
                            PLANE_WIDTH)
 from .simulator import (CLUS_SETS, CLUS_WAYS, CTLB_SETS, CTLB_WAYS, DP_TABLE,
@@ -277,7 +277,11 @@ class _WorldPlan:
     and ``dirty[i]`` the vpn dirty bitmap the coherence pass must sweep on
     entering it (``None`` when nothing turned stale — dynamic worlds dirty
     by guest vpn, nested worlds by composed diff so host-level remaps
-    surface too).
+    surface too).  ``parity[i]`` marks segments spliced in by a
+    :class:`~repro.core.page_table.ParityWorld` fault: their dirty set is
+    a soft error, not a remap, so lanes whose spec runs ``par_policy=
+    "ecc"`` (in-place correction) skip the invalidation pass for exactly
+    those segments while remap coherence stays untouched.
     """
 
     sources: Tuple[Mapping, ...]
@@ -287,22 +291,50 @@ class _WorldPlan:
     switch: Tuple[bool, ...]
     recycled: Tuple[bool, ...]
     dirty: Tuple[Optional[np.ndarray], ...]
+    parity: Tuple[bool, ...]
 
 
 def _world_plan(world) -> _WorldPlan:
+    if isinstance(world, ParityWorld):
+        p = _world_plan(world.base)
+        bounds = list(p.bounds)
+        src_idx = list(p.src_idx)
+        asids = list(p.asids)
+        switch = list(p.switch)
+        recycled = list(p.recycled)
+        dirty = list(p.dirty)
+        parity = [False] * len(bounds)
+        for t, vpn in world.faults:
+            # the segment live at fault time; collisions with base bounds
+            # are excluded by the ParityWorld constructor
+            i = int(np.searchsorted(np.asarray(bounds), t,
+                                    side="right") - 1)
+            d = np.zeros(p.sources[src_idx[i]].n_pages, bool)
+            d[vpn] = True
+            bounds.insert(i + 1, t)
+            src_idx.insert(i + 1, src_idx[i])
+            asids.insert(i + 1, asids[i])
+            switch.insert(i + 1, False)
+            recycled.insert(i + 1, False)
+            dirty.insert(i + 1, d)
+            parity.insert(i + 1, True)
+        return _WorldPlan(p.sources, tuple(bounds), tuple(src_idx),
+                          tuple(asids), tuple(switch), tuple(recycled),
+                          tuple(dirty), tuple(parity))
     if isinstance(world, DynamicMapping):
         n = world.n_epochs
         dirty = (None,) + tuple(
             world.dirty(e) if world.dirty_count(e) else None
             for e in range(1, n))
         return _WorldPlan(world.epochs, world.boundaries, tuple(range(n)),
-                          (0,) * n, (False,) * n, (False,) * n, dirty)
+                          (0,) * n, (False,) * n, (False,) * n, dirty,
+                          (False,) * n)
     if isinstance(world, MultiTenantMapping):
         n = world.n_segments
         return _WorldPlan(world.tenants, world.boundaries, world.tenant_ids,
                           world.asids,
                           tuple(world.switches(s) for s in range(n)),
-                          world.recycled, (None,) * n)
+                          world.recycled, (None,) * n, (False,) * n)
     if isinstance(world, NestedMapping):
         segs = world.plan_segments()
         sources: List[Mapping] = []
@@ -313,13 +345,14 @@ def _world_plan(world) -> _WorldPlan:
                 src_of[id(ns.mapping)] = len(sources)
                 sources.append(ns.mapping)
             src_idx.append(src_of[id(ns.mapping)])
+        n = len(segs)
         return _WorldPlan(tuple(sources), tuple(ns.lo for ns in segs),
                           tuple(src_idx), tuple(ns.asid for ns in segs),
                           tuple(ns.switch for ns in segs),
                           tuple(ns.recycled for ns in segs),
-                          tuple(ns.dirty for ns in segs))
+                          tuple(ns.dirty for ns in segs), (False,) * n)
     return _WorldPlan((world,), (0,), (0,), (0,), (False,), (False,),
-                      (None,))
+                      (None,), (False,))
 
 
 def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
@@ -486,7 +519,10 @@ def pack_lanes(cells: Sequence["SweepCellLike"], device_count: int = 1):
             # `turned` = this grid segment starts at one of the LANE's own
             # boundaries (the union grid also cuts at other lanes')
             turned = seg > 0 and e >= 1 and lo == p.bounds[e]
-            if turned and (w, e) in dirty_rec_id:
+            # a parity-fault dirty set is a soft error, not a remap: ecc
+            # lanes correct it in place and skip the invalidation pass
+            ecc_skip = p.parity[e] and s.par_policy == "ecc"
+            if turned and (w, e) in dirty_rec_id and not ecc_skip:
                 lanes["seg_shoot"][i, seg] = True
                 lanes["seg_dirty"][i, seg] = dirty_rec_id[(w, e)]
             if turned:

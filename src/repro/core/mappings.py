@@ -163,6 +163,39 @@ class BuddyAllocator:
         largest = max((o for o, s in enumerate(self.free) if s), default=-1)
         return free_frames, largest
 
+    # ---------------------------------------------------------- robustness
+    def snapshot(self) -> List[List[int]]:
+        """Free lists as plain sorted lists (JSON-serializable), one per
+        order — the allocator's complete mutable state."""
+        return [sorted(s) for s in self.free]
+
+    def restore(self, freelists: List[List[int]]) -> None:
+        assert len(freelists) == len(self.free)
+        self.free = [set(int(b) for b in fl) for fl in freelists]
+
+    def retire(self, frame: int) -> bool:
+        """Permanently remove one FREE frame from the pool (bad page).
+
+        Splits the free block containing ``frame`` down to order 0 and
+        drops the poisoned frame; its buddies stay allocatable.  Returns
+        False when the frame is currently allocated (or already retired) —
+        the caller must free its owner first.  ``n_frames`` is unchanged,
+        so a retired frame counts as permanently in-use."""
+        for o in range(self.max_order + 1):
+            base = (frame >> o) << o       # buddy blocks are size-aligned
+            if base in self.free[o]:
+                self.free[o].discard(base)
+                while o > 0:
+                    o -= 1
+                    half = 1 << o
+                    if frame < base + half:
+                        self.free[o].add(base + half)
+                    else:
+                        self.free[o].add(base)
+                        base += half
+                return True
+        return False
+
 
 def demand_mapping(n_pages: int, seed: int = 0, churn: float = 0.3,
                    thp: bool = False) -> Mapping:

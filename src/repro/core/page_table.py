@@ -672,6 +672,59 @@ def build_nested_mapping(guests, host,
                          tuple(gids), tuple(asids), name=name)
 
 
+@dataclasses.dataclass(frozen=True)
+class ParityWorld:
+    """A base world plus a schedule of mid-trace TLB parity-flip faults.
+
+    Soft errors poison *live TLB state*, not the page table: at trace step
+    ``t`` a parity fault flips a bit in whatever entry currently covers
+    ``vpn``.  The mapping itself stays correct, so the world wraps any
+    existing base world — static :class:`Mapping`, :class:`DynamicMapping`,
+    :class:`MultiTenantMapping` or :class:`NestedMapping` — unchanged, and
+    only adds the fault schedule.  What a fault *costs* is the method's
+    :attr:`~repro.core.simulator.MethodSpec.par_policy`:
+
+    * ``"parity"`` — detect-invalidate-rewalk.  The flipped entry (and any
+      other entry covering the vpn) is invalidated; a coalesced |K|=k
+      entry thereby loses up to ``2^k`` translations where Base loses one.
+      That multiplied blast radius is the paper-grounded robustness trade
+      of coalescing.
+    * ``"ecc"`` — idealized in-place correction: no entry is lost and the
+      run is bit-identical to the fault-free run by construction.
+
+    ``faults`` is a tuple of ``(step, vpn)`` pairs with strictly ascending
+    steps.  Steps must be positive and must not collide with the base
+    world's own segment boundaries — a fault step becomes an extra segment
+    boundary when lowered, and a collision would silently merge the fault
+    with an epoch turnover or context switch.
+    """
+
+    base: object                   # Mapping | Dynamic/MultiTenant/Nested
+    faults: Tuple[Tuple[int, int], ...]
+    name: str = "parity"
+
+    def __post_init__(self):
+        assert not isinstance(self.base, ParityWorld), "no nesting"
+        faults = tuple((int(t), int(v)) for t, v in self.faults)
+        object.__setattr__(self, "faults", faults)
+        steps = [t for t, _ in faults]
+        assert steps == sorted(set(steps)), \
+            f"fault steps must be strictly ascending: {steps}"
+        assert all(t > 0 for t in steps), f"fault steps must be > 0: {steps}"
+        assert all(v >= 0 for _, v in faults), "fault vpns must be mapped"
+        clash = set(steps) & set(self.base_boundaries())
+        assert not clash, \
+            f"fault steps collide with base segment boundaries: {clash}"
+
+    def base_boundaries(self) -> Tuple[int, ...]:
+        """Trace positions where the BASE world already turns a segment."""
+        if isinstance(self.base, (DynamicMapping, MultiTenantMapping)):
+            return tuple(self.base.boundaries)
+        if isinstance(self.base, NestedMapping):
+            return tuple(sg.lo for sg in self.base.plan_segments())
+        return (0,)
+
+
 def cluster_bitmap(m: Mapping, cluster_bits: int = 3) -> np.ndarray:
     """Per-vpn bitmap for the Cluster TLB [Pham et al., HPCA'14].
 

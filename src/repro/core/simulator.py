@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
-                         NestedMapping, cluster_bitmap, huge_page_backed)
+                         NestedMapping, ParityWorld, cluster_bitmap,
+                         huge_page_backed)
 
 REGULAR = -1
 HUGE = 9            # k-class used for 2MB entries (2^9 pages)
@@ -150,6 +151,16 @@ class MethodSpec:
     #: invalidated-entry set (and so every counter and translation) is
     #: identical under both; only cycles differ.
     coh_policy: str = "shootdown"
+    #: soft-error (parity-flip) policy on ParityWorld faults: ``"parity"``
+    #: is detect-invalidate-rewalk — a flipped bit is caught by the parity
+    #: check, EVERY entry whose covered range contains the poisoned vpn is
+    #: invalidated (a |K|=k entry loses up to 2^k translations where Base
+    #: loses one — the coalescing blast radius), and subsequent accesses
+    #: re-walk and refill.  ``"ecc"`` is idealized in-place correction: the
+    #: flip is repaired without losing any entry, so a run is bit-identical
+    #: to the fault-free run by construction.  Irrelevant on worlds without
+    #: parity faults.
+    par_policy: str = "parity"
 
     def __post_init__(self):
         assert self.kind in KINDS, self.kind
@@ -157,6 +168,7 @@ class MethodSpec:
         assert self.ctx_policy in ("flush", "tag"), self.ctx_policy
         assert self.coh_policy in ("shootdown", "hw-coherence"), \
             self.coh_policy
+        assert self.par_policy in ("parity", "ecc"), self.par_policy
 
 
 @dataclasses.dataclass
@@ -630,9 +642,7 @@ class _OracleSegment:
     dirty: Optional[np.ndarray] = None    # bool[n_pages] shootdown set
 
 
-def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray,
-                       on_step=None, on_event=None) -> SimResult:
-    """Simulate one method over a (possibly dynamic) world, pure python."""
+def _segs_dynamic(spec: MethodSpec, world) -> list:
     from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
 
     dyn = _as_dynamic(world)
@@ -648,8 +658,14 @@ def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray,
             fill=_fill_profile(m, fkey, m.n_pages),
             clus=cluster_bitmap(m) if has_clus else None,
             dirty=dirty))
-    return _run_segments(spec, segs, trace, on_step=on_step,
-                         on_event=on_event)
+    return segs
+
+
+def run_method_dynamic(spec: MethodSpec, world, trace: np.ndarray,
+                       on_step=None, on_event=None) -> SimResult:
+    """Simulate one method over a (possibly dynamic) world, pure python."""
+    return _run_segments(spec, _segs_dynamic(spec, world), trace,
+                         on_step=on_step, on_event=on_event)
 
 
 def run_method_multitenant(spec: MethodSpec, world: MultiTenantMapping,
@@ -662,6 +678,11 @@ def run_method_multitenant(spec: MethodSpec, world: MultiTenantMapping,
     a context switch flushes or relies on ASID tags is
     ``spec.ctx_policy``.  The sweep engine's switch-segmented lanes must
     match this bit for bit (``tests/test_multitenant.py``)."""
+    return _run_segments(spec, _segs_multitenant(spec, world), trace,
+                         on_step=on_step, on_event=on_event)
+
+
+def _segs_multitenant(spec: MethodSpec, world: MultiTenantMapping) -> list:
     from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
 
     assert isinstance(world, MultiTenantMapping)
@@ -682,8 +703,7 @@ def run_method_multitenant(spec: MethodSpec, world: MultiTenantMapping,
             clus=clus_of[tid], asid=world.asids[s], switch=sw,
             flush_all=sw and spec.ctx_policy == "flush",
             flush_asid=world.recycled[s] and spec.ctx_policy == "tag"))
-    return _run_segments(spec, segs, trace, on_step=on_step,
-                         on_event=on_event)
+    return segs
 
 
 def run_method_nested(spec: MethodSpec, world: NestedMapping,
@@ -699,6 +719,11 @@ def run_method_nested(spec: MethodSpec, world: NestedMapping,
     a coherence turnover over the *composed* dirty set, charged under
     ``spec.coh_policy``.  The sweep engine's nested lanes must match this
     bit for bit (``tests/test_nested.py``, the extended fuzzer)."""
+    return _run_segments(spec, _segs_nested(spec, world), trace,
+                         on_step=on_step, on_event=on_event)
+
+
+def _segs_nested(spec: MethodSpec, world: NestedMapping) -> list:
     from .lane_program import _fill_profile, _fill_profile_key  # lazy: no cycle
 
     assert isinstance(world, NestedMapping)
@@ -719,6 +744,49 @@ def run_method_nested(spec: MethodSpec, world: NestedMapping,
             flush_all=ns.switch and spec.ctx_policy == "flush",
             flush_asid=ns.recycled and spec.ctx_policy == "tag",
             dirty=ns.dirty))
+    return segs
+
+
+def _base_segments(spec: MethodSpec, base) -> list:
+    """Oracle segment plan for any (non-parity) base world."""
+    if isinstance(base, NestedMapping):
+        return _segs_nested(spec, base)
+    if isinstance(base, MultiTenantMapping):
+        return _segs_multitenant(spec, base)
+    return _segs_dynamic(spec, base)     # handles static too
+
+
+def run_method_parity(spec: MethodSpec, world: ParityWorld,
+                      trace: np.ndarray, on_step=None, on_event=None
+                      ) -> SimResult:
+    """Simulate one method over a parity-fault world, pure python.
+
+    Each ``(step, vpn)`` fault is lowered to an extra segment boundary at
+    ``step`` that keeps the live mapping, fill profile and ASID — so no
+    context-switch work happens — and, under ``par_policy="parity"``,
+    carries a single-vpn dirty set: entering it runs the standard
+    detect-invalidate pass (every entry covering the vpn dies; a |K|=k
+    entry loses up to ``2^k`` translations where Base loses one) charged
+    like a coherence turnover under ``spec.coh_policy``, and subsequent
+    accesses re-walk and refill — the detect-invalidate-rewalk recovery.
+    Under ``par_policy="ecc"`` the fault segment carries no dirty set and
+    the whole run is bit-identical to the fault-free run by construction.
+    The sweep engine's parity-spliced lanes must match this bit for bit
+    (``tests/test_robustness.py``)."""
+    assert isinstance(world, ParityWorld)
+    segs = _base_segments(spec, world.base)
+    for t, vpn in world.faults:
+        # the segment live at step t: the last one with lo <= t
+        live_i = max(i for i, sg in enumerate(segs) if sg.lo <= t)
+        live = segs[live_i]
+        assert 0 <= vpn < live.m.n_pages, (t, vpn, live.m.n_pages)
+        dirty = None
+        if spec.par_policy == "parity":
+            dirty = np.zeros(live.m.n_pages, bool)
+            dirty[vpn] = True
+        segs.insert(live_i + 1, _OracleSegment(
+            lo=t, m=live.m, fill=live.fill, clus=live.clus,
+            asid=live.asid, dirty=dirty))
     return _run_segments(spec, segs, trace, on_step=on_step,
                          on_event=on_event)
 

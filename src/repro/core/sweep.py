@@ -61,6 +61,7 @@ import hashlib
 import os
 import subprocess
 import time
+import zipfile
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -73,7 +74,7 @@ from .lane_program import (
     init_batched_state as _init_batched_state, needs_switch_pass,
     pack_lanes as _pack_lanes, shoot_lane, step_access, switch_lane)
 from .page_table import (DynamicMapping, Mapping, MultiTenantMapping,
-                         NestedMapping)
+                         NestedMapping, ParityWorld)
 from .simulator import MethodSpec, SimResult
 
 # Default trace-steps-per-block of the time-blocked XLA backend.  Override
@@ -124,7 +125,11 @@ class SweepCell:
       :class:`~repro.core.page_table.NestedMapping` whose segment grid is
       the union of its VM schedule, guest epochs and host epochs (two-level
       translation; the shootdown-vs-hw-coherence knob is
-      ``spec.coh_policy``); get one from a registered scenario
+      ``spec.coh_policy``), **or** a
+      :class:`~repro.core.page_table.ParityWorld` wrapping any of those
+      plus a schedule of mid-trace TLB parity-flip faults (soft-error
+      recovery; the detect-invalidate-rewalk vs in-place-correction knob
+      is ``spec.par_policy``); get one from a registered scenario
       (:mod:`repro.scenarios`) or the generators in
       :mod:`repro.core.mappings`.
     * ``trace``   — 1-D integer array of VPNs (every entry must be a mapped
@@ -135,43 +140,59 @@ class SweepCell:
     """
 
     spec: MethodSpec
-    mapping: "Mapping | DynamicMapping | MultiTenantMapping | NestedMapping"
+    mapping: ("Mapping | DynamicMapping | MultiTenantMapping | "
+              "NestedMapping | ParityWorld")
     trace: np.ndarray
 
     def __post_init__(self):
         assert self.trace.ndim == 1
-        if isinstance(self.mapping, (DynamicMapping, MultiTenantMapping)):
+        world = self.mapping
+        if isinstance(world, ParityWorld):
+            assert all(0 < t < self.trace.shape[0]
+                       for t, _ in world.faults), \
+                "fault steps must fall inside the trace"
+            world = world.base
+        if isinstance(world, (DynamicMapping, MultiTenantMapping)):
             assert all(0 < b < self.trace.shape[0]
-                       for b in self.mapping.boundaries[1:]), \
+                       for b in world.boundaries[1:]), \
                 "segment boundaries must fall inside the trace"
-        elif isinstance(self.mapping, NestedMapping):
+        elif isinstance(world, NestedMapping):
             assert all(0 < ns.lo < self.trace.shape[0]
-                       for ns in self.mapping.plan_segments()[1:]), \
+                       for ns in world.plan_segments()[1:]), \
                 "segment boundaries must fall inside the trace"
 
     @property
     def epochs(self) -> Tuple[Mapping, ...]:
-        if isinstance(self.mapping, DynamicMapping):
-            return self.mapping.epochs
-        if isinstance(self.mapping, MultiTenantMapping):
-            return self.mapping.tenants
-        if isinstance(self.mapping, NestedMapping):
+        world = self.mapping
+        if isinstance(world, ParityWorld):
+            world = world.base
+        if isinstance(world, DynamicMapping):
+            return world.epochs
+        if isinstance(world, MultiTenantMapping):
+            return world.tenants
+        if isinstance(world, NestedMapping):
             # distinct composed guest-over-host views, schedule order
             seen, out = set(), []
-            for ns in self.mapping.plan_segments():
+            for ns in world.plan_segments():
                 if id(ns.mapping) not in seen:
                     seen.add(id(ns.mapping))
                     out.append(ns.mapping)
             return tuple(out)
-        return (self.mapping,)
+        return (world,)
 
     @property
     def boundaries(self) -> Tuple[int, ...]:
-        if isinstance(self.mapping, (DynamicMapping, MultiTenantMapping)):
-            return self.mapping.boundaries
-        if isinstance(self.mapping, NestedMapping):
-            return tuple(ns.lo for ns in self.mapping.plan_segments())
-        return (0,)
+        world, faults = self.mapping, ()
+        if isinstance(world, ParityWorld):
+            faults = tuple(t for t, _ in world.faults)
+            world = world.base
+        if isinstance(world, (DynamicMapping, MultiTenantMapping)):
+            base = world.boundaries
+        elif isinstance(world, NestedMapping):
+            base = tuple(ns.lo for ns in world.plan_segments())
+        else:
+            base = (0,)
+        return tuple(sorted(set(base) | set(faults)))
 
     @property
     def is_segmented(self) -> bool:
@@ -401,12 +422,19 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
 
     h = hashlib.sha256()
     h.update(repr(cell.spec).encode())
-    if isinstance(cell.mapping, DynamicMapping):
-        h.update(repr(tuple(cell.mapping.boundaries)).encode())
-        for m in cell.mapping.epochs:
+    world = cell.mapping
+    if isinstance(world, ParityWorld):
+        # the fault schedule is semantic content: when and which vpn flips
+        # decides which entries die — then fold the wrapped base world
+        # exactly as if it were the cell's mapping
+        h.update(repr(("parity", tuple(world.faults))).encode())
+        world = world.base
+    if isinstance(world, DynamicMapping):
+        h.update(repr(tuple(world.boundaries)).encode())
+        for m in world.epochs:
             h.update(digest(m.ppn).encode())
-    elif isinstance(cell.mapping, MultiTenantMapping):
-        mt = cell.mapping
+    elif isinstance(world, MultiTenantMapping):
+        mt = world
         # the full schedule: when, who, under which ASID — and the recycle
         # flags explicitly (normally derived from the former, but the
         # constructor accepts an override, which must not collide)
@@ -414,8 +442,8 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
                        tuple(mt.asids), tuple(mt.recycled))).encode())
         for m in mt.tenants:
             h.update(digest(m.ppn).encode())
-    elif isinstance(cell.mapping, NestedMapping):
-        nm = cell.mapping
+    elif isinstance(world, NestedMapping):
+        nm = world
         # both levels fold in: the VM schedule, every guest's event stream
         # AND the host's — two worlds differing only in a host-side remap
         # (which guests never observe directly) must never collide
@@ -429,7 +457,7 @@ def cell_key(cell: SweepCell, _digests: Optional[Dict[int, str]] = None
         for m in nm.host.epochs:
             h.update(digest(m.ppn).encode())
     else:
-        h.update(digest(cell.mapping.ppn).encode())
+        h.update(digest(world.ppn).encode())
     h.update(digest(cell.trace).encode())
     h.update(_code_fingerprint().encode())
     return h.hexdigest()[:32]
@@ -440,9 +468,17 @@ _COUNTER_FIELDS = ("accesses", "l1_hits", "l2_regular_hits",
                    "pred_correct", "cycles", "shootdowns")
 
 
-def _cache_load(path: str) -> Optional[SimResult]:
+def _cache_load(path: str) -> Tuple[Optional[SimResult], bool]:
+    """Load one cache entry: ``(result, corrupt)``.
+
+    A *missing* entry is the normal cold-cache case — ``(None, False)``.
+    An entry that exists but fails to parse (truncated write, bit rot,
+    wrong schema from an older layout) is CORRUPT — ``(None, True)`` — and
+    the caller must quarantine it and surface the count: silently
+    recomputing would hide an integrity problem in the cache directory.
+    """
     if not os.path.exists(path):
-        return None
+        return None, False
     try:
         with np.load(path, allow_pickle=False) as z:
             counters = z["counters"]
@@ -451,9 +487,18 @@ def _cache_load(path: str) -> Optional[SimResult]:
                 **{f: int(counters[i]) for i, f in enumerate(_COUNTER_FIELDS)},
                 coverage_mean=float(z["coverage_mean"]),
                 ppn=z["ppn"],
-            )
-    except (OSError, KeyError, ValueError, IndexError):
-        return None
+            ), False
+    except (OSError, KeyError, ValueError, IndexError, EOFError,
+            zipfile.BadZipFile):
+        return None, True
+
+
+def _quarantine_cache_entry(path: str) -> None:
+    """Move a corrupt entry aside (never delete: keep it inspectable)."""
+    try:
+        os.replace(path, path + ".quarantined")
+    except OSError:
+        pass                         # raced away or unwritable: recompute
 
 
 def _cache_store(path: str, r: SimResult) -> None:
@@ -471,6 +516,94 @@ def _cache_store(path: str, r: SimResult) -> None:
 # ---------------------------------------------------------------------------
 
 DEFAULT_CACHE_DIR = os.path.join("results", "sweep_cache")
+
+#: Chaos hook: :mod:`repro.robustness.faults` installs a callable here to
+#: inject deterministic backend compile/runtime failures —
+#: ``hook(cells, backend)`` raising makes the batch fail exactly as a real
+#: backend fault would, upstream of any recovery.  ``None`` in production.
+_BACKEND_FAULT_HOOK = None
+
+
+def _oracle_result(cell: SweepCell) -> SimResult:
+    """Pure-python oracle for one cell — the last-resort executor a failing
+    lane is bisected down to (bit-exact with the batched backends by the
+    parity suite, so recovery never changes results)."""
+    from .simulator import (run_method_dynamic, run_method_multitenant,
+                            run_method_nested, run_method_parity)
+    w = cell.mapping
+    if isinstance(w, ParityWorld):
+        return run_method_parity(cell.spec, w, cell.trace)
+    if isinstance(w, NestedMapping):
+        return run_method_nested(cell.spec, w, cell.trace)
+    if isinstance(w, MultiTenantMapping):
+        return run_method_multitenant(cell.spec, w, cell.trace)
+    return run_method_dynamic(cell.spec, w, cell.trace)
+
+
+def _run_batch(sub: List[SweepCell], backend: str, tb: int
+               ) -> List[SimResult]:
+    """Pack and simulate one batch; per-cell results in ``sub`` order."""
+    if _BACKEND_FAULT_HOOK is not None:
+        _BACKEND_FAULT_HOOK(sub, backend)
+    lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(
+        sub, device_count=jax.local_device_count())
+    st0 = _init_batched_state(
+        L, max_sets, max_ways, lanes["pred0"], lanes["asid0"],
+        with_ctlb=any(c.spec.kind == "cache-tlb" for c in sub),
+        with_dp=any(c.spec.kind == "dead-protect" for c in sub))
+    stF, ppns = _simulate_lanes(lanes, stacks, st0, seg_bounds,
+                                backend=backend, tb=tb)
+    counters = np.asarray(stF["counters"])
+    cov_samples = np.asarray(stF["cov_samples"])
+    out = []
+    for j, c in enumerate(sub):
+        t_real = c.trace.shape[0]
+        cnt = counters[j]
+        out.append(SimResult(
+            name=c.spec.name, accesses=t_real,
+            l1_hits=int(cnt[C_L1]),
+            l2_regular_hits=int(cnt[C_REG]),
+            l2_coalesced_hits=int(cnt[C_COAL]),
+            walks=int(cnt[C_WALK]),
+            aligned_probes=int(cnt[C_PROBE]),
+            pred_correct=int(cnt[C_PRED]),
+            cycles=int(cnt[C_CYC]),
+            coverage_mean=float(np.mean(cov_samples[j])),
+            ppn=ppns[j, :t_real],
+            shootdowns=int(cnt[C_SHOOT]),
+        ))
+    return out
+
+
+def _run_batch_resilient(sub: List[SweepCell], backend: str, tb: int,
+                         fstats: Dict[str, int]) -> List[SimResult]:
+    """One batch with the recovery ladder: backend → xla fallback →
+    bisection → per-cell oracle.
+
+    A failing Pallas compile/run retries the WHOLE batch on the XLA
+    backend first (bit-exact by construction, so the fallback result is
+    identical).  A batch that still fails is bisected so one poisoned
+    lane cannot take its batchmates down; a single cell that fails every
+    backend is handed to the pure-python oracle.  Only the oracle itself
+    raising propagates — the run then fails loudly rather than returning
+    partial results.  Recovery counts surface in ``fstats``.
+    """
+    try:
+        return _run_batch(sub, backend, tb)
+    except Exception:
+        if backend == "pallas":
+            fstats["backend_fallbacks"] += 1
+            try:
+                return _run_batch(sub, "xla", tb)
+            except Exception:
+                pass
+        if len(sub) == 1:
+            fstats["oracle_fallbacks"] += 1
+            return [_oracle_result(sub[0])]
+        fstats["bisections"] += 1
+        mid = len(sub) // 2
+        return (_run_batch_resilient(sub[:mid], backend, tb, fstats)
+                + _run_batch_resilient(sub[mid:], backend, tb, fstats))
 
 
 def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
@@ -526,9 +659,15 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
     hits = 0
     digests: Dict[int, str] = {}   # id-keyed; cells keep the arrays alive
     keys = [cell_key(c, digests) if cache else "" for c in cells]
+    fstats = dict(cache_quarantined=0, backend_fallbacks=0,
+                  bisections=0, oracle_fallbacks=0)
     for i, c in enumerate(cells):
         if cache:
-            r = _cache_load(os.path.join(cache_dir, keys[i] + ".npz"))
+            path = os.path.join(cache_dir, keys[i] + ".npz")
+            r, corrupt = _cache_load(path)
+            if corrupt:
+                _quarantine_cache_entry(path)
+                fstats["cache_quarantined"] += 1
             if r is not None:
                 results[i] = r
                 hits += 1
@@ -548,33 +687,8 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
                for k in range(0, len(g), LANE_SHARE_MAX)]
     for group in batches:
         sub = [cells[i] for i in group]
-        lanes, stacks, (L, max_sets, max_ways), seg_bounds = _pack_lanes(
-            sub, device_count=jax.local_device_count())
-        st0 = _init_batched_state(
-            L, max_sets, max_ways, lanes["pred0"], lanes["asid0"],
-            with_ctlb=any(c.spec.kind == "cache-tlb" for c in sub),
-            with_dp=any(c.spec.kind == "dead-protect" for c in sub))
-        stF, ppns = _simulate_lanes(lanes, stacks, st0, seg_bounds,
-                                    backend=backend, tb=tb)
-        counters = np.asarray(stF["counters"])
-        cov_samples = np.asarray(stF["cov_samples"])
-        for j, i in enumerate(group):
-            c = cells[i]
-            t_real = c.trace.shape[0]
-            cnt = counters[j]
-            r = SimResult(
-                name=c.spec.name, accesses=t_real,
-                l1_hits=int(cnt[C_L1]),
-                l2_regular_hits=int(cnt[C_REG]),
-                l2_coalesced_hits=int(cnt[C_COAL]),
-                walks=int(cnt[C_WALK]),
-                aligned_probes=int(cnt[C_PROBE]),
-                pred_correct=int(cnt[C_PRED]),
-                cycles=int(cnt[C_CYC]),
-                coverage_mean=float(np.mean(cov_samples[j])),
-                ppn=ppns[j, :t_real],
-                shootdowns=int(cnt[C_SHOOT]),
-            )
+        for j, r in enumerate(_run_batch_resilient(sub, backend, tb, fstats)):
+            i = group[j]
             results[i] = r
             if cache:
                 _cache_store(os.path.join(cache_dir, keys[i] + ".npz"), r)
@@ -588,5 +702,5 @@ def run_sweep(cells: Sequence[SweepCell], *, cache: bool = True,
     stats = dict(n_cells=len(cells), cache_hits=hits,
                  simulated=len(todo), n_batches=len(batches),
                  backend=backend, block=tb_eff,
-                 wall_s=round(time.time() - t0, 3))
+                 wall_s=round(time.time() - t0, 3), **fstats)
     return SweepResult(results=results, stats=stats)  # type: ignore[arg-type]

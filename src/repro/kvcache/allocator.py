@@ -137,3 +137,34 @@ class PagedKVAllocator:
     def utilization(self) -> float:
         free, _ = self.buddy.frag_stats()
         return 1.0 - free / max(self.buddy.n_frames, 1)
+
+    # ------------------------------------------------------------------
+    # Robustness: crash-restart snapshots and bad-page retirement
+    # ------------------------------------------------------------------
+    def snapshot_state(self) -> Dict:
+        """Complete mutable state as a JSON-serializable dict (sequence
+        block tables + buddy free lists) for engine checkpoints."""
+        return dict(
+            seqs={str(r): dict(pages=list(a.pages),
+                               blocks=[[int(b), int(o)] for b, o in a.blocks])
+                  for r, a in self.seqs.items()},
+            free=self.buddy.snapshot())
+
+    def restore_state(self, snap: Dict) -> None:
+        self.buddy.restore(snap["free"])
+        self.seqs = {
+            int(r): SeqAlloc(int(r), [int(p) for p in d["pages"]],
+                             [(int(b), int(o)) for b, o in d["blocks"]])
+            for r, d in snap["seqs"].items()}
+
+    def owners_of(self, pages) -> List[int]:
+        """Sequence ids whose block tables touch any of ``pages``."""
+        bad = set(int(p) for p in pages)
+        return sorted(r for r, a in self.seqs.items() if bad & set(a.pages))
+
+    def retire_pages(self, pages) -> List[int]:
+        """Permanently remove FREE physical pages from the pool (corrupted
+        KV backing store).  Owned pages are skipped — free the owning
+        sequence first (quarantine-and-recompute does).  Returns the pages
+        actually retired."""
+        return [int(p) for p in pages if self.buddy.retire(int(p))]

@@ -1,0 +1,19 @@
+"""Chaos harness: deterministic fault injection + recovery policies.
+
+See ``docs/robustness.md`` for the fault taxonomy, the recovery ladder of
+each runtime, and how to add a fault kind."""
+from .faults import (BackendFailure, BackendFault, CacheCorruption,
+                     EngineCrash, FAULT_KINDS, FaultPlan, KVCorruption,
+                     PageLoss, TLBParity, backend_fault_injection,
+                     corrupt_cache_entry, corrupt_kv_pages, kind_of,
+                     make_parity_world)
+from .recovery import RecoveryError, retry_with_backoff, \
+    run_engine_with_recovery
+
+__all__ = [
+    "BackendFailure", "BackendFault", "CacheCorruption", "EngineCrash",
+    "FAULT_KINDS", "FaultPlan", "KVCorruption", "PageLoss", "TLBParity",
+    "backend_fault_injection", "corrupt_cache_entry", "corrupt_kv_pages",
+    "kind_of", "make_parity_world", "RecoveryError", "retry_with_backoff",
+    "run_engine_with_recovery",
+]

@@ -72,7 +72,8 @@ class ServingEngine:
         self._next_id = 0
         self.metrics: Dict[str, float] = {
             "steps": 0, "tokens": 0, "dma_descriptors": 0,
-            "dma_descriptors_page_granular": 0, "preemptions": 0}
+            "dma_descriptors_page_granular": 0, "preemptions": 0,
+            "kv_quarantined_pages": 0}
         self._init_state()
 
     # ------------------------------------------------------------------
@@ -95,6 +96,22 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def add_request(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        # An oversized request can never be served: its block table would
+        # silently truncate past max_seq pages, and one whose page need
+        # exceeds the whole pool live-locks admission forever (the FCFS
+        # head retries every step, preempting the rest of the batch).
+        # Reject at the door instead.
+        total = len(prompt) + max_new_tokens
+        if total > self.ec.max_seq:
+            raise ValueError(
+                f"request needs {total} tokens (prompt {len(prompt)} + "
+                f"max_new_tokens {max_new_tokens}) but max_seq is "
+                f"{self.ec.max_seq}")
+        need = -(-total // self.ec.page_size)
+        if need > self.ec.num_pages:
+            raise ValueError(
+                f"request needs {need} KV pages but the pool only has "
+                f"{self.ec.num_pages}: it could never be admitted")
         rid = self._next_id
         self._next_id += 1
         self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
@@ -252,7 +269,66 @@ class ServingEngine:
             if not self.step():
                 break
         m = dict(self.metrics)
+        # max_steps exhaustion must never be silent: `stalled` counts the
+        # requests still waiting/running when the loop gave up (0 = drained)
+        m["stalled"] = len(self.waiting) + len(self.running)
         pg = m["dma_descriptors_page_granular"]
         m["descriptor_reduction"] = 1.0 - m["dma_descriptors"] / max(pg, 1)
         m["K"] = list(self.K)
         return m
+
+    # ------------------------------------------------------------------
+    # Robustness: crash-restart checkpoints and KV-page quarantine
+    # ------------------------------------------------------------------
+    def snapshot(self, ckpt_dir: str, step: int = None) -> int:
+        """Checkpoint the complete engine state (KV pool pytree via the
+        atomic :class:`~repro.checkpoint.checkpointer.Checkpointer`; the
+        request/scheduler/allocator bookkeeping rides in ``extras``).  A
+        fresh engine built from the same (model, params, config) that
+        :meth:`restore`\\ s this checkpoint continues token-exactly —
+        ``tests/test_robustness.py`` proves it against the fault-free run."""
+        from ..checkpoint.checkpointer import Checkpointer
+        extras = dict(
+            requests={str(r): dict(prompt=[int(t) for t in q.prompt],
+                                   max_new_tokens=int(q.max_new_tokens),
+                                   generated=[int(t) for t in q.generated],
+                                   state=q.state)
+                      for r, q in self.requests.items()},
+            scheduler=self.sched.snapshot_state(),
+            allocator=self.allocator.snapshot_state(),
+            K=list(self.K), k_util=self._k_util, next_id=self._next_id,
+            metrics=dict(self.metrics))
+        step = int(self.metrics["steps"]) if step is None else int(step)
+        Checkpointer(ckpt_dir).save(step, self.state, extras, blocking=True)
+        return step
+
+    def restore(self, ckpt_dir: str, step: int = None) -> int:
+        """Reload a :meth:`snapshot` into this engine (crash-restart)."""
+        from ..checkpoint.checkpointer import Checkpointer
+        tree, extras = Checkpointer(ckpt_dir).restore(step, target=self.state)
+        self.state = jax.tree.map(jnp.asarray, tree)
+        self.requests = {
+            int(r): Request(int(r), [int(t) for t in d["prompt"]],
+                            int(d["max_new_tokens"]),
+                            [int(t) for t in d["generated"]], d["state"])
+            for r, d in extras["requests"].items()}
+        self.sched.restore_state(extras["scheduler"])
+        self.allocator.restore_state(extras["allocator"])
+        self.K = [int(k) for k in extras["K"]]
+        self._k_util = float(extras["k_util"])
+        self._next_id = int(extras["next_id"])
+        self.metrics = dict(extras["metrics"])
+        return int(extras["metrics"]["steps"])
+
+    def quarantine_pages(self, pages) -> List[int]:
+        """Corrupted-KV-page recovery: recompute-preempt every owning
+        request (its ``generated`` tokens are kept, so re-prefill rebuilds
+        the exact KV the corrupted pages held), then retire the poisoned
+        physical pages from the pool permanently so re-admission cannot
+        land on them.  Returns the preempted request ids."""
+        owners = self.allocator.owners_of(pages)
+        for rid in owners:
+            self.sched.preempt(rid, self._on_preempt)
+        retired = self.allocator.retire_pages(pages)
+        self.metrics["kv_quarantined_pages"] += len(retired)
+        return owners

@@ -127,6 +127,22 @@ class KVScheduler:
         self._tap("release", rid)
 
     # ------------------------------------------------------------------
+    def snapshot_state(self) -> Dict:
+        """Queues/slots/counters as a JSON-serializable dict (the allocator
+        snapshots its own page state separately)."""
+        return dict(waiting=list(self.waiting), running=list(self.running),
+                    slots={str(r): s for r, s in self.slots.items()},
+                    free_slots=list(self._free_slots),
+                    preemptions=self.preemptions)
+
+    def restore_state(self, snap: Dict) -> None:
+        self.waiting = deque(int(r) for r in snap["waiting"])
+        self.running = [int(r) for r in snap["running"]]
+        self.slots = {int(r): int(s) for r, s in snap["slots"].items()}
+        self._free_slots = [int(s) for s in snap["free_slots"]]
+        self.preemptions = int(snap["preemptions"])
+
+    # ------------------------------------------------------------------
     def slot_of(self, rid: int) -> int:
         return self.slots[rid]
 

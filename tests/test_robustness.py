@@ -1,0 +1,484 @@
+"""Chaos-harness tests: every injected fault is either recovered exactly
+or fails loudly — never a silent divergence.
+
+Four layers:
+
+* **tlb-parity worlds** — the paper-grounded soft-error fault: all four
+  executors (pure-python oracle, step-at-a-time ref, time-blocked XLA,
+  Pallas) stay bit-exact on :class:`ParityWorld` cells, ``par_policy="ecc"``
+  is bit-identical to the fault-free run by construction, and
+  detect-invalidate-rewalk recovery shows the coalescing blast radius.
+* **sweep runtime** — injected backend failures recover via the
+  pallas→xla fallback and batch bisection down to the oracle; corrupt
+  cache entries are quarantined (surfaced in stats) and recomputed.
+* **serving engine** — snapshot/restore is token-exact mid-serve;
+  corrupted KV pages quarantine-and-recompute through the preemption
+  path; the stalled metric and oversized-request rejection close the
+  silent-loss holes.
+* **allocator** — buddy snapshot/restore round-trips and bad-page
+  retirement keeps the free pool consistent.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import demand_mapping, generate_trace
+from repro.core.baselines import (base_spec, cluster_spec, colt_spec,
+                                  kaligned_spec)
+from repro.core.mappings import BuddyAllocator
+from repro.core.page_table import (MappingEvent, ParityWorld,
+                                   build_dynamic_mapping)
+from repro.core.simulator import run_method_dynamic, run_method_parity
+from repro.core.sweep import SweepCell, cell_key, run_sweep
+from repro.robustness import (BackendFault, EngineCrash, FaultPlan,
+                              KVCorruption, PageLoss, RecoveryError,
+                              backend_fault_injection, corrupt_cache_entry,
+                              make_parity_world, retry_with_backoff,
+                              run_engine_with_recovery)
+
+COUNTERS = ("accesses", "l1_hits", "l2_regular_hits", "l2_coalesced_hits",
+            "walks", "aligned_probes", "pred_correct", "cycles",
+            "coverage_mean", "shootdowns")
+
+SPECS = [base_spec(), colt_spec(), cluster_spec(), kaligned_spec([6, 4, 2])]
+
+
+def _assert_equal(got, want, ctx):
+    for f in COUNTERS:
+        assert getattr(got, f) == getattr(want, f), (ctx, f)
+    np.testing.assert_array_equal(got.ppn, want.ppn, err_msg=str(ctx))
+
+
+# ---------------------------------------------------------------------------
+# ParityWorld: the tlb-parity fault model
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def parity_worlds():
+    """ParityWorld over a static base and over a dynamic (remapping) base,
+    fault vpns drawn from the trace so they are always live."""
+    m = demand_mapping(1 << 10, seed=11)
+    tr = generate_trace("multiscale", 0, 400, seed=4, mapping=m)
+    pw_static = make_parity_world(m, tr, seed=5, n_faults=3)
+
+    n = 1 << 10
+    ppn0 = np.arange(n, dtype=np.int64) + 7
+    ev1 = [MappingEvent("remap", 0, 128, ppn=100_000)]
+    ev2 = [MappingEvent("unmap", 768, 32)]
+    dyn = build_dynamic_mapping(ppn0, [(150, ev1), (300, ev2)], name="hot")
+    rng = np.random.default_rng(3)
+    dtr = rng.integers(0, 512, size=420).astype(np.int64)
+    pw_dyn = make_parity_world(dyn, dtr, seed=6, n_faults=2)
+    return (pw_static, tr), (pw_dyn, dtr)
+
+
+def test_parity_world_validation():
+    m = demand_mapping(1 << 9, seed=2)
+    with pytest.raises(AssertionError):
+        ParityWorld(base=m, faults=((5, 1), (5, 2)))      # duplicate step
+    with pytest.raises(AssertionError):
+        ParityWorld(base=m, faults=((0, 1),))             # step 0
+    with pytest.raises(AssertionError):                    # no nesting
+        ParityWorld(base=ParityWorld(base=m, faults=()), faults=())
+    n = 1 << 9
+    dyn = build_dynamic_mapping(
+        np.arange(n, dtype=np.int64),
+        [(100, [MappingEvent("remap", 0, 16, ppn=10_000)])])
+    with pytest.raises(AssertionError):                    # boundary clash
+        ParityWorld(base=dyn, faults=((100, 3),))
+
+
+def test_parity_executor_matrix(parity_worlds):
+    """Oracle == XLA (TB 1 and 8) == Pallas on every (spec, par_policy,
+    world) parity cell — the four-executor bit-exactness the acceptance
+    criteria demand, plus the ref leg below."""
+    cells, wants = [], []
+    for (pw, tr) in parity_worlds:
+        for s in SPECS:
+            for par in ("parity", "ecc"):
+                sp = dataclasses.replace(s, par_policy=par)
+                cells.append(SweepCell(sp, pw, tr))
+                wants.append(run_method_parity(sp, pw, tr))
+    for backend, tb in (("xla", 1), ("xla", 8), ("pallas", 4)):
+        res = run_sweep(cells, cache=False, backend=backend, block_size=tb)
+        for c, got, want in zip(cells, res, wants):
+            _assert_equal(got, want,
+                          (backend, tb, c.spec.name, c.spec.par_policy))
+
+
+def test_parity_ref_backend(parity_worlds):
+    from repro.core.lane_program import (C_COV, init_batched_state,
+                                         pack_lanes)
+    from repro.kernels.tlb_sweep.ref import run_lanes_ref
+    (pw, tr), _ = parity_worlds
+    cells = [SweepCell(s, pw, tr) for s in SPECS]
+    wants = [run_method_parity(s, pw, tr) for s in SPECS]
+    lanes, stacks, (L, sets, ways), seg_bounds = pack_lanes(cells)
+    st0 = init_batched_state(
+        L, sets, ways, lanes["pred0"], lanes["asid0"],
+        with_ctlb=bool(np.asarray(lanes["has_ctlb"]).any()),
+        with_dp=bool(np.asarray(lanes["use_dead"]).any()))
+    stF, ppns = run_lanes_ref(lanes, stacks, st0, seg_bounds)
+    counters = np.asarray(stF["counters"])
+    cov = np.asarray(stF["cov_samples"])
+    from repro.core.lane_program import (C_COAL, C_CYC, C_L1, C_PRED,
+                                         C_PROBE, C_REG, C_SHOOT, C_WALK)
+    fields = {C_L1: "l1_hits", C_REG: "l2_regular_hits",
+              C_COAL: "l2_coalesced_hits", C_WALK: "walks",
+              C_PROBE: "aligned_probes", C_PRED: "pred_correct",
+              C_CYC: "cycles", C_SHOOT: "shootdowns"}
+    assert C_COV not in fields
+    for i, (spec, want) in enumerate(zip(SPECS, wants)):
+        for c, f in fields.items():
+            assert counters[i, c] == getattr(want, f), (spec.name, f)
+        assert float(np.mean(cov[i])) == want.coverage_mean, spec.name
+        np.testing.assert_array_equal(
+            np.asarray(ppns)[i, : tr.shape[0]], want.ppn, err_msg=spec.name)
+
+
+def test_ecc_is_fault_free(parity_worlds):
+    """par_policy='ecc' corrects the flip in place: bit-identical to
+    running the base world without the fault schedule."""
+    for (pw, tr) in parity_worlds:
+        for s in SPECS:
+            ecc = run_method_parity(
+                dataclasses.replace(s, par_policy="ecc"), pw, tr)
+            free = run_method_dynamic(s, pw.base, tr)
+            _assert_equal(ecc, free, ("ecc-vs-fault-free", s.name))
+
+
+def test_parity_blast_radius(parity_worlds):
+    """Detect-invalidate-rewalk recovery costs real invalidations: the
+    parity run loses entries (and never fewer walks) vs ECC, and the
+    cells keep completing — recovery, not corruption."""
+    (pw, tr), _ = parity_worlds
+    for s in SPECS:
+        flip = run_method_parity(s, pw, tr)
+        ecc = run_method_parity(
+            dataclasses.replace(s, par_policy="ecc"), pw, tr)
+        assert flip.shootdowns > ecc.shootdowns, s.name
+        assert flip.walks >= ecc.walks, s.name
+        assert flip.accesses == ecc.accesses == tr.shape[0]
+
+
+def test_parity_fault_schedule_in_cache_key(parity_worlds):
+    (pw, tr), _ = parity_worlds
+    s = SPECS[0]
+    k1 = cell_key(SweepCell(s, pw, tr))
+    other = ParityWorld(base=pw.base, faults=pw.faults[:-1])
+    k2 = cell_key(SweepCell(s, other, tr))
+    k3 = cell_key(SweepCell(s, pw.base, tr))
+    assert len({k1, k2, k3}) == 3
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fuzz_parity_recovers_or_fails_loudly(seed):
+    """The chaos property on the simulator: any (fault plan, world) either
+    recovers exactly (ecc == fault-free; batched == oracle) or raises —
+    the executors never silently diverge."""
+    rng = np.random.default_rng(seed)
+    m = demand_mapping(1 << 9, seed=seed % 97)
+    tr = generate_trace("multiscale", 0, 256, seed=seed % 89, mapping=m)
+    pw = make_parity_world(m, tr, seed=seed, n_faults=int(rng.integers(1, 4)))
+    spec = SPECS[seed % len(SPECS)]
+    tb = int(rng.choice([1, 4, 8]))
+    want = run_method_parity(spec, pw, tr)
+    got = run_sweep([SweepCell(spec, pw, tr)], cache=False, backend="xla",
+                    block_size=tb)[0]
+    _assert_equal(got, want, ("fuzz", seed, spec.name, tb))
+    ecc = run_method_parity(
+        dataclasses.replace(spec, par_policy="ecc"), pw, tr)
+    _assert_equal(ecc, run_method_dynamic(spec, m, tr),
+                  ("fuzz-ecc", seed, spec.name))
+
+
+# ---------------------------------------------------------------------------
+# Sweep runtime: backend fallback, bisection, cache quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep_cells():
+    m = demand_mapping(1 << 9, seed=7)
+    tr = generate_trace("multiscale", 0, 300, seed=9, mapping=m)
+    cells = [SweepCell(s, m, tr) for s in SPECS]
+    clean = run_sweep(cells, cache=False, backend="xla")
+    return cells, clean
+
+
+def test_backend_fallback_pallas_to_xla(sweep_cells):
+    cells, clean = sweep_cells
+    with backend_fault_injection(n_failures=1, backends=("pallas",)) as st_:
+        res = run_sweep(cells, cache=False, backend="pallas")
+    assert st_["injected"] == 1
+    assert res.stats["backend_fallbacks"] == 1
+    assert res.stats["oracle_fallbacks"] == 0
+    for got, want in zip(res, clean):
+        _assert_equal(got, want, "pallas-fallback")
+
+
+def test_bisection_isolates_cursed_cell_to_oracle(sweep_cells):
+    cells, clean = sweep_cells
+    cursed = cells[2]
+    with backend_fault_injection(
+            n_failures=10_000, backends=("pallas", "xla"),
+            predicate=lambda sub, bk: any(c is cursed for c in sub)):
+        res = run_sweep(cells, cache=False, backend="xla")
+    assert res.stats["bisections"] >= 1
+    assert res.stats["oracle_fallbacks"] == 1
+    for got, want in zip(res, clean):
+        _assert_equal(got, want, "bisect-oracle")
+
+
+def test_injected_fault_is_loud_without_recovery_path(sweep_cells):
+    """The hook itself raises when recovery is exhausted-by-construction:
+    a single-cell batch failing every backend lands on the oracle, so the
+    ONLY loud path left is the oracle raising — simulate it by cursing the
+    oracle dispatch with an invalid spec instead."""
+    cells, _ = sweep_cells
+    with backend_fault_injection(n_failures=1, backends=("pallas",)) as st_:
+        with pytest.raises(BackendFault):
+            from repro.core.sweep import _run_batch
+            _run_batch(list(cells), "pallas", 8)
+    assert st_["injected"] == 1
+
+
+def test_cache_corruption_quarantined_and_recomputed(tmp_path, sweep_cells):
+    """Satellite: truncated, garbage, and wrong-schema .npz entries each
+    recompute correctly and increment the quarantine counter."""
+    cells, clean = sweep_cells
+    cdir = str(tmp_path / "sweep_cache")
+    first = run_sweep(cells, cache=True, cache_dir=cdir, backend="xla")
+    assert first.stats["simulated"] == len(cells)
+    assert first.stats["cache_quarantined"] == 0
+    entries = sorted(p for p in os.listdir(cdir) if p.endswith(".npz"))
+    assert len(entries) == len(cells)
+    for mode, entry in zip(("truncate", "garbage", "schema"), entries):
+        corrupt_cache_entry(os.path.join(cdir, entry), mode)
+    again = run_sweep(cells, cache=True, cache_dir=cdir, backend="xla")
+    assert again.stats["cache_quarantined"] == 3
+    assert again.stats["cache_hits"] == len(cells) - 3
+    assert again.stats["simulated"] == 3
+    # quarantined originals are kept inspectable, not deleted
+    assert sum(p.endswith(".quarantined") for p in os.listdir(cdir)) == 3
+    for got, want in zip(again, clean):
+        _assert_equal(got, want, "cache-quarantine")
+    third = run_sweep(cells, cache=True, cache_dir=cdir, backend="xla")
+    assert third.stats["cache_hits"] == len(cells)
+    assert third.stats["cache_quarantined"] == 0
+
+
+def test_retry_with_backoff():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return 42
+
+    slept = []
+    assert retry_with_backoff(flaky, retries=3, base_delay=0.5,
+                              retry_on=(OSError,),
+                              sleep=slept.append) == 42
+    assert len(calls) == 3 and slept == [0.5, 1.0]
+    with pytest.raises(ValueError):
+        retry_with_backoff(lambda: (_ for _ in ()).throw(ValueError()),
+                           retries=1, retry_on=(ValueError,))
+
+
+# ---------------------------------------------------------------------------
+# Allocator robustness primitives
+# ---------------------------------------------------------------------------
+
+def test_buddy_snapshot_restore_roundtrip():
+    b = BuddyAllocator(64, max_order=4)
+    a0 = b.alloc(2)
+    b.alloc(0)
+    snap = b.snapshot()
+    b2 = BuddyAllocator(64, max_order=4)
+    b2.restore(snap)
+    assert b2.snapshot() == snap
+    b.free_block(a0, 2)
+    assert b.snapshot() != snap
+
+
+def test_buddy_retire():
+    b = BuddyAllocator(32, max_order=5)
+    assert b.retire(7)                       # free frame: retired
+    free, _ = b.frag_stats()
+    assert free == 31
+    assert not b.retire(7)                   # already gone
+    # the remaining 31 frames are all still allocatable
+    got = sum(1 << 0 for _ in range(31) if b.alloc(0) is not None)
+    assert got == 31 and b.alloc(0) is None
+
+
+def test_kv_allocator_snapshot_owners_retire():
+    from repro.kvcache.allocator import PagedKVAllocator
+    al = PagedKVAllocator(64, alloc_policy="buddy_best")
+    al.allocate(1, 5)
+    al.allocate(2, 3)
+    snap = al.snapshot_state()
+    page = al.seqs[1].pages[0]
+    assert al.owners_of([page]) == [1]
+    assert al.retire_pages([page]) == []     # owned: not retirable
+    al.free(1)
+    assert al.retire_pages([page]) == [page]
+    al2 = PagedKVAllocator(64, alloc_policy="buddy_best")
+    al2.restore_state(snap)
+    assert al2.seqs[1].pages == snap["seqs"]["1"]["pages"]
+    assert al2.buddy.snapshot() == snap["free"]
+
+
+def test_fault_plan_deterministic():
+    a = FaultPlan.generate(3, kinds=("engine-crash", "kv-corruption",
+                                     "page-loss"), max_step=6)
+    b = FaultPlan.generate(3, kinds=("engine-crash", "kv-corruption",
+                                     "page-loss"), max_step=6)
+    assert a == b
+    assert set(a.kinds()) <= {"engine-crash", "kv-corruption", "page-loss"}
+    assert all(e.step >= 1 for e in a.events)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: crash-restart, quarantine, admission hardening
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    from repro.models import Model, RunConfig
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    rc = RunConfig(attn_q_chunk=32, attn_kv_chunk=32, scan_chunk=16)
+    model = Model(cfg, rc)
+    params = model.init(0)
+    return cfg, model, params
+
+
+def _engine(tiny_model, **kw):
+    from repro.serve import EngineConfig, ServingEngine
+    cfg, model, params = tiny_model
+    ec = EngineConfig(**{**dict(page_size=8, num_pages=256, max_batch=3,
+                                max_seq=64, interpret=True), **kw})
+    return ServingEngine(model, params, ec)
+
+
+def _requests(cfg, n=4, max_new=5):
+    rng = np.random.default_rng(2024)
+    return [(list(rng.integers(0, cfg.vocab, size=12)), max_new)
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def served_baseline(tiny_model, tmp_path_factory):
+    cfg, _, _ = tiny_model
+    reqs = _requests(cfg)
+    ck = str(tmp_path_factory.mktemp("ck_base"))
+    out, rep = run_engine_with_recovery(
+        lambda: _engine(tiny_model), reqs, None, ck, max_steps=64)
+    assert rep["steps"] >= 4 and rep["crashes"] == 0
+    return reqs, out
+
+
+def test_add_request_rejects_oversize(tiny_model):
+    """Satellite: a request that can never fit (prompt + max_new_tokens
+    beyond max_seq, or more pages than the pool) is rejected at the door
+    instead of live-locking admission."""
+    eng = _engine(tiny_model)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.add_request(list(range(60)), max_new_tokens=16)
+    eng = _engine(tiny_model, num_pages=4)
+    with pytest.raises(ValueError, match="pool"):
+        eng.add_request(list(range(30)), max_new_tokens=20)
+    assert not eng.waiting and not eng.requests
+
+
+def test_stalled_metric_surfaces_exhaustion(tiny_model):
+    """Satellite: run_to_completion with an exhausted step budget reports
+    the stranded requests instead of silently truncating."""
+    cfg, _, _ = tiny_model
+    eng = _engine(tiny_model)
+    for prompt, max_new in _requests(cfg, n=2):
+        eng.add_request(prompt, max_new_tokens=max_new)
+    m = eng.run_to_completion(max_steps=1)
+    assert m["stalled"] == 2
+    m = eng.run_to_completion()
+    assert m["stalled"] == 0
+    assert all(r.state == "done" for r in eng.requests.values())
+
+
+def test_snapshot_restore_token_exact(tiny_model, served_baseline, tmp_path):
+    """Crash-restart mid-serve: a FRESH engine restoring the checkpoint
+    finishes with output token-identical to the uninterrupted run."""
+    reqs, want = served_baseline
+    eng = _engine(tiny_model)
+    for prompt, max_new in reqs:
+        eng.add_request(prompt, max_new_tokens=max_new)
+    eng.step()
+    eng.step()
+    ck = str(tmp_path / "ck")
+    eng.snapshot(ck)
+    del eng                                   # the process dies here
+    eng2 = _engine(tiny_model)
+    eng2.restore(ck)
+    m = eng2.run_to_completion()
+    assert m["stalled"] == 0
+    got = {rid: list(r.generated) for rid, r in eng2.requests.items()}
+    assert got == want
+
+
+def test_kv_quarantine_recompute_token_exact(tiny_model, served_baseline,
+                                             tmp_path):
+    """Corrupted KV pages: garbage the pool, quarantine-and-recompute, and
+    the final output still matches the fault-free run (the recompute path
+    keeps every generated token)."""
+    reqs, want = served_baseline
+    plan = FaultPlan(1908, (KVCorruption(step=2, n_pages=2),))
+    out, rep = run_engine_with_recovery(
+        lambda: _engine(tiny_model), reqs, plan, str(tmp_path),
+        max_steps=64, snapshot_every=2)
+    assert rep["kv_corrupted"] >= 1 and rep["preempted"] >= 1
+    assert rep["metrics"]["kv_quarantined_pages"] >= 1
+    assert out == want
+
+
+def test_page_loss_transparent(tiny_model, served_baseline, tmp_path):
+    reqs, want = served_baseline
+    plan = FaultPlan(1908, (PageLoss(step=1, n_pages=3),))
+    out, rep = run_engine_with_recovery(
+        lambda: _engine(tiny_model), reqs, plan, str(tmp_path),
+        max_steps=64, snapshot_every=2)
+    assert rep["pages_lost"] >= 1
+    assert out == want
+
+
+@settings(max_examples=2, deadline=None)
+@given(crash_step=st.integers(1, 5), every=st.integers(1, 3))
+def test_fuzz_crash_restart_token_exact(tiny_model, served_baseline,
+                                        tmp_path_factory, crash_step, every):
+    """The crash-restart property: for ANY crash step and snapshot cadence
+    the restarted engine replays to token-identical output (decode is
+    deterministic, so checkpoint-resume is exact by construction)."""
+    reqs, want = served_baseline
+    plan = FaultPlan(7, (EngineCrash(step=crash_step),))
+    ck = str(tmp_path_factory.mktemp("ck_fuzz"))
+    out, rep = run_engine_with_recovery(
+        lambda: _engine(tiny_model), reqs, plan, ck,
+        max_steps=64, snapshot_every=every)
+    assert out == want
+    assert rep["crashes"] in (0, 1)           # may finish before the crash
+
+
+def test_stall_fails_loudly(tiny_model, tmp_path):
+    """A run that cannot finish raises RecoveryError instead of returning
+    partial output."""
+    cfg, _, _ = tiny_model
+    reqs = _requests(cfg, n=2)
+    with pytest.raises(RecoveryError, match="stalled"):
+        run_engine_with_recovery(lambda: _engine(tiny_model), reqs, None,
+                                 str(tmp_path), max_steps=1)
